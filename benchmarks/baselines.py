@@ -1,0 +1,165 @@
+"""MIPS baselines from the paper's Table 1, reimplemented in JAX.
+
+* FULL    — exact dense head (the paper's "ideally parallelized" floor).
+* SLIDE   — random-SimHash LSS (hash tables, no learning) [MLSys'20].
+* PQ      — product quantization with asymmetric distance computation
+            (k-means codebooks per subspace; ADC lookup) [Jegou TPAMI'11].
+* ip-NSW  — greedy beam search on an exact top-IP neighbor graph
+            (fixed-degree, fixed-iteration, batched — the static-shape
+            JAX rendering of NSW) [Morozov & Babenko, NeurIPS'18].
+
+Each returns (top-k ids, candidates-scored-per-query) so the benchmark
+can report accuracy AND the compute proxy.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import simhash
+from repro.core.lss import LSSConfig, build_index, lss_predict, retrieve, \
+    dedup_mask, avg_sample_size
+
+
+# ------------------------------------------------------------------ FULL --
+
+def full_topk(q: jax.Array, w: jax.Array, b: jax.Array, k: int):
+    logits = q @ w.T + b
+    return jax.lax.top_k(logits, k)[1], w.shape[0]
+
+
+# ----------------------------------------------------------------- SLIDE --
+
+def slide_build(key, w, b, cfg: LSSConfig):
+    w_aug = simhash.augment_neurons(w, b)
+    theta = simhash.init_hyperplanes(key, w_aug.shape[1], cfg.k_bits,
+                                     cfg.n_tables)
+    return build_index(w_aug, theta, cfg)
+
+
+def slide_topk(q, index, k: int):
+    _, ids = lss_predict(q, index, None, top_k=k)
+    cand, _ = retrieve(simhash.augment_queries(q), index)
+    return ids, float(avg_sample_size(cand))
+
+
+# -------------------------------------------------------------------- PQ --
+
+class PQIndex(NamedTuple):
+    codebooks: jax.Array   # [M, 256, d_sub]
+    codes: jax.Array       # [m, M] uint8 (as int32)
+    bias: jax.Array        # [m]
+
+
+def pq_build(key, w: jax.Array, b: jax.Array, n_subspaces: int = 8,
+             n_iters: int = 12, n_codes: int = 256) -> PQIndex:
+    m, d = w.shape
+    pad = (-d) % n_subspaces
+    wp = jnp.pad(w, ((0, 0), (0, pad)))
+    d_sub = wp.shape[1] // n_subspaces
+    sub = wp.reshape(m, n_subspaces, d_sub).swapaxes(0, 1)  # [M, m, ds]
+
+    def kmeans(key, x):
+        n = x.shape[0]
+        cent = x[jax.random.choice(key, n, (n_codes,), replace=n < n_codes)]
+
+        def step(cent, _):
+            d2 = ((x[:, None] - cent[None]) ** 2).sum(-1)
+            assign = jnp.argmin(d2, 1)
+            sums = jnp.zeros_like(cent).at[assign].add(x)
+            cnt = jnp.zeros((n_codes,)).at[assign].add(1.0)
+            new = jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt, 1)[:, None],
+                            cent)
+            return new, None
+
+        cent, _ = jax.lax.scan(step, cent, None, length=n_iters)
+        d2 = ((x[:, None] - cent[None]) ** 2).sum(-1)
+        return cent, jnp.argmin(d2, 1).astype(jnp.int32)
+
+    keys = jax.random.split(key, n_subspaces)
+    cents, codes = jax.vmap(kmeans)(keys, sub)
+    return PQIndex(cents, codes.swapaxes(0, 1), b)
+
+
+def pq_topk(q: jax.Array, index: PQIndex, k: int):
+    """ADC: per-subspace inner-product tables then code-gather-sum."""
+    bq, d = q.shape
+    m_sub, n_codes, d_sub = index.codebooks.shape
+    pad = m_sub * d_sub - d
+    qp = jnp.pad(q, ((0, 0), (0, pad))).reshape(bq, m_sub, d_sub)
+    # tables [B, M, 256]
+    tables = jnp.einsum("bmd,mcd->bmc", qp, index.codebooks)
+    scores = tables[:, jnp.arange(m_sub)[None, :], index.codes].sum(-1) \
+        + index.bias                                      # [B, m]
+    return jax.lax.top_k(scores, k)[1], index.codes.shape[0]
+
+
+# ---------------------------------------------------------------- ip-NSW --
+
+class NSWIndex(NamedTuple):
+    graph: jax.Array       # [m, R] neighbor ids by best inner product
+    w: jax.Array
+    b: jax.Array
+    entry: jax.Array       # [n_entries] random entry points
+
+
+def ipnsw_build(key, w: jax.Array, b: jax.Array, degree: int = 16,
+                n_entries: int = 8) -> NSWIndex:
+    m = w.shape[0]
+    ip = w @ w.T + b[None, :]
+    ip = ip.at[jnp.arange(m), jnp.arange(m)].set(-jnp.inf)
+    graph = jax.lax.top_k(ip, degree)[1].astype(jnp.int32)
+    entry = jax.random.choice(key, m, (n_entries,), replace=False)
+    return NSWIndex(graph, w, b, entry.astype(jnp.int32))
+
+
+def ipnsw_topk(q: jax.Array, index: NSWIndex, k: int, beam: int = 32,
+               n_steps: int = 12):
+    """Batched greedy beam search; every query visits
+    n_entries + n_steps*beam*degree candidates (static)."""
+    m, r = index.graph.shape
+
+    def one(qi):
+        def score(ids):
+            return index.w[ids] @ qi + index.b[ids]
+
+        cand = index.entry
+        cand_s = score(cand)
+        pad = beam - cand.shape[0]
+        beam_ids = jnp.pad(cand, (0, pad), constant_values=0)
+        beam_s = jnp.pad(cand_s, (0, pad), constant_values=-jnp.inf)
+
+        def step(carry, _):
+            ids, s = carry
+            nbrs = index.graph[ids].reshape(-1)            # [beam*R]
+            ns = score(nbrs)
+            all_ids = jnp.concatenate([ids, nbrs])
+            all_s = jnp.concatenate([s, ns])
+            # dedup-by-penalty then keep top beam
+            order = jnp.argsort(-all_s)
+            all_ids, all_s = all_ids[order], all_s[order]
+            dup = jnp.concatenate([jnp.zeros((1,), bool),
+                                   all_ids[1:] == all_ids[:-1]])
+            # near-dup ids with equal score collapse after sort by id-break
+            all_s = jnp.where(dup, -jnp.inf, all_s)
+            top_s, pos = jax.lax.top_k(all_s, beam)
+            return (all_ids[pos], top_s), (all_ids[pos], top_s)
+
+        (ids, s), (hist_ids, hist_s) = jax.lax.scan(
+            step, (beam_ids, beam_s), None, length=n_steps)
+        flat_ids = hist_ids.reshape(-1)
+        flat_s = hist_s.reshape(-1)
+        order = jnp.argsort(-flat_s)
+        flat_ids, flat_s = flat_ids[order], flat_s[order]
+        dup = jnp.concatenate([jnp.zeros((1,), bool),
+                               flat_ids[1:] == flat_ids[:-1]])
+        flat_s = jnp.where(dup, -jnp.inf, flat_s)
+        _, pos = jax.lax.top_k(flat_s, k)
+        return flat_ids[pos]
+
+    ids = jax.vmap(one)(q)
+    visited = index.entry.shape[0] + n_steps * beam * r
+    return ids, visited

@@ -1,0 +1,231 @@
+"""Paper reproduction benchmarks (Tables 1-3, Figure 2).
+
+Pipeline per dataset (exactly the paper's): train the model on synthetic
+topic-structured data at bench scale (paper dims are dry-run-only; no
+internet in this container) -> freeze -> fit LSS on TRAIN embeddings ->
+evaluate every method on TEST.
+
+Metrics: P@1, P@5, label recall, sample size, wall-clock per 1000
+queries (CPU, jit-warmed), and an energy PROXY (MFLOP/query — no power
+rail in this container; the paper's Joules track FLOPs here).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import baselines as B
+from repro.configs.paper_datasets import ALL as SETTINGS
+from repro.core import simhash
+from repro.core.iul import fit_lss
+from repro.core.lss import (avg_sample_size, label_recall, lss_predict,
+                            precision_at_k, retrieve)
+from repro.data.synthetic import lm_dataset, xc_dataset
+from repro.data.pipeline import ShardedBatchIterator
+from repro.models import lstm as lstm_mod
+from repro.models import xc as xc_mod
+from repro.train.trainer import TrainConfig, Trainer
+
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+
+class Row(NamedTuple):
+    dataset: str
+    method: str
+    p1: float
+    p5: float
+    recall: float
+    sample: float
+    us_per_query: float
+    mflop_per_query: float
+
+
+def _timeit(fn, *args, n_queries: int, reps: int = 3) -> float:
+    fn(*args)  # warm (jit)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps / n_queries * 1e6
+
+
+def _train_xc(setting, n_train=4096, steps=600):
+    cfg = setting.bench
+    data = xc_dataset(7, n_train, cfg.input_dim, cfg.output_dim,
+                      n_topics=48, max_in=cfg.max_in,
+                      max_labels=cfg.max_labels)
+    tc = TrainConfig(lr=5e-3, warmup_steps=30, total_steps=steps,
+                     weight_decay=0.0, ckpt_every=10 ** 9)
+    tr = Trainer(lambda p, b: xc_mod.loss(p, b, cfg),
+                 lambda k: xc_mod.init_params(k, cfg), tc)
+    it = ShardedBatchIterator({"x": data.x, "labels": data.labels}, 256,
+                              seed=0)
+    state, _ = tr.fit(jax.random.PRNGKey(0), it, steps, log_every=10 ** 9)
+    params = state.params
+    n_test = min(1024, n_train // 4)
+    q_all = xc_mod.embed(params, jnp.asarray(data.x))
+    q_train, q_test = q_all[n_test:], q_all[:n_test]
+    lab = jnp.asarray(data.labels)
+    return params, cfg, q_train, lab[n_test:], q_test, lab[:n_test]
+
+
+def _train_lstm(setting, steps=200):
+    cfg = setting.bench
+    toks = lm_dataset(3, 120_000 if not FAST else 30_000, cfg.vocab, 36)
+    tokens, labels = toks[:, :-1], toks[:, 1:]
+    tc = TrainConfig(lr=5e-3, warmup_steps=30, total_steps=steps,
+                     weight_decay=0.0, ckpt_every=10 ** 9)
+    tr = Trainer(lambda p, b: lstm_mod.loss(p, b, cfg),
+                 lambda k: lstm_mod.init_params(k, cfg), tc)
+    it = ShardedBatchIterator({"tokens": tokens, "labels": labels}, 64,
+                              seed=0)
+    state, _ = tr.fit(jax.random.PRNGKey(0), it, steps, log_every=10 ** 9)
+    params = state.params
+    h = lstm_mod.embed_seq(params, jnp.asarray(tokens[:96]), cfg)
+    q = h.reshape(-1, cfg.hidden)
+    lab = jnp.asarray(labels[:96]).reshape(-1, 1)
+    n_test = 1024
+    return params, cfg, q[n_test:4096], lab[n_test:4096], \
+        q[:n_test], lab[:n_test]
+
+
+def _eval_common(name, ids_fn, q_test, lab_test, d, k=5):
+    ids, scored = ids_fn()
+    us = _timeit(lambda: ids_fn()[0], n_queries=q_test.shape[0])
+    p1 = float(precision_at_k(ids, lab_test, 1))
+    p5 = float(precision_at_k(ids, lab_test, 5))
+    hit = (ids[:, :, None] == lab_test[:, None, :]) \
+        & (lab_test >= 0)[:, None, :]
+    rec = float(jnp.sum(hit.any(1)) / jnp.maximum((lab_test >= 0).sum(), 1))
+    mflop = 2 * scored * d / 1e6
+    return p1, p5, rec, scored, us, mflop
+
+
+def run_setting(name: str, steps=None) -> list[Row]:
+    setting = SETTINGS[name]
+    fast_steps = 150 if FAST else 600
+    if setting.kind == "lstm":
+        params, cfg, q_tr, lab_tr, q_te, lab_te = _train_lstm(
+            setting, steps or (60 if FAST else 200))
+        w = params["w_out"].astype(jnp.float32)
+        b = params["b_out"].astype(jnp.float32)
+        d = cfg.hidden
+        m = cfg.vocab
+    else:
+        params, cfg, q_tr, lab_tr, q_te, lab_te = _train_xc(
+            setting, n_train=2048 if FAST else 4096,
+            steps=steps or fast_steps)
+        w = params["w_out"].astype(jnp.float32)
+        b = params["b_out"].astype(jnp.float32)
+        d = cfg.hidden
+        m = cfg.output_dim
+
+    rows = []
+    nq = q_te.shape[0]
+
+    # FULL
+    f = jax.jit(lambda q: B.full_topk(q, w, b, 5)[0])
+    ids = f(q_te)
+    us = _timeit(f, q_te, n_queries=nq)
+    rows.append(Row(name, "Full", float(precision_at_k(ids, lab_te, 1)),
+                    float(precision_at_k(ids, lab_te, 5)), 1.0, m, us,
+                    2 * m * d / 1e6))
+
+    # LSS (paper)
+    lss_cfg = setting.bench_lss
+    index, hist = fit_lss(jax.random.PRNGKey(1), q_tr, lab_tr, w, b,
+                          lss_cfg)
+    lss_fn = jax.jit(lambda q: lss_predict(q, index, None, top_k=5)[1])
+    cand, _ = retrieve(simhash.augment_queries(q_te), index)
+    sample = float(avg_sample_size(cand))
+    ids = lss_fn(q_te)
+    us = _timeit(lss_fn, q_te, n_queries=nq)
+    rows.append(Row(name, "LSS", float(precision_at_k(ids, lab_te, 1)),
+                    float(precision_at_k(ids, lab_te, 5)),
+                    float(label_recall(cand, lab_te)), sample, us,
+                    2 * (d * lss_cfg.k_bits * lss_cfg.n_tables
+                         + sample * d) / 1e6))
+    run_setting.last_hist = hist     # fig2 consumer
+
+    # SLIDE (random simhash)
+    sl_index = B.slide_build(jax.random.PRNGKey(2), w, b, lss_cfg)
+    sl_fn = jax.jit(lambda q: lss_predict(q, sl_index, None, top_k=5)[1])
+    cand0, _ = retrieve(simhash.augment_queries(q_te), sl_index)
+    sample0 = float(avg_sample_size(cand0))
+    ids = sl_fn(q_te)
+    us = _timeit(sl_fn, q_te, n_queries=nq)
+    rows.append(Row(name, "SLIDE", float(precision_at_k(ids, lab_te, 1)),
+                    float(precision_at_k(ids, lab_te, 5)),
+                    float(label_recall(cand0, lab_te)), sample0, us,
+                    2 * (d * lss_cfg.k_bits * lss_cfg.n_tables
+                         + sample0 * d) / 1e6))
+
+    # PQ
+    pq = B.pq_build(jax.random.PRNGKey(3), w, b,
+                    n_subspaces=8, n_iters=6 if FAST else 12)
+    pq_fn = jax.jit(lambda q: B.pq_topk(q, pq, 5)[0])
+    ids = pq_fn(q_te)
+    us = _timeit(pq_fn, q_te, n_queries=nq)
+    hit = (ids[:, :, None] == lab_te[:, None, :]) & (lab_te >= 0)[:, None, :]
+    rec = float(jnp.sum(hit.any(1)) / jnp.maximum((lab_te >= 0).sum(), 1))
+    rows.append(Row(name, "PQ", float(precision_at_k(ids, lab_te, 1)),
+                    float(precision_at_k(ids, lab_te, 5)), rec, m, us,
+                    (2 * d * 256 + m * 8) / 1e6))
+
+    # ip-NSW
+    nsw = B.ipnsw_build(jax.random.PRNGKey(4), w, b)
+    nsw_fn = jax.jit(lambda q: B.ipnsw_topk(q, nsw, 5)[0])
+    ids = nsw_fn(q_te)
+    visited = B.ipnsw_topk(q_te[:1], nsw, 5)[1]
+    us = _timeit(nsw_fn, q_te, n_queries=nq)
+    hit = (ids[:, :, None] == lab_te[:, None, :]) & (lab_te >= 0)[:, None, :]
+    rec = float(jnp.sum(hit.any(1)) / jnp.maximum((lab_te >= 0).sum(), 1))
+    rows.append(Row(name, "ip-NSW", float(precision_at_k(ids, lab_te, 1)),
+                    float(precision_at_k(ids, lab_te, 5)), rec,
+                    float(visited), us, 2 * visited * d / 1e6))
+    return rows
+
+
+def table2_kl_sweep(name="delicious-200k") -> list[dict]:
+    """Paper Table 2: K x L on the Delicious stand-in."""
+    setting = SETTINGS[name]
+    params, cfg, q_tr, lab_tr, q_te, lab_te = _train_xc(
+        setting, n_train=2048 if FAST else 4096,
+        steps=150 if FAST else 500)
+    w = params["w_out"].astype(jnp.float32)
+    b = params["b_out"].astype(jnp.float32)
+    out = []
+    ks = (4, 6) if FAST else (4, 6, 8)
+    ls = (1, 10) if FAST else (1, 10, 50)
+    for k_bits in ks:
+        for n_tables in ls:
+            lss_cfg = setting.bench_lss._replace(
+                k_bits=k_bits, n_tables=n_tables,
+                iul_epochs=4 if FAST else 8)
+            index, _ = fit_lss(jax.random.PRNGKey(1), q_tr, lab_tr, w, b,
+                               lss_cfg)
+            _, ids = lss_predict(q_te, index, None, top_k=5)
+            cand, _ = retrieve(simhash.augment_queries(q_te), index)
+            out.append({
+                "K": k_bits, "L": n_tables,
+                "P@1": round(float(precision_at_k(ids, lab_te, 1)), 4),
+                "P@5": round(float(precision_at_k(ids, lab_te, 5)), 4),
+                "sample": round(float(avg_sample_size(cand)), 1),
+            })
+    return out
+
+
+def fig2_collision_curves(name="delicious-200k") -> dict:
+    setting = SETTINGS[name]
+    params, cfg, q_tr, lab_tr, q_te, lab_te = _train_xc(
+        setting, n_train=2048, steps=120 if FAST else 400)
+    w = params["w_out"].astype(jnp.float32)
+    _, hist = fit_lss(jax.random.PRNGKey(1), q_tr, lab_tr, w,
+                      params["b_out"].astype(jnp.float32),
+                      setting.bench_lss)
+    return hist

@@ -1,0 +1,107 @@
+"""Benchmark entry point: one section per paper table/figure + the
+kernel microbench + the roofline table from the dry-run artifacts.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per method x dataset).
+Env: BENCH_FAST=1 for a quick pass; BENCH_SKIP_TABLES=1 to only run
+kernels + roofline summary.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def bench_kernels() -> list[str]:
+    """Pallas-kernel wrappers vs refs (CPU: interpret-mode correctness
+    pass + ref-path timing; TPU timing is the deploy target)."""
+    from repro.kernels import bucket_logits, simhash_codes
+    rows = []
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (256, 128))
+    theta = jax.random.normal(jax.random.PRNGKey(1), (128, 12))
+    f = jax.jit(lambda q: simhash_codes(q, theta, 12, 1, impl="ref"))
+    f(q)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        jax.block_until_ready(f(q))
+    us = (time.perf_counter() - t0) / 20 / 256 * 1e6
+    rows.append(f"kernel_simhash_codes_ref,{us:.3f},B256_d128_K12")
+
+    w = jax.random.normal(jax.random.PRNGKey(2), (1024, 128, 128))
+    ids = jax.random.randint(jax.random.PRNGKey(3), (256, 1), 0, 1024)
+    g = jax.jit(lambda q, ids: bucket_logits(q, w, ids, impl="ref"))
+    g(q, ids)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        jax.block_until_ready(g(q, ids))
+    us = (time.perf_counter() - t0) / 20 / 256 * 1e6
+    rows.append(f"kernel_bucket_logits_ref,{us:.3f},S1024_P128_d128")
+    return rows
+
+
+def roofline_summary() -> list[str]:
+    rows = []
+    for tag, pat in (("dryrun", "experiments/dryrun/*.json"),
+                     ("dryrun_opt", "experiments/dryrun_opt/*.json")):
+        for path in sorted(glob.glob(pat)):
+            rec = json.load(open(path))
+            r = rec["roofline"]
+            rows.append(
+                f"{tag}_{rec['arch']}_{rec['shape']}_{rec['mesh']},"
+                f"{max(r['t_compute'], r['t_memory'], r['t_collective']) * 1e6:.1f},"
+                f"bound={r['bottleneck']};useful={r['useful_ratio']:.2f};"
+                f"mem_gb={rec['memory']['total_per_device_gb']}")
+    return rows
+
+
+def main() -> None:
+    rows = []
+    rows += bench_kernels()
+    if not os.environ.get("BENCH_SKIP_TABLES"):
+        from benchmarks.paper_tables import (fig2_collision_curves,
+                                             run_setting, table2_kl_sweep)
+        # Table 1 (4 datasets x 5 methods)
+        for name in ("wiki10-31k", "delicious-200k", "text8",
+                     "wiki-text-2"):
+            try:
+                for r in run_setting(name):
+                    rows.append(
+                        f"table1_{r.dataset}_{r.method},"
+                        f"{r.us_per_query:.1f},"
+                        f"P@1={r.p1:.4f};P@5={r.p5:.4f};"
+                        f"recall={r.recall:.3f};sample={r.sample:.0f};"
+                        f"mflop={r.mflop_per_query:.2f}")
+            except Exception as e:   # keep the harness running
+                rows.append(f"table1_{name}_FAILED,0,{e!r}")
+        # Table 2 (K x L sweep)
+        try:
+            for r in table2_kl_sweep():
+                rows.append(f"table2_K{r['K']}_L{r['L']},0,"
+                            f"P@1={r['P@1']};P@5={r['P@5']};"
+                            f"sample={r['sample']}")
+        except Exception as e:
+            rows.append(f"table2_FAILED,0,{e!r}")
+        # Figure 2 (collision curves)
+        try:
+            hist = fig2_collision_curves()
+            rows.append(
+                "fig2_collision,0,"
+                f"pos={[round(x, 3) for x in hist['p_collide_pos']]};"
+                f"neg={[round(x, 3) for x in hist['p_collide_neg']]};"
+                f"recall={[round(x, 3) for x in hist['recall']]}")
+        except Exception as e:
+            rows.append(f"fig2_FAILED,0,{e!r}")
+    rows += roofline_summary()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro — production-grade JAX framework reproducing and extending
+
+    "Climbing the WOL: Training for Cheaper Inference" (Liu et al., 2020).
+
+Core contribution: Label Sensitive Sampling (LSS) — learned SimHash retrieval
+over wide output layers (WOLs), adapted TPU-natively (bucket-major weight
+layout, static shapes, vocab-sharded serving).
+"""
+
+__version__ = "1.0.0"

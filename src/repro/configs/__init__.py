@@ -1,0 +1,1 @@
+"""configs subpackage: one module per assigned arch + registry."""

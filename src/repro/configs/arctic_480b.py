@@ -1,0 +1,31 @@
+"""arctic-480b [moe] 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128e top-2 — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+Dense-residual MoE: every layer runs a dense SwiGLU (d_ff=4864) IN
+PARALLEL with the 128-expert top-2 MoE (moe_style="parallel").  Expert
+tensors are 2D-sharded (experts over 'model', d_ff over 'data' — FSDP)
+— 480B params cannot live on one axis of a 256-chip pod.  Optimizer
+state is kept in bf16 for this arch (8-bit-Adam-style memory trade,
+documented in EXPERIMENTS.md §Dry-run).
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.core.lss import LSSConfig
+from repro.models.transformer import TransformerConfig
+
+CONFIG = ArchSpec(
+    arch_id="arctic-480b",
+    family="lm",
+    model_cfg=TransformerConfig(
+        name="arctic-480b", n_layers=35, d_model=7168, n_heads=56,
+        n_kv_heads=8, head_dim=128, d_ff=4864, vocab=32000,
+        qkv_bias=False, rope_base=1e6, dtype=jnp.bfloat16,
+        moe_style="parallel", n_experts=128, n_experts_padded=128,
+        moe_top_k=2, moe_d_ff=4864, moe_fsdp=True),
+    shapes=lm_shapes(),
+    lss=LSSConfig(k_bits=8, n_tables=1),
+    notes="Optimizer state bf16 (memory); vocab 32000 -> K=8 LSS head.",
+)

@@ -1,0 +1,40 @@
+"""ArchSpec: one selectable architecture = model config + its shape set
++ LSS applicability (DESIGN.md §Arch-applicability)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+from repro.core.lss import LSSConfig
+
+
+class ShapeSpec(NamedTuple):
+    name: str
+    kind: str          # train | prefill | decode | serve | retrieval | ...
+    dims: dict         # family-specific sizes
+
+
+class ArchSpec(NamedTuple):
+    arch_id: str
+    family: str        # lm | gnn | recsys_ctr | recsys_seq
+    model_cfg: Any
+    shapes: dict[str, ShapeSpec]
+    lss: LSSConfig | None = None   # None => paper's technique inapplicable
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeSpec:
+        return self.shapes[name]
+
+
+# The four LM shapes shared by every LM arch (assignment block).
+def lm_shapes() -> dict[str, ShapeSpec]:
+    return {
+        "train_4k": ShapeSpec("train_4k", "train",
+                              {"seq_len": 4096, "global_batch": 256}),
+        "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                                 {"seq_len": 32768, "global_batch": 32}),
+        "decode_32k": ShapeSpec("decode_32k", "decode",
+                                {"seq_len": 32768, "global_batch": 128}),
+        "long_500k": ShapeSpec("long_500k", "decode",
+                               {"seq_len": 524288, "global_batch": 1}),
+    }

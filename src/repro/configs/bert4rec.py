@@ -1,0 +1,27 @@
+"""bert4rec [recsys] embed_dim=64 n_blocks=2 n_heads=2 seq_len=200
+interaction=bidir-seq [arXiv:1904.06690; paper].
+
+Item catalogue 1,000,000 (so retrieval_cand's n_candidates is the full
+catalogue): the next-item softmax IS the paper's wide output layer —
+this is the flagship recsys LSS integration."""
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.core.lss import LSSConfig
+from repro.models.recsys import Bert4RecConfig
+
+CONFIG = ArchSpec(
+    arch_id="bert4rec",
+    family="recsys_seq",
+    model_cfg=Bert4RecConfig(name="bert4rec", n_items=1_000_000,
+                             embed_dim=64, n_blocks=2, n_heads=2,
+                             seq_len=200),
+    shapes={
+        "train_batch": ShapeSpec("train_batch", "train", {"batch": 65536}),
+        "serve_p99": ShapeSpec("serve_p99", "serve", {"batch": 512}),
+        "serve_bulk": ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+        "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval",
+                                    {"batch": 1, "n_candidates": 1000000}),
+    },
+    lss=LSSConfig(k_bits=12, n_tables=1),
+    notes="LSS serves the 1M-item catalogue WOL.",
+)

@@ -1,0 +1,30 @@
+"""deepfm [recsys] n_sparse=39 embed_dim=10 mlp=400-400-400
+interaction=fm [arXiv:1703.04247; paper].
+
+Unified embedding table: 39 fields x 1M rows = 39M rows x dim 10,
+row-sharded over 'model'.  LSS inapplicable to the 1-logit CTR output;
+retrieval_cand is per-candidate feature interaction, not a WOL matmul
+(DESIGN.md §Arch-applicability).
+"""
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.models.recsys import CTRConfig
+
+_SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "train", {"batch": 65536}),
+    "serve_p99": ShapeSpec("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval",
+                                {"batch": 1, "n_candidates": 1000000}),
+}
+
+CONFIG = ArchSpec(
+    arch_id="deepfm",
+    family="recsys_ctr",
+    model_cfg=CTRConfig(name="deepfm", kind="deepfm", n_fields=39,
+                        vocab_per_field=1_000_000, embed_dim=10,
+                        mlp_dims=(400, 400, 400)),
+    shapes=dict(_SHAPES),
+    lss=None,
+    notes="LSS inapplicable (binary CTR output).",
+)

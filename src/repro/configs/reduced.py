@@ -1,0 +1,40 @@
+"""Reduced same-family configs for CPU smoke tests and examples.
+
+Same code paths and flags as the full assigned configs (MoE style, GQA
+ratios, qk-norm, bias, AUGRU, ...), tiny dims.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.models.gnn import GCNConfig
+from repro.models.recsys import Bert4RecConfig, CTRConfig
+from repro.models.transformer import TransformerConfig
+
+
+def reduced_model_cfg(arch_id: str):
+    full = get_config(arch_id).model_cfg
+    if isinstance(full, TransformerConfig):
+        kw = dict(
+            name=full.name + "-reduced", n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=max(1, 4 * full.n_kv_heads // full.n_heads),
+            head_dim=16, d_ff=128, vocab=512, qkv_bias=full.qkv_bias,
+            qk_norm=full.qk_norm, rope_base=full.rope_base,
+            tie_embeddings=full.tie_embeddings, moe_style=full.moe_style,
+            dtype=jnp.float32, kv_chunk=32, q_chunk=64)
+        if full.moe_style != "none":
+            kw.update(n_experts=4, n_experts_padded=4, moe_top_k=2,
+                      moe_d_ff=64, capacity_factor=4.0,
+                      shared_expert_ff=96 if full.shared_expert_ff else 0)
+        return TransformerConfig(**kw)
+    if isinstance(full, GCNConfig):
+        return full._replace(d_feat=16, d_hidden=8, n_classes=4)
+    if isinstance(full, CTRConfig):
+        return full._replace(vocab_per_field=1000, n_fields=min(full.n_fields, 8),
+                             embed_dim=8, mlp_dims=(32, 16), seq_len=12,
+                             gru_dim=16, n_attn_layers=2, d_attn=8)
+    if isinstance(full, Bert4RecConfig):
+        return full._replace(n_items=2000, embed_dim=32, seq_len=16)
+    raise TypeError(type(full))

@@ -1,0 +1,33 @@
+"""--arch <id> registry over the ten assigned architectures."""
+
+import importlib
+
+ARCH_MODULES = {
+    "arctic-480b": "repro.configs.arctic_480b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "gcn-cora": "repro.configs.gcn_cora",
+    "bert4rec": "repro.configs.bert4rec",
+    "dien": "repro.configs.dien",
+    "deepfm": "repro.configs.deepfm",
+    "autoint": "repro.configs.autoint",
+}
+
+ALL_ARCHS = list(ARCH_MODULES)
+
+
+def get_config(arch_id: str):
+    if arch_id not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ALL_ARCHS}")
+    return importlib.import_module(ARCH_MODULES[arch_id]).CONFIG
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """All 40 assigned (arch, shape) dry-run cells."""
+    cells = []
+    for a in ALL_ARCHS:
+        for s in get_config(a).shapes:
+            cells.append((a, s))
+    return cells

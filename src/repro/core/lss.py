@@ -1,0 +1,186 @@
+"""LSS retrieval + sparse-WOL inference (paper Algorithm 2, TPU-native).
+
+Pipeline per query embedding q (from the layer below the WOL):
+
+    q --augment--> [q,0] --theta--> L bucket ids --tables--> candidate ids
+      --bucket-major slab / gather--> sparse logits --dedup+mask--> top-k
+
+Everything is static-shape: the candidate set is ``[B, L*P]`` with -1
+padding; duplicates across tables are masked (not compacted) before
+ranking, which preserves exact top-k semantics.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import simhash
+from repro.core.tables import LSSTables, build_tables, bucketize_weights
+
+__all__ = [
+    "LSSConfig", "LSSIndex", "build_index", "retrieve", "dedup_mask",
+    "sparse_logits_gather", "sparse_logits_bucketed", "lss_predict",
+    "label_recall", "precision_at_k", "avg_sample_size",
+]
+
+NEG_INF = -1e30
+
+
+class LSSConfig(NamedTuple):
+    k_bits: int = 4
+    n_tables: int = 1
+    capacity: int = 0          # 0 -> auto: 2 * m / 2^K rounded up to 8
+    use_bucket_major: bool = True   # materialise [L, 2^K, P, d] weight slabs
+    # IUL pair-mining thresholds (inner-product quantiles; see iul.py)
+    t1_quantile: float = 0.3
+    t2_quantile: float = 0.7
+    iul_lr: float = 1e-3
+    iul_epochs: int = 8
+    iul_batch: int = 256
+    iul_inner_steps: int = 8   # gradient steps per mined pair batch
+
+    def resolve_capacity(self, m: int) -> int:
+        if self.capacity:
+            return self.capacity
+        p = -(-2 * m // 2 ** self.k_bits)        # 2x the perfectly-even load
+        return max(8, -(-p // 8) * 8)            # round up to a lane multiple
+
+
+class LSSIndex(NamedTuple):
+    """The frozen serving-time index (a pytree; shardable under pjit)."""
+
+    theta: jax.Array             # [d_aug, K*L] learned hyperplanes
+    tables: LSSTables            # bucket-major neuron ids
+    w_bucketed: jax.Array | None  # [L, 2^K, P, d_aug] or None (gather path)
+
+
+jax.tree_util.register_pytree_node(
+    LSSIndex,
+    lambda i: ((i.theta, i.tables, i.w_bucketed), None),
+    lambda _, leaves: LSSIndex(*leaves),
+)
+
+
+def build_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig) -> LSSIndex:
+    """(Re)build tables (and slabs) for the current hyperplanes."""
+    cap = cfg.resolve_capacity(w_aug.shape[0])
+    tables = build_tables(w_aug, theta, cfg.k_bits, cfg.n_tables, cap)
+    wb = bucketize_weights(w_aug, tables) if cfg.use_bucket_major else None
+    return LSSIndex(theta, tables, wb)
+
+
+def retrieve(q_aug: jax.Array, index: LSSIndex) -> tuple[jax.Array, jax.Array]:
+    """Query the L tables.
+
+    Returns:
+      cand_ids: int32 ``[B, L*P]`` neuron ids (-1 = empty slot)
+      buckets:  int32 ``[B, L]`` the bucket hit in each table
+    """
+    t = index.tables
+    buckets = simhash.bucket_ids(q_aug, index.theta, t.k_bits, t.n_tables)
+    # table_ids[l, buckets[b, l]] for every (b, l)
+    cand = jnp.take_along_axis(
+        t.table_ids[None],                       # [1, L, 2^K, P]
+        buckets.T[None, :, :, None],             # [1, L, B, 1]
+        axis=2,
+    )[0]                                         # [L, B, P]
+    cand_ids = jnp.swapaxes(cand, 0, 1).reshape(q_aug.shape[0], -1)
+    return cand_ids, buckets
+
+
+def dedup_mask(ids: jax.Array) -> jax.Array:
+    """Bool mask ``[B, C]``: True for the first occurrence of each non-neg id.
+
+    Sort-based: duplicates and -1 padding get False.  Static shape.
+    """
+    order = jnp.argsort(ids, axis=-1, stable=True)
+    sorted_ids = jnp.take_along_axis(ids, order, axis=-1)
+    first = jnp.concatenate(
+        [jnp.ones_like(sorted_ids[:, :1], bool),
+         sorted_ids[:, 1:] != sorted_ids[:, :-1]], axis=-1)
+    first &= sorted_ids >= 0
+    # scatter back to original positions
+    b = jnp.arange(ids.shape[0])[:, None]
+    mask = jnp.zeros(ids.shape, bool).at[b, order].set(first)
+    return mask
+
+
+def sparse_logits_gather(q_aug: jax.Array, w_aug: jax.Array,
+                         cand_ids: jax.Array) -> jax.Array:
+    """Reference path: random-gather W rows then batched dot.
+
+    ``[B, d] x [m, d] x [B, C] -> [B, C]``; -1 slots get NEG_INF.
+    """
+    rows = w_aug[jnp.maximum(cand_ids, 0)]              # [B, C, d_aug]
+    logits = jnp.einsum("bd,bcd->bc", q_aug.astype(jnp.float32),
+                        rows.astype(jnp.float32))
+    return jnp.where(cand_ids >= 0, logits, NEG_INF)
+
+
+def sparse_logits_bucketed(q_aug: jax.Array, index: LSSIndex,
+                           buckets: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Bucket-major path: one contiguous ``[P, d]`` slab per (query, table).
+
+    This is the layout the Pallas kernel (kernels/bucket_logits) consumes;
+    here it is expressed as take_along_axis so the dry-run lowers on any
+    backend while XLA still sees contiguous dynamic slices.
+    """
+    t = index.tables
+    wb = index.w_bucketed                                 # [L, 2^K, P, d]
+    slabs = jnp.take_along_axis(
+        wb[None], buckets.T[None, :, :, None, None], axis=2)[0]   # [L,B,P,d]
+    slabs = jnp.swapaxes(slabs, 0, 1)                     # [B, L, P, d]
+    logits = jnp.einsum("bd,blpd->blp", q_aug.astype(jnp.float32),
+                        slabs.astype(jnp.float32))
+    ids = jnp.take_along_axis(
+        t.table_ids[None], buckets.T[None, :, :, None], axis=2)[0]
+    ids = jnp.swapaxes(ids, 0, 1).reshape(q_aug.shape[0], -1)
+    logits = logits.reshape(q_aug.shape[0], -1)
+    return jnp.where(ids >= 0, logits, NEG_INF), ids
+
+
+def lss_predict(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
+                top_k: int = 5) -> tuple[jax.Array, jax.Array]:
+    """Full Algorithm 2: returns (top-k logits, top-k neuron ids) ``[B, k]``.
+
+    ``w_aug`` is only needed for the gather path (``w_bucketed is None``).
+    """
+    q_aug = simhash.augment_queries(q)
+    if index.w_bucketed is not None:
+        cand_ids, buckets = retrieve(q_aug, index)
+        logits, cand_ids = sparse_logits_bucketed(q_aug, index, buckets)
+    else:
+        cand_ids, _ = retrieve(q_aug, index)
+        logits = sparse_logits_gather(q_aug, w_aug, cand_ids)
+    logits = jnp.where(dedup_mask(cand_ids), logits, NEG_INF)
+    top_logits, pos = jax.lax.top_k(logits, top_k)
+    top_ids = jnp.take_along_axis(cand_ids, pos, axis=-1)
+    top_ids = jnp.where(top_logits > NEG_INF / 2, top_ids, -1)
+    return top_logits, top_ids
+
+
+# ---------------------------------------------------------------- metrics --
+
+def label_recall(cand_ids: jax.Array, labels: jax.Array) -> jax.Array:
+    """Paper's Label Retrieval Rate: fraction of true labels retrieved.
+
+    labels: int32 ``[B, NL]`` padded with -1.
+    """
+    hit = (labels[:, :, None] == cand_ids[:, None, :]).any(-1)   # [B, NL]
+    valid = labels >= 0
+    return jnp.sum(hit & valid) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def precision_at_k(pred_ids: jax.Array, labels: jax.Array, k: int) -> jax.Array:
+    """Standard XMC P@k: mean over samples of |top-k ∩ labels| / k."""
+    topk = pred_ids[:, :k]
+    hit = (topk[:, :, None] == labels[:, None, :]) & (labels >= 0)[:, None, :]
+    return jnp.mean(jnp.sum(hit.any(-1) & (topk >= 0), axis=-1) / k)
+
+
+def avg_sample_size(cand_ids: jax.Array) -> jax.Array:
+    """Paper's Sample Size: mean #unique neurons scored per query."""
+    return jnp.mean(jnp.sum(dedup_mask(cand_ids), axis=-1))

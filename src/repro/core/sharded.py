@@ -1,0 +1,109 @@
+"""Vocab-sharded LSS: the distributed serving form of the paper's index.
+
+Each shard of the model axis owns m/TP contiguous WOL neurons and builds an
+independent LSS index over them (theta is replicated — hyperplanes are tiny).
+Per query:
+
+    shard-local retrieve -> local sparse logits -> local top-k
+    -> all-gather k candidates per shard (O(TP*k) per query, NOT O(m))
+    -> global top-k
+
+This replaces the paper's "embarrassingly parallel over CPU threads" claim
+with "embarrassingly parallel over vocab shards" and makes the WOL head's
+communication volume independent of vocabulary size.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import simhash
+from repro.core.lss import (LSSConfig, LSSIndex, NEG_INF, build_index,
+                            dedup_mask, retrieve, sparse_logits_bucketed,
+                            sparse_logits_gather)
+
+__all__ = ["build_local_index", "local_topk", "sharded_lss_predict",
+           "make_sharded_predict"]
+
+
+def build_local_index(w_aug_local: jax.Array, theta: jax.Array,
+                      cfg: LSSConfig) -> LSSIndex:
+    """Build the index for this shard's rows (call inside shard_map or on
+    pre-split host arrays). Neuron ids inside are LOCAL row indices."""
+    return build_index(w_aug_local, theta, cfg)
+
+
+def local_topk(q: jax.Array, index: LSSIndex, w_aug_local: jax.Array | None,
+               k: int) -> tuple[jax.Array, jax.Array]:
+    """Shard-local Algorithm 2 returning exactly-k (logits, local ids)."""
+    q_aug = simhash.augment_queries(q)
+    if index.w_bucketed is not None:
+        _, buckets = retrieve(q_aug, index)
+        logits, cand_ids = sparse_logits_bucketed(q_aug, index, buckets)
+    else:
+        cand_ids, _ = retrieve(q_aug, index)
+        logits = sparse_logits_gather(q_aug, w_aug_local, cand_ids)
+    logits = jnp.where(dedup_mask(cand_ids), logits, NEG_INF)
+    top_logits, pos = jax.lax.top_k(logits, k)
+    top_ids = jnp.take_along_axis(cand_ids, pos, axis=-1)
+    return top_logits, top_ids
+
+
+def sharded_lss_predict(q: jax.Array, index: LSSIndex,
+                        w_aug_local: jax.Array | None, *, k: int,
+                        axis_name: str, m_local: int
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Body to run INSIDE shard_map: q replicated, index/w shard-local.
+
+    Returns global (top-k logits, top-k GLOBAL neuron ids), replicated.
+    """
+    logits, ids = local_topk(q, index, w_aug_local, k)          # [B, k]
+    offset = jax.lax.axis_index(axis_name) * m_local
+    gids = jnp.where(ids >= 0, ids + offset, -1)
+    all_logits = jax.lax.all_gather(logits, axis_name, axis=1)  # [B, TP, k]
+    all_ids = jax.lax.all_gather(gids, axis_name, axis=1)
+    all_logits = all_logits.reshape(q.shape[0], -1)
+    all_ids = all_ids.reshape(q.shape[0], -1)
+    top_logits, pos = jax.lax.top_k(all_logits, k)
+    top_ids = jnp.take_along_axis(all_ids, pos, axis=-1)
+    return top_logits, top_ids
+
+
+def make_sharded_predict(mesh: jax.sharding.Mesh, model_axis: str,
+                         cfg: LSSConfig, m_local: int, k: int,
+                         batch_axis: str | None = None):
+    """Wrap sharded_lss_predict in shard_map for the given mesh.
+
+    Expects stacked per-shard pytrees: index leaves with a leading [TP] dim
+    sharded over ``model_axis``; q sharded over ``batch_axis`` (or
+    replicated).  Returns a function (q, stacked_index, w_local_stack|None)
+    -> (logits [B,k], ids [B,k]).
+    """
+    qspec = P(batch_axis) if batch_axis else P()
+    body = partial(sharded_lss_predict, k=k, axis_name=model_axis,
+                   m_local=m_local)
+
+    def unstacked_body(q, index_stack, w_stack):
+        index = jax.tree.map(lambda x: x[0], index_stack)
+        w = None if w_stack is None else w_stack[0]
+        return body(q, index, w)
+
+    shard_specs = jax.tree.map(lambda _: P(model_axis), (0, 0))  # placeholder
+
+    def fn(q, index_stack, w_stack=None):
+        in_specs = (
+            qspec,
+            jax.tree.map(lambda _: P(model_axis), index_stack),
+            None if w_stack is None
+            else jax.tree.map(lambda _: P(model_axis), w_stack),
+        )
+        mapped = jax.shard_map(
+            unstacked_body, mesh=mesh, in_specs=in_specs,
+            out_specs=(qspec, qspec), check_vma=False)
+        return mapped(q, index_stack, w_stack)
+
+    return fn

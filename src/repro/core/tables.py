@@ -1,0 +1,113 @@
+"""Static-shape, bucket-major LSH tables (the TPU adaptation of LSS).
+
+The paper's CPU implementation uses chained hash buckets of variable size.
+On TPU everything must be static-shape and contiguous, so a table is:
+
+    table_ids : int32 [L, 2^K, P]   neuron ids, bucket-major, -1 padded
+
+and, optionally, a *bucket-major weight layout*:
+
+    table_w   : [L, 2^K, P, d_aug]  the WOL rows physically permuted so a
+                                    query touches ONE contiguous [P, d_aug]
+                                    slab per table — a dynamic-slice + MXU
+                                    matmul instead of a random gather.
+
+Buckets that overflow capacity ``P`` are truncated (the IUL loss actively
+balances load — paper §3.3 property 3); the overflow fraction is reported
+as a first-class metric so capacity can be sized.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import simhash
+
+__all__ = ["LSSTables", "build_tables", "bucketize_weights", "bucket_load_stats"]
+
+
+class LSSTables(NamedTuple):
+    """Pytree holding the static LSS index for one WOL."""
+
+    table_ids: jax.Array      # int32 [L, 2^K, P], -1 = empty slot
+    n_dropped: jax.Array      # int32 [L] neurons truncated by overflow
+    k_bits: int               # static
+    n_tables: int             # static
+    capacity: int             # static P
+
+    @property
+    def n_buckets(self) -> int:
+        return 2 ** self.k_bits
+
+
+# `k_bits`/`n_tables`/`capacity` are static metadata, not leaves.
+jax.tree_util.register_pytree_node(
+    LSSTables,
+    lambda t: ((t.table_ids, t.n_dropped), (t.k_bits, t.n_tables, t.capacity)),
+    lambda aux, leaves: LSSTables(*leaves, *aux),
+)
+
+
+def _one_table(bucket_of_neuron: jax.Array, n_buckets: int,
+               capacity: int) -> tuple[jax.Array, jax.Array]:
+    """Build one bucket-major table from per-neuron bucket ids ``[m]``.
+
+    Returns (ids [2^K, P], n_dropped []).  Pure static-shape: stable-sort
+    neurons by bucket, rank-within-bucket via a searchsorted offset, scatter
+    ranks < P into the table.
+    """
+    m = bucket_of_neuron.shape[0]
+    order = jnp.argsort(bucket_of_neuron, stable=True)          # [m]
+    sorted_buckets = bucket_of_neuron[order]                    # [m]
+    # First occurrence index of each neuron's bucket in the sorted array.
+    starts = jnp.searchsorted(sorted_buckets, sorted_buckets, side="left")
+    rank = jnp.arange(m, dtype=jnp.int32) - starts.astype(jnp.int32)
+    keep = rank < capacity
+    # Scatter neuron ids into [2^K * P]; dropped ranks go to a trash slot.
+    flat_pos = jnp.where(keep, sorted_buckets * capacity + rank,
+                         n_buckets * capacity)
+    flat = jnp.full((n_buckets * capacity + 1,), -1, jnp.int32)
+    flat = flat.at[flat_pos].set(order.astype(jnp.int32), mode="drop")
+    ids = flat[:-1].reshape(n_buckets, capacity)
+    return ids, jnp.sum(~keep).astype(jnp.int32)
+
+
+def build_tables(w_aug: jax.Array, theta: jax.Array, k_bits: int,
+                 n_tables: int, capacity: int) -> LSSTables:
+    """Hash every neuron and build L bucket-major tables.
+
+    Args:
+      w_aug: ``[m, d_aug]`` augmented WOL neurons.
+      theta: ``[d_aug, K*L]`` hyperplanes.
+    """
+    buckets = simhash.bucket_ids(w_aug, theta, k_bits, n_tables)   # [m, L]
+    ids, dropped = jax.vmap(_one_table, in_axes=(1, None, None))(
+        buckets, 2 ** k_bits, capacity)
+    return LSSTables(ids, dropped, k_bits, n_tables, capacity)
+
+
+def bucketize_weights(w_aug: jax.Array, tables: LSSTables) -> jax.Array:
+    """Materialise the bucket-major weight layout ``[L, 2^K, P, d_aug]``.
+
+    Empty slots (-1) become zero rows, so a dot against them contributes a
+    logit of exactly 0; retrieval masks them out by id before ranking.
+    """
+    safe = jnp.maximum(tables.table_ids, 0)
+    w = w_aug[safe]                                   # [L, 2^K, P, d_aug]
+    mask = (tables.table_ids >= 0)[..., None]
+    return jnp.where(mask, w, jnp.zeros_like(w))
+
+
+def bucket_load_stats(tables: LSSTables) -> dict[str, jax.Array]:
+    """Load-balance metrics for EXPERIMENTS.md and capacity tuning."""
+    occ = jnp.sum(tables.table_ids >= 0, axis=-1)     # [L, 2^K]
+    total = occ.sum(axis=-1) + tables.n_dropped       # [L] == m
+    return {
+        "mean_bucket_occupancy": occ.mean(),
+        "max_bucket_occupancy": occ.max(),
+        "empty_bucket_frac": jnp.mean(occ == 0),
+        "overflow_frac": (tables.n_dropped / jnp.maximum(total, 1)).mean(),
+    }

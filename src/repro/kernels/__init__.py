@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+Each kernel ships as <name>/{kernel.py, ops.py, ref.py}: the pallas_call
+with explicit BlockSpec tiling, the jit'd public wrapper with impl
+dispatch, and the pure-jnp oracle.
+"""
+from repro.kernels.simhash_codes import simhash_codes
+from repro.kernels.bucket_logits import bucket_logits
+__all__ = ["simhash_codes", "bucket_logits"]

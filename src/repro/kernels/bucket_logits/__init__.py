@@ -1,0 +1,2 @@
+from repro.kernels.bucket_logits.ops import bucket_logits
+__all__ = ["bucket_logits"]

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: bucket-major sparse WOL logits (the LSS hot path).
+
+The TPU adaptation of the paper's hash-bucket scan: the WOL is physically
+permuted into bucket-major slabs ``[S, P, d]`` so that serving one query
+touches exactly L contiguous ``[P, d]`` slabs — a *scalar-prefetched
+dynamic block index*, not a random gather.  The slab id for each (query,
+table) is data-dependent, so it is fed through scalar prefetch and consumed
+by the BlockSpec index_map (the canonical Pallas TPU pattern for
+data-dependent tiling, same as MoE block-sparse kernels).
+
+Arithmetic intensity: 2·P·d FLOPs over P·d·bytes_per_el slab bytes
+→ ~1 FLOP/byte at bf16 — HBM-bandwidth-bound by construction, which is the
+POINT of LSS: the full head would read m·d bytes; LSS reads L·P·d with
+L·P ≈ 0.2–6 % of m.  See EXPERIMENTS.md §Perf for the measured ratio.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(slab_ids_ref, q_ref, w_ref, out_ref):
+    # q_ref: [1, d]; w_ref: [1, P, d]; out_ref: [1, 1, P]
+    del slab_ids_ref  # consumed by the index_map only
+    q = q_ref[...].astype(jnp.float32)               # [1, d]
+    w = w_ref[0].astype(jnp.float32)                 # [P, d]
+    logits = jax.lax.dot_general(
+        q, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [1, P]
+    out_ref[...] = logits[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bucket_logits_pallas(q: jax.Array, w_slabs: jax.Array,
+                         slab_ids: jax.Array, *,
+                         interpret: bool = False) -> jax.Array:
+    """``[B,d] x [S,P,d] x int32 [B,L] -> [B,L,P]`` fp32 logits.
+
+    ``d`` and ``P`` should be multiples of 128 (ops.py pads).  Grid is
+    ``(B, L)``: one slab dot per step; the slab block index comes from the
+    prefetched ``slab_ids``.
+    """
+    bsz, d = q.shape
+    n_slabs, cap, dw = w_slabs.shape
+    assert d == dw, (d, dw)
+    n_tables = slab_ids.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, n_tables),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, l, ids: (b, 0)),
+            pl.BlockSpec((1, cap, d), lambda b, l, ids: (ids[b, l], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cap), lambda b, l, ids: (b, l, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, n_tables, cap), jnp.float32),
+        interpret=interpret,
+    )(slab_ids, q, w_slabs)

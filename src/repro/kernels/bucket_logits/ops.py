@@ -1,0 +1,31 @@
+"""Public op: bucket-major sparse WOL logits with impl dispatch + padding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_logits.kernel import bucket_logits_pallas
+from repro.kernels.bucket_logits.ref import bucket_logits_ref
+
+
+def bucket_logits(q: jax.Array, w_slabs: jax.Array, slab_ids: jax.Array,
+                  *, impl: str = "ref") -> jax.Array:
+    """``[B,d] x [S,P,d] x [B,L] -> [B,L,P]`` fp32 sparse logits.
+
+    impl: ``ref`` | ``pallas`` | ``pallas_interpret``.
+    """
+    if impl == "ref":
+        return bucket_logits_ref(q, w_slabs, slab_ids)
+    bsz, d = q.shape
+    n_slabs, cap, _ = w_slabs.shape
+    pad_d = (-d) % 128
+    pad_p = (-cap) % 128
+    if pad_d:
+        q = jnp.pad(q, ((0, 0), (0, pad_d)))
+        w_slabs = jnp.pad(w_slabs, ((0, 0), (0, 0), (0, pad_d)))
+    if pad_p:
+        w_slabs = jnp.pad(w_slabs, ((0, 0), (0, pad_p), (0, 0)))
+    out = bucket_logits_pallas(q, w_slabs, slab_ids,
+                               interpret=(impl == "pallas_interpret"))
+    return out[:, :, :cap]

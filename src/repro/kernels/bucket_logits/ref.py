@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the bucket-major sparse-logits kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_logits_ref(q: jax.Array, w_slabs: jax.Array,
+                      slab_ids: jax.Array) -> jax.Array:
+    """Per-query contiguous-slab logits.
+
+    Args:
+      q:        ``[B, d]`` query embeddings.
+      w_slabs:  ``[S, P, d]`` bucket-major WOL slabs (S = L * 2^K).
+      slab_ids: int32 ``[B, L]`` slab index per (query, table).
+
+    Returns:
+      ``[B, L, P]`` float32 logits ``q . w`` for every neuron slot in the
+      hit slabs (zero rows in padded slots give logit 0; masking by neuron
+      id happens in the caller).
+    """
+    slabs = w_slabs[slab_ids]                       # [B, L, P, d]
+    return jnp.einsum("bd,blpd->blp", q.astype(jnp.float32),
+                      slabs.astype(jnp.float32))

@@ -1,0 +1,2 @@
+from repro.kernels.simhash_codes.ops import simhash_codes
+__all__ = ["simhash_codes"]

@@ -1,0 +1,39 @@
+"""Public op: simhash bucket codes with impl dispatch + padding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.simhash_codes.kernel import simhash_codes_pallas
+from repro.kernels.simhash_codes.ref import simhash_codes_ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def simhash_codes(x: jax.Array, theta: jax.Array, k_bits: int,
+                  n_tables: int, *, impl: str = "ref",
+                  block_b: int = 256) -> jax.Array:
+    """``[B, d] x [d, K*L] -> int32 bucket ids [B, L]``.
+
+    impl: ``ref`` (pure jnp — used by the dry-run on any backend),
+    ``pallas`` (TPU target), ``pallas_interpret`` (kernel body on CPU,
+    used by tests).
+    """
+    if impl == "ref":
+        return simhash_codes_ref(x, theta, k_bits, n_tables)
+    bsz, d = x.shape
+    xp = _pad_to(_pad_to(x, 1, 128), 0, block_b)
+    tp = _pad_to(theta, 0, 128)
+    out = simhash_codes_pallas(
+        xp, tp, k_bits=k_bits, n_tables=n_tables, block_b=block_b,
+        interpret=(impl == "pallas_interpret"))
+    return out[:bsz]

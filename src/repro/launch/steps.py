@@ -1,0 +1,571 @@
+"""Cell builders: (architecture x input shape) -> a lowerable step.
+
+``build_cell(arch_id, shape_name, mesh)`` returns a ``Cell`` with the jit
+target, ShapeDtypeStruct example args (NO device allocation), and explicit
+in_shardings — the single entry point used by the dry-run, the roofline,
+and the real launchers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec
+from repro.configs.registry import get_config
+from repro.core import simhash
+from repro.core.lss import LSSConfig, LSSIndex
+from repro.core.sharded import sharded_lss_predict
+from repro.core.tables import LSSTables
+from repro.models import gnn, recsys
+from repro.models import transformer as T
+from repro.optim import adamw_init
+from repro.train.trainer import TrainConfig, TrainState, make_train_step, \
+    state_shardings
+from repro.utils.sharding import specs_to_shardings
+
+f32, bf16, i32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+
+class Cell(NamedTuple):
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: tuple                 # ShapeDtypeStructs / pytrees thereof
+    in_shardings: tuple
+    model_flops: float          # analytic useful FLOPs (6ND style)
+    comment: str = ""
+    # cost_analysis counts scan bodies once (trip count ignored).  Layer
+    # stacks are unrolled for the dry-run; the remaining intra-attention
+    # chunk scans are corrected analytically (global FLOPs to add).
+    flops_correction: float = 0.0
+    donate_state: bool = False  # train cells donate (params, opt) buffers
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pad_up(n: int, mult: int) -> int:
+    """pjit in_shardings require divisible input dims; models tolerate
+    padded rows (-1 ids / zero rows) by construction."""
+    return -(-n // mult) * mult
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _data_spec(mesh, tree, ndims: dict | None = None):
+    def one(leaf):
+        return NamedSharding(mesh, P(
+            "data", *([None] * (len(leaf.shape) - 1))))
+    return jax.tree.map(one, tree)
+
+
+# ===================================================================== LM ==
+
+def _lm_state_sds(cfg: T.TransformerConfig, opt_dtype) -> TrainState:
+    params = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda: adamw_init(params, opt_dtype))
+    return TrainState(params, opt, _sds((), i32))
+
+
+def _attn_scan_steps(cfg, sl: int) -> int:
+    nq = max(1, sl // cfg.q_chunk) if sl > cfg.q_chunk else 1
+    nk = max(1, -(-sl // cfg.kv_chunk))
+    return nq * nk
+
+
+def _lm_train_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    cfg = spec.model_cfg
+    opt_dtype = bf16 if "arctic" in spec.arch_id else f32
+    tc = TrainConfig(opt_state_dtype=opt_dtype, microbatches=1)
+    loss_fn = functools.partial(_lm_loss_fn, cfg=cfg)
+    step = make_train_step(loss_fn, tc)
+    gb, sl = shape.dims["global_batch"], shape.dims["seq_len"]
+    state = _lm_state_sds(cfg, opt_dtype)
+    batch = {"tokens": _sds((gb, sl), i32), "labels": _sds((gb, sl), i32)}
+    sh_state = state_shardings(mesh, T.param_specs(cfg))
+    sh_batch = _data_spec(mesh, batch)
+    # 6ND + attention term 12*L*n*h*S per token (causal halves it)
+    n_active = cfg.active_param_count()
+    tokens = gb * sl
+    attn = 2 * 2 * cfg.n_layers * cfg.n_heads * cfg.head_dim * sl / 2
+    mf = 3 * (2 * n_active + attn) * tokens    # fwd + 2x bwd
+    # blockwise attention computes full S^2 (masked); scan counted once.
+    # train = fwd + remat-fwd + 2x bwd = 4 passes.
+    steps_ = _attn_scan_steps(cfg, sl)
+    attn_full = 4 * gb * sl * sl * cfg.n_heads * cfg.head_dim \
+        * cfg.n_layers * 4
+    corr = attn_full * (1 - 1 / steps_)
+    return Cell(spec.arch_id, shape.name, step, (state, batch),
+                (sh_state, sh_batch), mf, "train_step w/ AdamW",
+                flops_correction=corr, donate_state=True)
+
+
+def _lm_loss_fn(params, batch, cfg):
+    return T.lm_loss(params, batch, cfg)
+
+
+def _lm_prefill_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    cfg = spec.model_cfg
+    gb, sl = shape.dims["global_batch"], shape.dims["seq_len"]
+
+    def fn(params, tokens):
+        hidden, cache = T.prefill(params, tokens, cfg, max_len=sl)
+        return hidden[:, -1], cache
+
+    params = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    tokens = _sds((gb, sl), i32)
+    sh = (specs_to_shardings(mesh, T.param_specs(cfg)),
+          NamedSharding(mesh, P("data", None)))
+    n_active = cfg.active_param_count()
+    attn = 2 * 2 * cfg.n_layers * cfg.n_heads * cfg.head_dim * sl / 2
+    mf = (2 * n_active + attn) * gb * sl
+    steps_ = _attn_scan_steps(cfg, sl)
+    attn_full = 4 * gb * sl * sl * cfg.n_heads * cfg.head_dim * cfg.n_layers
+    corr = attn_full * (1 - 1 / steps_)
+    return Cell(spec.arch_id, shape.name, fn, (params, tokens), sh, mf,
+                "prefill -> (last hidden, kv cache)",
+                flops_correction=corr)
+
+
+def _lss_index_sds(lss: LSSConfig, m_local: int, d_aug: int, tp: int):
+    """Stacked per-shard LSS index ShapeDtypeStructs ([tp, ...] leaves)."""
+    cap = lss.resolve_capacity(m_local)
+    nb = 2 ** lss.k_bits
+    tables = LSSTables(
+        table_ids=_sds((tp, lss.n_tables, nb, cap), i32),
+        n_dropped=_sds((tp, lss.n_tables), i32),
+        k_bits=lss.k_bits, n_tables=lss.n_tables, capacity=cap)
+    return LSSIndex(
+        theta=_sds((tp, d_aug, lss.k_bits * lss.n_tables), f32),
+        tables=tables,
+        w_bucketed=_sds((tp, lss.n_tables, nb, cap, d_aug), bf16))
+
+
+def _lm_decode_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    cfg = spec.model_cfg
+    gb, sl = shape.dims["global_batch"], shape.dims["seq_len"]
+    tp = mesh.shape["model"]
+    m_local = -(-cfg.vocab // tp)
+    lss = spec.lss
+    d_aug = cfg.d_model + 1
+
+    def fn(params, token, cache, index_stack):
+        hidden, new_cache = T.decode_step(params, token, cache, cfg)
+        # vocab-sharded LSS head (paper Algorithm 2, distributed)
+        body = functools.partial(sharded_lss_predict, k=8,
+                                 axis_name="model", m_local=m_local)
+
+        def unstack(q, idx):
+            return body(q, jax.tree.map(lambda x: x[0], idx), None)
+
+        idx_specs = jax.tree.map(lambda _: P("model"), index_stack)
+        logits, ids = jax.shard_map(
+            unstack, mesh=mesh,
+            in_specs=(P(), idx_specs), out_specs=(P(), P()),
+            check_vma=False)(hidden.astype(f32), index_stack)
+        return logits, ids, new_cache
+
+    params = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    token = _sds((gb,), i32)
+    cache = T.KVCache(
+        k=_sds((cfg.n_layers, gb, sl, cfg.n_kv_heads, cfg.head_dim), bf16),
+        v=_sds((cfg.n_layers, gb, sl, cfg.n_kv_heads, cfg.head_dim), bf16),
+        length=_sds((), i32))
+    index = _lss_index_sds(lss, m_local, d_aug, tp)
+    cache_spec = specs_to_shardings(mesh, T.cache_specs(cfg, gb))
+    sh = (specs_to_shardings(mesh, T.param_specs(cfg)),
+          NamedSharding(mesh, P()),
+          cache_spec,
+          jax.tree.map(lambda _: NamedSharding(mesh, P("model")), index))
+    # decode useful FLOPs: 2*N_active per token + KV attention 4*L*kv*h*S
+    n_active = cfg.active_param_count() - cfg.vocab * cfg.d_model  # LSS head!
+    attn = 2 * 2 * cfg.n_layers * cfg.n_heads * cfg.head_dim * sl
+    cap = index.tables.capacity
+    lss_flops = 2 * d_aug * (lss.k_bits * lss.n_tables + lss.n_tables * cap)
+    mf = (2 * n_active + attn + lss_flops * tp) * gb
+    return Cell(spec.arch_id, shape.name, fn, (params, token, cache, index),
+                sh, mf, "decode_step + vocab-sharded LSS head")
+
+
+# ==================================================================== GNN ==
+
+def _gnn_train_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    dims = shape.dims
+    cfg = spec.model_cfg._replace(d_feat=dims["d_feat"],
+                                  n_classes=dims["n_classes"])
+    tc = TrainConfig()
+    loss_fn = functools.partial(_gnn_loss_fn, cfg=cfg)
+    step = make_train_step(loss_fn, tc)
+    state = _gnn_state_sds(cfg)
+    dp = mesh.shape["data"]
+    n_pad = _pad_up(dims["n_nodes"], dp)
+    e_pad = _pad_up(dims["n_edges"], dp)
+    batch = {
+        "x": _sds((n_pad, dims["d_feat"]), f32),
+        "edges": _sds((e_pad, 2), i32),
+        "labels": _sds((n_pad,), i32),
+    }
+    sh_state = state_shardings(mesh, gnn.param_specs(cfg))
+    sh_batch = _data_spec(mesh, batch)
+    e, n = dims["n_edges"], dims["n_nodes"]
+    d0, dh, c = dims["d_feat"], cfg.d_hidden, dims["n_classes"]
+    mf = 3 * (2 * n * (d0 * dh + dh * c) + 2 * e * (d0 + dh))
+    return Cell(spec.arch_id, shape.name, step, (state, batch),
+                (sh_state, sh_batch), mf, "full-batch GCN train_step",
+                donate_state=True)
+
+
+def _gnn_loss_fn(params, batch, cfg):
+    return gnn.loss(params, batch, cfg)
+
+
+def _gnn_state_sds(cfg) -> TrainState:
+    params = jax.eval_shape(
+        lambda: gnn.init_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda: adamw_init(params, f32))
+    return TrainState(params, opt, _sds((), i32))
+
+
+def _gnn_minibatch_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    dims = shape.dims
+    cfg = spec.model_cfg._replace(d_feat=dims["d_feat"],
+                                  n_classes=dims["n_classes"])
+    fanout = dims["fanout"]
+    bn = dims["batch_nodes"]
+    tc = TrainConfig()
+
+    def loss_fn(params, batch):
+        nodes, edges = gnn.sampled_subgraph(
+            batch["key"], batch["indptr"], batch["indices"],
+            batch["seeds"], fanout)
+        x = batch["x"][nodes]
+        labels = jnp.full((nodes.shape[0],), -1, i32)
+        labels = labels.at[:bn].set(batch["seed_labels"])
+        return gnn.loss(params, {"x": x, "edges": edges, "labels": labels},
+                        cfg)
+
+    step = make_train_step(loss_fn, tc)
+    state = _gnn_state_sds(cfg)
+    both = mesh.shape["data"] * mesh.shape["model"]
+    batch = {
+        "key": _sds((2,), jnp.uint32),
+        "indptr": _sds((dims["n_nodes"] + 1,), i32),
+        "indices": _sds((_pad_up(dims["n_edges"], both),), i32),
+        "seeds": _sds((bn,), i32),
+        "seed_labels": _sds((bn,), i32),
+        "x": _sds((_pad_up(dims["n_nodes"], both), dims["d_feat"]), f32),
+    }
+    sh_state = state_shardings(mesh, gnn.param_specs(cfg))
+    sh_batch = {
+        "key": NamedSharding(mesh, P()),
+        "indptr": NamedSharding(mesh, P()),
+        "indices": NamedSharding(mesh, P(("data", "model"))),
+        "seeds": NamedSharding(mesh, P("data")),
+        "seed_labels": NamedSharding(mesh, P("data")),
+        "x": NamedSharding(mesh, P(("data", "model"), None)),
+    }
+    blk = bn * (1 + fanout[0] + fanout[0] * fanout[1])
+    mf = 3 * 2 * blk * (dims["d_feat"] * cfg.d_hidden
+                        + cfg.d_hidden * dims["n_classes"])
+    return Cell(spec.arch_id, shape.name, step, (state, batch),
+                (sh_state, sh_batch), mf,
+                "fanout-sampled GCN train_step (sampler in-graph)",
+                donate_state=True)
+
+
+def _gnn_molecule_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    dims = shape.dims
+    cfg = spec.model_cfg._replace(d_feat=dims["d_feat"],
+                                  n_classes=dims["n_classes"],
+                                  readout="mean")
+    tc = TrainConfig()
+    loss_fn = functools.partial(_mol_loss_fn, cfg=cfg)
+    step = make_train_step(loss_fn, tc)
+    state = _gnn_state_sds(cfg)
+    g, n, e = dims["batch"], dims["n_nodes"], dims["n_edges"]
+    batch = {
+        "x": _sds((g, n, dims["d_feat"]), f32),
+        "edges": _sds((g, e, 2), i32),
+        "labels": _sds((g,), i32),
+    }
+    sh_state = state_shardings(mesh, gnn.param_specs(cfg))
+    sh_batch = _data_spec(mesh, batch)
+    mf = 3 * 2 * g * n * (dims["d_feat"] * cfg.d_hidden
+                          + cfg.d_hidden * dims["n_classes"])
+    return Cell(spec.arch_id, shape.name, step, (state, batch),
+                (sh_state, sh_batch), mf, "batched small-graph train_step",
+                donate_state=True)
+
+
+def _mol_loss_fn(params, batch, cfg):
+    return gnn.molecule_loss(params, batch, cfg)
+
+
+# ================================================================= RecSys ==
+
+def _ctr_logits(params, batch, cfg):
+    if cfg.kind == "deepfm":
+        return recsys.deepfm_logits(params, batch["ids"], cfg)
+    if cfg.kind == "autoint":
+        return recsys.autoint_logits(params, batch["ids"], cfg)
+    if cfg.kind == "dien":
+        return recsys.dien_logits(
+            params, {"hist": batch["hist"], "target": batch["target"]}, cfg)
+    raise ValueError(cfg.kind)
+
+
+def _ctr_loss(params, batch, cfg):
+    lg = _ctr_logits(params, batch, cfg)
+    y = batch["labels"].astype(f32)
+    return jnp.mean(jnp.maximum(lg, 0) - lg * y + jnp.log1p(jnp.exp(-jnp.abs(lg))))
+
+
+def _ctr_init(cfg):
+    if cfg.kind == "deepfm":
+        return recsys.init_deepfm, recsys.deepfm_specs
+    if cfg.kind == "autoint":
+        return recsys.init_autoint, recsys.autoint_specs
+    return recsys.init_dien, recsys.dien_specs
+
+
+def _ctr_batch_sds(cfg, b):
+    if cfg.kind == "dien":
+        return {"hist": _sds((b, cfg.seq_len), i32), "target": _sds((b,), i32),
+                "labels": _sds((b,), i32)}
+    return {"ids": _sds((b, cfg.n_fields), i32), "labels": _sds((b,), i32)}
+
+
+def _ctr_flops(cfg, b):
+    d = cfg.embed_dim
+    if cfg.kind == "deepfm":
+        dims = [cfg.n_fields * d, *cfg.mlp_dims, 1]
+        mlp = sum(2 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        return b * (mlp + 2 * cfg.n_fields * d)
+    if cfg.kind == "autoint":
+        da = cfg.d_attn * cfg.n_heads
+        f = cfg.n_fields
+        per_layer = 2 * f * (4 * d * da) + 4 * f * f * da
+        return b * cfg.n_attn_layers * per_layer
+    g = cfg.gru_dim
+    per_t = 2 * (d * 3 * g + g * 3 * g) * 2       # gru1 + augru
+    dims = [g + 2 * d, *cfg.mlp_dims, 1]
+    mlp = sum(2 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    return b * (cfg.seq_len * per_t + mlp)
+
+
+def _ctr_train_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    cfg = spec.model_cfg._replace(unroll_scan=True)
+    b = shape.dims["batch"]
+    init_fn, specs_fn = _ctr_init(cfg)
+    tc = TrainConfig()
+    loss_fn = functools.partial(_ctr_loss, cfg=cfg)
+    step = make_train_step(loss_fn, tc)
+    params = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda: adamw_init(params, f32))
+    state = TrainState(params, opt, _sds((), i32))
+    batch = _ctr_batch_sds(cfg, b)
+    sh_state = state_shardings(mesh, specs_fn(cfg))
+    sh_batch = _data_spec(mesh, batch)
+    return Cell(spec.arch_id, shape.name, step, (state, batch),
+                (sh_state, sh_batch), 3 * _ctr_flops(cfg, b),
+                "CTR train_step (BCE)", donate_state=True)
+
+
+def _ctr_serve_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    cfg = spec.model_cfg._replace(unroll_scan=True)
+    b = shape.dims["batch"]
+    init_fn, specs_fn = _ctr_init(cfg)
+
+    def fn(params, batch):
+        return jax.nn.sigmoid(_ctr_logits(params, batch, cfg))
+
+    params = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0), cfg))
+    batch = _ctr_batch_sds(cfg, b)
+    batch.pop("labels")
+    sh = (specs_to_shardings(mesh, specs_fn(cfg)), _data_spec(mesh, batch))
+    return Cell(spec.arch_id, shape.name, fn, (params, batch), sh,
+                _ctr_flops(cfg, b), "CTR serve_step")
+
+
+def _ctr_retrieval_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    cfg = spec.model_cfg._replace(unroll_scan=True)
+    c = shape.dims["n_candidates"]
+    init_fn, specs_fn = _ctr_init(cfg)
+
+    if cfg.kind == "dien":
+        def fn(params, hist, cand):
+            hist_b = jnp.broadcast_to(hist, (c,) + hist.shape[1:])
+            return jax.nn.sigmoid(recsys.dien_logits(
+                params, {"hist": hist_b, "target": cand}, cfg))
+        user = _sds((1, cfg.seq_len), i32)
+    else:
+        def fn(params, user, cand):
+            ids = jnp.concatenate(
+                [cand[:, None],
+                 jnp.broadcast_to(user[:, 1:], (c, cfg.n_fields - 1))], 1)
+            return jax.nn.sigmoid(_ctr_logits(params, {"ids": ids}, cfg))
+        user = _sds((1, cfg.n_fields), i32)
+
+    params = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0), cfg))
+    cand = _sds((c,), i32)     # 1e6 % 16 == 0: shard over data only
+    sh = (specs_to_shardings(mesh, specs_fn(cfg)),
+          NamedSharding(mesh, P()),
+          NamedSharding(mesh, P("data")))
+    return Cell(spec.arch_id, shape.name, fn, (params, user, cand), sh,
+                _ctr_flops(cfg, c), "1 query x 1M candidate scoring")
+
+
+# BERT4Rec --------------------------------------------------------------
+
+_N_MASK = 20        # masked positions per sequence (cloze)
+_N_NEG = 8192       # sampled-softmax negatives (training only)
+
+
+def _b4r_sampled_loss(params, batch, cfg):
+    """Cloze with sampled softmax: full 1M softmax at train time is the
+    exact cost LSS removes at serve time; sampled softmax is the standard
+    training-side treatment (logQ-corrected in spirit; uniform here)."""
+    hidden = recsys.bert4rec_encode(params, batch["seq"], cfg)
+    hsel = jnp.take_along_axis(
+        hidden, batch["mask_pos"][..., None], axis=1)       # [B, M, D]
+    pos_rows = params["head"][batch["mask_labels"]]          # [B, M, D]
+    neg_rows = params["head"][batch["neg_ids"]]              # [Nneg, D]
+    pos_logit = jnp.einsum("bmd,bmd->bm", hsel, pos_rows).astype(f32)
+    neg_logit = jnp.einsum("bmd,nd->bmn", hsel, neg_rows).astype(f32)
+    logz = jnp.logaddexp(pos_logit, jax.nn.logsumexp(neg_logit, -1))
+    return jnp.mean(logz - pos_logit)
+
+
+def _b4r_train_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    cfg = spec.model_cfg
+    b = shape.dims["batch"]
+    tc = TrainConfig()
+    loss_fn = functools.partial(_b4r_sampled_loss, cfg=cfg)
+    step = make_train_step(loss_fn, tc)
+    params = jax.eval_shape(
+        lambda: recsys.init_bert4rec(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda: adamw_init(params, f32))
+    state = TrainState(params, opt, _sds((), i32))
+    batch = {
+        "seq": _sds((b, cfg.seq_len), i32),
+        "mask_pos": _sds((b, _N_MASK), i32),
+        "mask_labels": _sds((b, _N_MASK), i32),
+        "neg_ids": _sds((_N_NEG,), i32),
+    }
+    sh_state = state_shardings(mesh, recsys.bert4rec_specs(cfg))
+    sh_batch = _data_spec(mesh, batch)
+    sh_batch["neg_ids"] = NamedSharding(mesh, P())
+    d = cfg.embed_dim
+    enc = cfg.n_blocks * (8 * d * d + 4 * cfg.seq_len * d) * cfg.seq_len * 2
+    head = 2 * _N_MASK * (_N_NEG + 1) * d
+    return Cell(spec.arch_id, shape.name, step, (state, batch),
+                (sh_state, sh_batch), 3 * b * (enc + head),
+                "cloze train_step (sampled softmax)", donate_state=True)
+
+
+def _b4r_serve_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    """Encode + vocab-sharded LSS top-k over the 1M-item WOL."""
+    cfg = spec.model_cfg
+    b = shape.dims.get("batch", 1)
+    tp = mesh.shape["model"]
+    m_local = -(-cfg.n_items // tp)
+    lss = spec.lss
+    d_aug = cfg.embed_dim + 1
+
+    def fn(params, seq, index_stack):
+        hidden = recsys.bert4rec_encode(params, seq, cfg)
+        q = hidden[:, -1].astype(f32)
+        body = functools.partial(sharded_lss_predict, k=10,
+                                 axis_name="model", m_local=m_local)
+
+        def unstack(qq, idx):
+            return body(qq, jax.tree.map(lambda x: x[0], idx), None)
+
+        idx_specs = jax.tree.map(lambda _: P("model"), index_stack)
+        return jax.shard_map(
+            unstack, mesh=mesh, in_specs=(P(), idx_specs),
+            out_specs=(P(), P()), check_vma=False)(q, index_stack)
+
+    params = jax.eval_shape(
+        lambda: recsys.init_bert4rec(jax.random.PRNGKey(0), cfg))
+    seq = _sds((b, cfg.seq_len), i32)
+    index = _lss_index_sds(lss, m_local, d_aug, tp)
+    # encoder is replicated (hillclimb 3 iter 1), so its batch can shard
+    # over BOTH axes; only the [B, 64] query vectors all-gather over
+    # 'model' at the shard_map boundary (iter 2).
+    nd = mesh.shape["data"] * tp
+    seq_spec = (P(("data", "model"), None) if b % nd == 0
+                else P("data", None) if b % mesh.shape["data"] == 0
+                else P())
+    sh = (specs_to_shardings(mesh, recsys.bert4rec_specs(cfg)),
+          NamedSharding(mesh, seq_spec),
+          jax.tree.map(lambda _: NamedSharding(mesh, P("model")), index))
+    d = cfg.embed_dim
+    enc = cfg.n_blocks * (8 * d * d + 4 * cfg.seq_len * d) * cfg.seq_len * 2
+    cap = index.tables.capacity
+    lss_fl = 2 * d_aug * (lss.k_bits + cap) * tp
+    return Cell(spec.arch_id, shape.name, fn, (params, seq, index), sh,
+                b * (enc + lss_fl), "encode + sharded LSS item retrieval")
+
+
+def _b4r_retrieval_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
+    # retrieval_cand: batch=1 against the full 1M catalogue — identical
+    # pipeline to serve, batch 1 (the paper's Table-1 setting).
+    return _b4r_serve_cell(spec, shape, mesh)
+
+
+# =============================================================== dispatch ==
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh, *,
+               lm_layers: int | None = None,
+               lm_impl: str = "unroll") -> Cell:
+    """``lm_layers``/``lm_impl``: the dry-run compiles LM cells three ways
+    — full depth with scan (the production graph: pass/fail + memory
+    proof) and unrolled at 2 and 4 layers (XLA cost_analysis ignores scan
+    trip counts; the per-layer slope extrapolates exact FLOP/byte/
+    collective counts to full depth)."""
+    spec = get_config(arch_id)
+    shape = spec.shape(shape_name)
+    if spec.family == "lm":
+        # grouped dispatch pays off on big token batches (train/prefill);
+        # at decode (<=128 tokens/step) per-group capacity padding costs
+        # more than the scatter locality buys (measured 0.7x) — 1 group.
+        groups = mesh.shape["data"] if shape.kind in ("train", "prefill") \
+            else 1
+        mc = spec.model_cfg._replace(
+            n_layers=lm_layers or spec.model_cfg.n_layers,
+            layers_impl=lm_impl,
+            moe_groups=groups)
+        spec = spec._replace(model_cfg=mc)
+        if shape.kind == "train":
+            return _lm_train_cell(spec, shape, mesh)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(spec, shape, mesh)
+        return _lm_decode_cell(spec, shape, mesh)
+    if spec.family == "gnn":
+        if shape.kind == "train_sampled":
+            return _gnn_minibatch_cell(spec, shape, mesh)
+        if shape.kind == "train_batched":
+            return _gnn_molecule_cell(spec, shape, mesh)
+        return _gnn_train_cell(spec, shape, mesh)
+    if spec.family == "recsys_ctr":
+        if shape.kind == "train":
+            return _ctr_train_cell(spec, shape, mesh)
+        if shape.kind == "retrieval":
+            return _ctr_retrieval_cell(spec, shape, mesh)
+        return _ctr_serve_cell(spec, shape, mesh)
+    if spec.family == "recsys_seq":
+        if shape.kind == "train":
+            return _b4r_train_cell(spec, shape, mesh)
+        if shape.kind == "retrieval":
+            return _b4r_retrieval_cell(spec, shape, mesh)
+        return _b4r_serve_cell(spec, shape, mesh)
+    raise ValueError(spec.family)

@@ -1,0 +1,102 @@
+"""The paper's RNN language model (Appendix B.2): embed -> 2x LSTM(200)
+-> dropout -> WOL.  LSTM cells via lax.scan (no flax)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class LSTMConfig(NamedTuple):
+    name: str
+    vocab: int
+    hidden: int = 200
+    n_layers: int = 2
+    dropout: float = 0.2
+    dtype: any = jnp.float32
+
+    def param_count(self) -> int:
+        per_layer = 4 * self.hidden * (2 * self.hidden + 1)
+        return self.vocab * self.hidden * 2 + self.n_layers * per_layer \
+            + self.vocab
+
+
+def init_params(key: jax.Array, cfg: LSTMConfig) -> dict:
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+    h = cfg.hidden
+    s = h ** -0.5
+    layers = {
+        "wx": jnp.stack([jax.random.normal(ks[2 + i], (h, 4 * h)) * s
+                         for i in range(cfg.n_layers)]).astype(cfg.dtype),
+        "wh": jnp.stack([jax.random.normal(jax.random.fold_in(ks[2 + i], 1),
+                                           (h, 4 * h)) * s
+                         for i in range(cfg.n_layers)]).astype(cfg.dtype),
+        "b": jnp.zeros((cfg.n_layers, 4 * h), cfg.dtype),
+    }
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, h)) * s
+                  ).astype(cfg.dtype),
+        "layers": layers,
+        "w_out": (jax.random.normal(ks[1], (cfg.vocab, h)) * s
+                  ).astype(cfg.dtype),
+        "b_out": jnp.zeros((cfg.vocab,), cfg.dtype),
+    }
+
+
+def param_specs(cfg: LSTMConfig) -> dict:
+    return {
+        "embed": P("model", None),
+        "layers": {"wx": P(None, None, "model"),
+                   "wh": P(None, None, "model"),
+                   "b": P(None, "model")},
+        "w_out": P("model", None),
+        "b_out": P("model"),
+    }
+
+
+def _lstm_layer(x: jax.Array, wx, wh, b) -> jax.Array:
+    """x: [B, S, H] -> [B, S, H] (scan over time)."""
+    bsz, _, h = x.shape
+
+    def cell(carry, xt):
+        hp, cp = carry
+        gates = xt @ wx + hp @ wh + b
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * cp + jax.nn.sigmoid(i) * jnp.tanh(g)
+        hn = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (hn, c), hn
+
+    init = (jnp.zeros((bsz, h), x.dtype), jnp.zeros((bsz, h), x.dtype))
+    _, ys = jax.lax.scan(cell, init, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(ys, 0, 1)
+
+
+def embed_seq(params: dict, tokens: jax.Array, cfg: LSTMConfig,
+              dropout_key=None) -> jax.Array:
+    """tokens [B, S] -> last-layer hidden states [B, S, H] (the LSS query
+    at each position)."""
+    x = params["embed"][tokens]
+    for i in range(cfg.n_layers):
+        x = _lstm_layer(x, params["layers"]["wx"][i],
+                        params["layers"]["wh"][i], params["layers"]["b"][i])
+    if dropout_key is not None and cfg.dropout > 0:
+        keep = jax.random.bernoulli(dropout_key, 1 - cfg.dropout, x.shape)
+        x = jnp.where(keep, x / (1 - cfg.dropout), 0)
+    return x
+
+
+def loss(params: dict, batch: dict, cfg: LSTMConfig,
+         dropout_key=None) -> jax.Array:
+    h = embed_seq(params, batch["tokens"], cfg, dropout_key)
+    lg = jnp.einsum("bsh,vh->bsv", h, params["w_out"]) + params["b_out"]
+    lg = lg.astype(jnp.float32)
+    labels = batch["labels"]
+    mask = labels >= 0
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == jnp.maximum(labels, 0)[..., None],
+                             lg, 0), axis=-1)
+    return ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,396 @@
+"""RecSys architectures: DeepFM, AutoInt, DIEN, BERT4Rec.
+
+The shared substrate is the sparse embedding path — JAX has no
+EmbeddingBag, so it is built here from ``jnp.take`` + masked reductions
+(``segment_sum`` for ragged bags).  CTR models use one unified table
+``[sum(vocab_f), dim]`` with per-field offsets, row-sharded over the
+``model`` mesh axis (the standard table-sharding used by DLRM-scale
+systems; GSPMD turns the gather into an all-to-all-ish exchange).
+
+BERT4Rec's next-item softmax over a 1M-item catalogue is a WOL — the
+paper's technique (LSS, repro.core) serves it sub-linearly; see
+``retrieval_scores`` + serve/engine.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+# ------------------------------------------------------- embedding bags ----
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Plain row gather ``[V, D] x [...]-> [..., D]`` (one id per field)."""
+    return table[ids]
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, mode: str = "mean",
+                  weights: jax.Array | None = None) -> jax.Array:
+    """EmbeddingBag over ragged bags. ids: ``[B, F]`` padded -1."""
+    mask = (ids >= 0)
+    rows = table[jnp.maximum(ids, 0)]                     # [B, F, D]
+    if weights is not None:
+        rows = rows * weights[..., None].astype(rows.dtype)
+    rows = jnp.where(mask[..., None], rows, 0)
+    if mode == "sum":
+        return rows.sum(1)
+    if mode == "mean":
+        return rows.sum(1) / jnp.maximum(mask.sum(1), 1)[:, None].astype(rows.dtype)
+    if mode == "max":
+        return jnp.where(mask[..., None], rows, -jnp.inf).max(1)
+    raise ValueError(mode)
+
+
+def _mlp(x: jax.Array, ws: Sequence[jax.Array], bs: Sequence[jax.Array],
+         final_act: bool = False) -> jax.Array:
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        x = x @ w + b
+        if i < len(ws) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _init_mlp(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    ws = [(jax.random.normal(k, (dims[i], dims[i + 1])) * dims[i] ** -0.5
+           ).astype(dtype) for i, k in enumerate(ks)]
+    bs = [jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)]
+    return ws, bs
+
+
+# ---------------------------------------------------------------- DeepFM ---
+
+class CTRConfig(NamedTuple):
+    name: str
+    kind: str                      # deepfm | autoint | dien
+    n_fields: int = 39
+    vocab_per_field: int = 100_000   # synthetic uniform field vocab
+    embed_dim: int = 10
+    mlp_dims: tuple = (400, 400, 400)
+    # autoint
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    # dien
+    seq_len: int = 100
+    gru_dim: int = 108
+    unroll_scan: bool = False   # dry-run cost accounting (see transformer)
+    dtype: any = jnp.float32
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_fields * self.vocab_per_field
+
+    def param_count(self) -> int:
+        n = self.total_vocab * self.embed_dim
+        if self.kind == "deepfm":
+            n += self.total_vocab  # linear term
+            dims = [self.n_fields * self.embed_dim, *self.mlp_dims, 1]
+            n += sum(dims[i] * dims[i + 1] + dims[i + 1]
+                     for i in range(len(dims) - 1))
+        return n
+
+
+def field_offsets(cfg: CTRConfig) -> jax.Array:
+    return (jnp.arange(cfg.n_fields) * cfg.vocab_per_field).astype(jnp.int32)
+
+
+def init_deepfm(key: jax.Array, cfg: CTRConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dims = [cfg.n_fields * cfg.embed_dim, *cfg.mlp_dims, 1]
+    ws, bs = _init_mlp(k3, dims, cfg.dtype)
+    return {
+        "table": (jax.random.normal(k1, (cfg.total_vocab, cfg.embed_dim))
+                  * 0.01).astype(cfg.dtype),
+        "linear": (jax.random.normal(k2, (cfg.total_vocab,)) * 0.01
+                   ).astype(cfg.dtype),
+        "mlp_w": ws, "mlp_b": bs,
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def deepfm_specs(cfg: CTRConfig) -> dict:
+    return {
+        "table": P("model", None), "linear": P("model"),
+        "mlp_w": [P(None, None)] * (len(cfg.mlp_dims) + 1),
+        "mlp_b": [P(None)] * (len(cfg.mlp_dims) + 1),
+        "bias": P(),
+    }
+
+
+def deepfm_logits(params: dict, ids: jax.Array, cfg: CTRConfig) -> jax.Array:
+    """ids: int32 ``[B, n_fields]`` (field-local); returns CTR logit [B]."""
+    gids = ids + field_offsets(cfg)[None, :]
+    emb = embedding_lookup(params["table"], gids)          # [B, F, D]
+    lin = params["linear"][gids].sum(-1)                   # [B]
+    # FM second-order: 0.5 * ((sum v)^2 - sum v^2)
+    s = emb.sum(1)
+    fm = 0.5 * (jnp.square(s) - jnp.square(emb).sum(1)).sum(-1)
+    deep = _mlp(emb.reshape(ids.shape[0], -1), params["mlp_w"],
+                params["mlp_b"])[:, 0]
+    return (lin + fm + deep + params["bias"]).astype(jnp.float32)
+
+
+# --------------------------------------------------------------- AutoInt ---
+
+def init_autoint(key: jax.Array, cfg: CTRConfig) -> dict:
+    ks = jax.random.split(key, 2 + cfg.n_attn_layers)
+    d = cfg.embed_dim
+    da, nh = cfg.d_attn, cfg.n_heads
+    layers = []
+    for i in range(cfg.n_attn_layers):
+        k1, k2, k3, k4 = jax.random.split(ks[2 + i], 4)
+        d_in = d if i == 0 else da * nh
+        s = d_in ** -0.5
+        layers.append({
+            "wq": (jax.random.normal(k1, (d_in, nh * da)) * s).astype(cfg.dtype),
+            "wk": (jax.random.normal(k2, (d_in, nh * da)) * s).astype(cfg.dtype),
+            "wv": (jax.random.normal(k3, (d_in, nh * da)) * s).astype(cfg.dtype),
+            "wres": (jax.random.normal(k4, (d_in, nh * da)) * s).astype(cfg.dtype),
+        })
+    d_out = cfg.n_fields * cfg.d_attn * cfg.n_heads
+    return {
+        "table": (jax.random.normal(ks[0], (cfg.total_vocab, d)) * 0.01
+                  ).astype(cfg.dtype),
+        "attn": layers,
+        "w_out": (jax.random.normal(ks[1], (d_out, 1)) * d_out ** -0.5
+                  ).astype(cfg.dtype),
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def autoint_specs(cfg: CTRConfig) -> dict:
+    layer = {"wq": P(None, "model"), "wk": P(None, "model"),
+             "wv": P(None, "model"), "wres": P(None, "model")}
+    return {"table": P("model", None),
+            "attn": [layer] * cfg.n_attn_layers,
+            "w_out": P(None, None), "bias": P()}
+
+
+def autoint_logits(params: dict, ids: jax.Array, cfg: CTRConfig) -> jax.Array:
+    gids = ids + field_offsets(cfg)[None, :]
+    h = embedding_lookup(params["table"], gids)            # [B, F, D]
+    for lp in params["attn"]:
+        b, f, _ = h.shape
+        q = (h @ lp["wq"]).reshape(b, f, cfg.n_heads, cfg.d_attn)
+        k = (h @ lp["wk"]).reshape(b, f, cfg.n_heads, cfg.d_attn)
+        v = (h @ lp["wv"]).reshape(b, f, cfg.n_heads, cfg.d_attn)
+        scores = jnp.einsum("bfnd,bgnd->bnfg", q, k) * cfg.d_attn ** -0.5
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(h.dtype)
+        o = jnp.einsum("bnfg,bgnd->bfnd", probs, v).reshape(b, f, -1)
+        h = jax.nn.relu(o + h @ lp["wres"])
+    out = h.reshape(ids.shape[0], -1) @ params["w_out"]
+    return (out[:, 0] + params["bias"]).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------ DIEN ---
+
+def init_dien(key: jax.Array, cfg: CTRConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d, g = cfg.embed_dim, cfg.gru_dim
+    s_d, s_g = d ** -0.5, g ** -0.5
+    def gru(k, d_in):
+        k1, k2 = jax.random.split(k)
+        return {
+            "wx": (jax.random.normal(k1, (d_in, 3 * g)) * d_in ** -0.5
+                   ).astype(cfg.dtype),
+            "wh": (jax.random.normal(k2, (g, 3 * g)) * s_g).astype(cfg.dtype),
+            "b": jnp.zeros((3 * g,), cfg.dtype),
+        }
+    mlp_dims = [g + 2 * d, *cfg.mlp_dims, 1]
+    ws, bs = _init_mlp(ks[3], mlp_dims, cfg.dtype)
+    return {
+        "table": (jax.random.normal(ks[0], (cfg.total_vocab, d)) * 0.01
+                  ).astype(cfg.dtype),
+        "gru1": gru(ks[1], d),
+        "augru": gru(ks[2], g),   # consumes gru1's hidden states
+        "w_attn": (jax.random.normal(ks[4], (g, d)) * s_g).astype(cfg.dtype),
+        "mlp_w": ws, "mlp_b": bs,
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def dien_specs(cfg: CTRConfig) -> dict:
+    # GRU params are tiny (3*108 wide, indivisible by the model axis):
+    # replicate them; the huge item table stays row-sharded.
+    gru = {"wx": P(None, None), "wh": P(None, None), "b": P(None)}
+    return {"table": P("model", None), "gru1": gru, "augru": gru,
+            "w_attn": P(None, None),
+            "mlp_w": [P(None, None)] * (len(cfg.mlp_dims) + 1),
+            "mlp_b": [P(None)] * (len(cfg.mlp_dims) + 1),
+            "bias": P()}
+
+
+def _gru_scan(x: jax.Array, p: dict, g: int, att: jax.Array | None = None,
+              unroll: bool = False) -> jax.Array:
+    """GRU (att=None) or AUGRU (att [B, S] scales the update gate).
+
+    x: [B, S, D] -> hidden states [B, S, G]."""
+    bsz = x.shape[0]
+
+    def cell(h, xs):
+        xt, at = xs
+        gx = xt @ p["wx"] + p["b"]
+        gh = h @ p["wh"]
+        r = jax.nn.sigmoid(gx[:, :g] + gh[:, :g])
+        z = jax.nn.sigmoid(gx[:, g:2 * g] + gh[:, g:2 * g])
+        n = jnp.tanh(gx[:, 2 * g:] + r * gh[:, 2 * g:])
+        z = z * at[:, None]                 # AUGRU gate (at=1 => plain GRU)
+        h = (1 - z) * h + z * n
+        return h, h
+
+    if att is None:
+        att = jnp.ones(x.shape[:2], x.dtype)
+    if unroll:
+        h = jnp.zeros((bsz, g), x.dtype)
+        ys = []
+        for t in range(x.shape[1]):
+            h, _ = cell(h, (x[:, t], att[:, t]))
+            ys.append(h)
+        return jnp.stack(ys, 1)
+    xs = (jnp.swapaxes(x, 0, 1), jnp.swapaxes(att, 0, 1))
+    _, ys = jax.lax.scan(cell, jnp.zeros((bsz, g), x.dtype), xs)
+    return jnp.swapaxes(ys, 0, 1)
+
+
+def dien_logits(params: dict, batch_ids: dict, cfg: CTRConfig) -> jax.Array:
+    """batch_ids: {"hist": [B, S] item ids (-1 pad), "target": [B]}."""
+    hist, target = batch_ids["hist"], batch_ids["target"]
+    mask = (hist >= 0)
+    emb_h = embedding_lookup(params["table"], jnp.maximum(hist, 0))
+    emb_h = jnp.where(mask[..., None], emb_h, 0)          # [B, S, D]
+    emb_t = embedding_lookup(params["table"], target)     # [B, D]
+    g = cfg.gru_dim
+    h1 = _gru_scan(emb_h, params["gru1"], g,
+                   unroll=cfg.unroll_scan)                # interest extract
+    att = jnp.einsum("bsg,gd,bd->bs", h1, params["w_attn"], emb_t)
+    att = jax.nn.softmax(jnp.where(mask, att, -1e30), -1).astype(h1.dtype)
+    h2 = _gru_scan(h1, params["augru"], g, att,
+                   unroll=cfg.unroll_scan)                # interest evolve
+    final = h2[:, -1]                                     # [B, G]
+    hist_mean = embedding_bag(params["table"], hist, "mean")
+    feat = jnp.concatenate([final, emb_t, hist_mean], -1)
+    out = _mlp(feat, params["mlp_w"], params["mlp_b"])[:, 0]
+    return (out + params["bias"]).astype(jnp.float32)
+
+
+# --------------------------------------------------------------- BERT4Rec --
+
+class Bert4RecConfig(NamedTuple):
+    name: str
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    dtype: any = jnp.float32
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        per_block = 4 * d * d + 8 * d * d + 4 * d   # attn + 4d FFN + norms
+        return self.n_items * d * 2 + self.seq_len * d \
+            + self.n_blocks * per_block
+
+
+def init_bert4rec(key: jax.Array, cfg: Bert4RecConfig) -> dict:
+    ks = jax.random.split(key, 3 + cfg.n_blocks)
+    d = cfg.embed_dim
+    s = d ** -0.5
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k1, k2, k3, k4, k5, k6 = jax.random.split(ks[3 + i], 6)
+        blocks.append({
+            "wq": (jax.random.normal(k1, (d, d)) * s).astype(cfg.dtype),
+            "wk": (jax.random.normal(k2, (d, d)) * s).astype(cfg.dtype),
+            "wv": (jax.random.normal(k3, (d, d)) * s).astype(cfg.dtype),
+            "wo": (jax.random.normal(k4, (d, d)) * s).astype(cfg.dtype),
+            "w1": (jax.random.normal(k5, (d, 4 * d)) * s).astype(cfg.dtype),
+            "w2": (jax.random.normal(k6, (4 * d, d)) * (4 * d) ** -0.5
+                   ).astype(cfg.dtype),
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+        })
+    return {
+        "items": (jax.random.normal(ks[0], (cfg.n_items, d)) * s
+                  ).astype(cfg.dtype),
+        "pos": (jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.02
+                ).astype(cfg.dtype),
+        "blocks": blocks,
+        "head": (jax.random.normal(ks[2], (cfg.n_items, d)) * s
+                 ).astype(cfg.dtype),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+
+
+def bert4rec_specs(cfg: Bert4RecConfig) -> dict:
+    # The encoder is TINY (d=64): tensor-parallel sharding it all-reduces
+    # [B, S, 64] activations per block (15.9 GB/dev measured at
+    # serve_bulk) to save KBs of weights.  Replicate the encoder; shard
+    # only the 1M-row item/head tables.  §Perf hillclimb 3.
+    block = {"wq": P(None, None), "wk": P(None, None),
+             "wv": P(None, None), "wo": P(None, None),
+             "w1": P(None, None), "w2": P(None, None),
+             "ln1": P(None), "ln2": P(None)}
+    return {"items": P("model", None), "pos": P(None, None),
+            "blocks": [block] * cfg.n_blocks,
+            "head": P("model", None), "final_norm": P(None)}
+
+
+def bert4rec_encode(params: dict, seq: jax.Array,
+                    cfg: Bert4RecConfig) -> jax.Array:
+    """seq: int32 [B, S] item ids (-1 pad) -> hidden [B, S, D].
+
+    Bidirectional attention (cloze objective) — the per-position hidden is
+    the LSS query against the item-catalogue WOL."""
+    mask = seq >= 0
+    x = params["items"][jnp.maximum(seq, 0)] + params["pos"][None]
+    x = jnp.where(mask[..., None], x, 0).astype(cfg.dtype)
+    nh = cfg.n_heads
+    d = cfg.embed_dim
+    hd = d // nh
+    for blk in params["blocks"]:
+        h = L.rms_norm(x, blk["ln1"])
+        b, s, _ = h.shape
+        q = (h @ blk["wq"]).reshape(b, s, nh, hd)
+        k = (h @ blk["wk"]).reshape(b, s, nh, hd)
+        v = (h @ blk["wv"]).reshape(b, s, nh, hd)
+        logits = jnp.einsum("bqnh,bknh->bnqk", q, k) * hd ** -0.5
+        logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(x.dtype)
+        o = jnp.einsum("bnqk,bknh->bqnh", probs, v).reshape(b, s, d)
+        x = x + o @ blk["wo"]
+        h = L.rms_norm(x, blk["ln2"])
+        x = x + jax.nn.gelu(h @ blk["w1"]) @ blk["w2"]
+    return L.rms_norm(x, params["final_norm"])
+
+
+def bert4rec_loss(params: dict, batch: dict, cfg: Bert4RecConfig) -> jax.Array:
+    """Cloze loss. batch: seq [B, S] (-1 pad), labels [B, S] (-1 = unmasked
+    position; >= 0 = the held-out item at a masked position)."""
+    hidden = bert4rec_encode(params, batch["seq"], cfg)
+    labels = batch["labels"]
+    mask = labels >= 0
+    logits = jnp.einsum("bsd,vd->bsv", hidden, params["head"]
+                        ).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               -1)[..., 0]
+    return ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def retrieval_scores(params: dict, user_hidden: jax.Array,
+                     candidates: jax.Array | None = None) -> jax.Array:
+    """Score a user embedding against the catalogue (the paper's WOL
+    setting verbatim).  candidates=None -> full [B, V] matmul (the
+    baseline LSS beats); ids [C] -> gathered scoring."""
+    head = params["head"]
+    if candidates is not None:
+        head = head[candidates]
+    return jnp.einsum("bd,vd->bv", user_hidden.astype(jnp.float32),
+                      head.astype(jnp.float32))

@@ -1,0 +1,98 @@
+"""The paper's own model families (§4, Appendix B.2).
+
+* Extreme classification: Embedding(bag) -> ReLU -> WOL.  Input is sparse
+  BoW (multi-hot token ids, padded with -1); the embedding layer is an
+  EmbeddingBag (mean) — built from take + mask like everything sparse in
+  this framework.
+* word2vec: same body with one-hot input (single center word id).
+
+The model exposes ``embed(params, x)`` — the layer-below-the-WOL
+embedding, i.e. the LSS query — separately from ``logits``/``loss``, so
+the LSS index plugs in without touching model code.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.utils.sharding import maybe_shard
+
+
+class XCConfig(NamedTuple):
+    name: str
+    input_dim: int        # BoW vocabulary
+    hidden: int           # 128 in the paper
+    output_dim: int       # WOL width (number of labels / vocab)
+    max_in: int = 64      # max active input features per sample
+    max_labels: int = 8   # max labels per sample (padded -1)
+    dtype: any = jnp.float32
+
+    def param_count(self) -> int:
+        return self.input_dim * self.hidden + \
+            self.output_dim * (self.hidden + 1)
+
+
+def init_params(key: jax.Array, cfg: XCConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    s1 = cfg.input_dim ** -0.5
+    s2 = cfg.hidden ** -0.5
+    return {
+        "embed": (jax.random.normal(k1, (cfg.input_dim, cfg.hidden)) * s1
+                  ).astype(cfg.dtype),
+        "w_out": (jax.random.normal(k2, (cfg.output_dim, cfg.hidden)) * s2
+                  ).astype(cfg.dtype),
+        "b_out": jnp.zeros((cfg.output_dim,), cfg.dtype),
+    }
+
+
+def param_specs(cfg: XCConfig) -> dict:
+    return {
+        "embed": P("model", None),   # input vocab sharded
+        "w_out": P("model", None),   # WOL rows sharded (LSS shards match)
+        "b_out": P("model"),
+    }
+
+
+def embed(params: dict, x_ids: jax.Array) -> jax.Array:
+    """EmbeddingBag(mean) + ReLU.  x_ids: int32 ``[B, max_in]``, -1 pad.
+
+    This is the LSS query embedding (the paper collects it right before
+    the WOL).
+    """
+    mask = (x_ids >= 0)[..., None]
+    rows = params["embed"][jnp.maximum(x_ids, 0)]         # [B, F, H]
+    denom = jnp.maximum(mask.sum(1), 1).astype(rows.dtype)
+    bag = jnp.where(mask, rows, 0).sum(1) / denom
+    return jax.nn.relu(bag)
+
+
+def logits(params: dict, x_ids: jax.Array) -> jax.Array:
+    h = embed(params, x_ids)
+    h = maybe_shard(h, P("data", None))
+    out = jnp.einsum("bh,vh->bv", h, params["w_out"]) + params["b_out"]
+    return out.astype(jnp.float32)
+
+
+def loss(params: dict, batch: dict, cfg: XCConfig) -> jax.Array:
+    """Multi-label softmax CE (uniform over the true labels), the standard
+    XMC training loss.  batch: x [B, max_in], labels [B, max_labels]."""
+    lg = logits(params, batch["x"])
+    labels = batch["labels"]
+    mask = labels >= 0
+    logz = jax.nn.logsumexp(lg, axis=-1, keepdims=True)
+    # shardable multi-label gold logits: one iota-mask pass per label slot
+    iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
+    gold = jnp.stack(
+        [jnp.sum(jnp.where(iota == jnp.maximum(labels[:, j:j + 1], 0),
+                           lg, 0), axis=-1)
+         for j in range(labels.shape[1])], axis=-1)
+    nll = -(gold - logz) * mask
+    return (nll.sum(-1) / jnp.maximum(mask.sum(-1), 1)).mean()
+
+
+def predict_topk(params: dict, x_ids: jax.Array, k: int = 5) -> jax.Array:
+    return jax.lax.top_k(logits(params, x_ids), k)[1]

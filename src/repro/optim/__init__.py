@@ -1,0 +1,9 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm)
+from repro.optim.schedules import (constant_schedule, cosine_schedule,
+                                   linear_warmup_cosine)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "constant_schedule", "cosine_schedule", "linear_warmup_cosine",
+]

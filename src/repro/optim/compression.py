@@ -1,0 +1,88 @@
+"""Cross-pod gradient compression: int8 + error feedback.
+
+On a multi-pod mesh the 'pod' axis crosses data-center interconnect
+(~10x slower than ICI).  The standard trick (1-bit Adam / error-feedback
+SGD lineage): keep in-pod reductions full-precision, quantize only the
+cross-pod exchange, and carry the quantization error into the next step
+so the compression is unbiased over time.
+
+    g_pod      = in-pod mean grad           (full precision, fast links)
+    q, scale   = quantize_int8(g_pod + err)
+    g_global   = dequant(all_reduce_over_pods(q))
+    err'       = (g_pod + err) - dequant(q)
+
+Implemented as pure functions usable inside a pjit'd train step via
+shard_map over the 'pod' axis; per-tensor block scales keep the quant
+error small (block = last axis rows).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum",
+           "init_error_state"]
+
+_BLOCK = 256
+
+
+def _blocked(x: jax.Array) -> jax.Array:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    return jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK)
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8. Returns (q [nb, B] int8, scale [nb] f32)."""
+    blocks = _blocked(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape: tuple,
+                    dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(grads: Any, err: Any, axis_name: str
+                    ) -> tuple[Any, Any]:
+    """Error-feedback int8 mean-all-reduce over ``axis_name``.
+
+    Call INSIDE shard_map where ``axis_name`` maps to the pod axis.
+    Returns (global grads, new error state).  Traffic: 1 byte/element
+    + 4/256 for scales vs 4 bytes/element uncompressed (~3.9x).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        deq_local = dequantize_int8(q, scale, g.shape, jnp.float32)
+        new_err = corrected - deq_local
+        # exchange int8 payloads + tiny scales (the 1-byte/elt wire format;
+        # ~8x less DCI traffic than an fp32 ring all-reduce), dequantize
+        # each pod's contribution locally, mean.
+        q_all = jax.lax.all_gather(q, axis_name)              # [n, nb, B] i8
+        s_all = jax.lax.all_gather(scale, axis_name)          # [n, nb]
+        deq = jnp.sum(q_all.astype(jnp.float32) * s_all[..., None], axis=0)
+        flat = deq.reshape(-1)[: corrected.size].reshape(g.shape)
+        return (flat / n).astype(g.dtype), new_err
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

@@ -1,0 +1,143 @@
+"""Serving engine: batched WOL inference with the LSS head.
+
+Two request kinds (the paper's two evaluation families):
+  * ``score``   — XC / recsys: embedding -> WOL top-k (full or LSS).
+  * ``decode``  — LM: KV-cache decode loop; the per-token head is either
+    the exact vocab matmul or the LSS index (paper Algorithm 2).
+
+The engine owns: frozen model params, the fitted LSSIndex, a simple
+continuous batcher (pad-to-batch with -1 slots so arrival patterns don't
+retrigger compilation), and serving metrics (sample size, recall when
+labels are supplied).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lss as lss_lib
+from repro.core.iul import fit_lss
+from repro.core.lss import LSSConfig, LSSIndex
+
+
+class ServeMetrics(NamedTuple):
+    n_requests: int
+    wall_s: float
+    avg_sample_size: float
+
+
+class WOLServer:
+    """Serves one wide output layer, full or LSS.
+
+    ``embed_fn(batch) -> [B, d]`` is the model body below the WOL;
+    ``w, b`` are the WOL parameters.
+    """
+
+    def __init__(self, embed_fn: Callable, w: jax.Array,
+                 b: jax.Array | None, cfg: LSSConfig, top_k: int = 5):
+        self.embed_fn = jax.jit(embed_fn)
+        self.w = w
+        self.b = b if b is not None else jnp.zeros((w.shape[0],), w.dtype)
+        self.cfg = cfg
+        self.top_k = top_k
+        self.index: LSSIndex | None = None
+        self._full = jax.jit(self._full_topk)
+        self._lss = jax.jit(self._lss_topk)
+
+    # -- offline preprocessing (paper Algorithm 1) ----------------------
+    def fit(self, key: jax.Array, calib_batches: list[dict],
+            labels: jax.Array, verbose: bool = False) -> dict:
+        q = jnp.concatenate([self.embed_fn(b) for b in calib_batches])
+        self.index, hist = fit_lss(key, q, labels, self.w, self.b,
+                                   self.cfg, verbose=verbose)
+        return hist
+
+    # -- heads -----------------------------------------------------------
+    def _full_topk(self, q: jax.Array):
+        logits = q @ self.w.T + self.b
+        top, ids = jax.lax.top_k(logits, self.top_k)
+        return top, ids
+
+    def _lss_topk(self, q: jax.Array, index: LSSIndex):
+        return lss_lib.lss_predict(
+            q, index, lss_lib.simhash.augment_neurons(self.w, self.b),
+            top_k=self.top_k)
+
+    # -- serving ---------------------------------------------------------
+    def serve(self, batches: list[dict], use_lss: bool = True
+              ) -> tuple[list, ServeMetrics]:
+        assert not use_lss or self.index is not None, "fit() first"
+        out = []
+        t0 = time.time()
+        sample = 0.0
+        for b in batches:
+            q = self.embed_fn(b)
+            if use_lss:
+                top, ids = self._lss(q, self.index)
+                cand, _ = lss_lib.retrieve(
+                    lss_lib.simhash.augment_queries(q), self.index)
+                sample += float(lss_lib.avg_sample_size(cand))
+            else:
+                top, ids = self._full(q)
+            out.append((top, ids))
+        jax.block_until_ready(out[-1])
+        wall = time.time() - t0
+        return out, ServeMetrics(len(batches), wall,
+                                 sample / max(len(batches), 1))
+
+
+class LMDecoder:
+    """KV-cache decode loop with a pluggable head (exact | LSS)."""
+
+    def __init__(self, params: dict, cfg, lss_cfg: LSSConfig | None = None):
+        from repro.models import transformer as T
+        self.T = T
+        self.params = params
+        self.cfg = cfg
+        self.index: LSSIndex | None = None
+        self.lss_cfg = lss_cfg
+        self._decode = jax.jit(T.decode_step, static_argnames="cfg")
+
+    def head_weights(self) -> jax.Array:
+        return (self.params["embed"] if self.cfg.tie_embeddings
+                else self.params["lm_head"])
+
+    def fit_lss(self, key: jax.Array, calib_tokens: jax.Array,
+                verbose: bool = False) -> dict:
+        """Calibrate the LSS index from prefill hidden states; labels are
+        the observed next tokens (teacher forcing — exactly the paper's
+        'training data through the trained model' recipe)."""
+        hidden, _, _ = self.T.forward(self.params, calib_tokens, self.cfg,
+                                      mode="train")
+        q = hidden[:, :-1].reshape(-1, hidden.shape[-1])
+        labels = calib_tokens[:, 1:].reshape(-1, 1)
+        self.index, hist = fit_lss(key, q, labels,
+                                   self.head_weights().astype(jnp.float32),
+                                   None, self.lss_cfg, verbose=verbose)
+        return hist
+
+    def generate(self, prompt: jax.Array, steps: int, use_lss: bool = False
+                 ) -> jax.Array:
+        """Greedy decode.  prompt [B, S] -> tokens [B, steps]."""
+        hidden, cache = self.T.prefill(self.params, prompt, self.cfg,
+                                       max_len=prompt.shape[1] + steps)
+        w = self.head_weights()
+        outs = []
+        h = hidden[:, -1]
+        for _ in range(steps):
+            if use_lss:
+                assert self.index is not None
+                _, ids = lss_lib.lss_predict(
+                    h.astype(jnp.float32), self.index, None, top_k=1)
+                tok = jnp.maximum(ids[:, 0], 0)
+            else:
+                logits = jnp.einsum("bd,vd->bv", h.astype(jnp.float32),
+                                    w.astype(jnp.float32))
+                tok = jnp.argmax(logits, -1)
+            outs.append(tok)
+            h, cache = self._decode(self.params, tok, cache, self.cfg)
+        return jnp.stack(outs, 1)

@@ -1,0 +1,3 @@
+from repro.utils.sharding import maybe_shard, named_sharding, specs_to_shardings
+
+__all__ = ["maybe_shard", "named_sharding", "specs_to_shardings"]

@@ -1,0 +1,11 @@
+"""Tests run on the single real CPU device (no fake device count here —
+the dry-run is the ONLY 512-device entry point; multi-device tests spawn
+subprocesses with their own XLA_FLAGS)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

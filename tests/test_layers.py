@@ -1,0 +1,108 @@
+"""Attention (GQA, blockwise, decode), RoPE, norms, MoE dispatch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models.moe import (MoEConfig, dispatch_indices, init_moe_params,
+                              moe_ffn, moe_ffn_dense_oracle)
+
+
+@pytest.mark.parametrize("kv,qc,kc", [(4, None, 16), (2, 16, 16),
+                                      (1, 32, 24), (4, 64, 64)])
+def test_blockwise_matches_naive(kv, qc, kc):
+    key = jax.random.PRNGKey(0)
+    b, s, n, h = 2, 64, 4, 16
+    q = jax.random.normal(key, (b, s, n, h))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, h))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, h))
+    for causal in (True, False):
+        ref = L.attention_naive(q, k, v, causal=causal)
+        out = L.attention_blockwise(q, k, v, causal=causal, kv_chunk=kc,
+                                    q_chunk=qc)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_naive_last_position():
+    key = jax.random.PRNGKey(3)
+    b, s, n, kv, h = 2, 33, 4, 2, 16
+    q = jax.random.normal(key, (b, s, n, h))
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, s, kv, h))
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, s, kv, h))
+    ref = L.attention_naive(q, k, v, causal=True)
+    # decode: last query against padded cache of length 48
+    pad = 48 - s
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = L.attention_decode(q[:, -1:], kc, vc, kv_len=s)
+    np.testing.assert_allclose(np.asarray(ref[:, -1:]), np.asarray(out),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relative_position():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 8, 2, 32))
+    pos = jnp.arange(8)[None]
+    y = L.apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+    def ip(pq, pk):
+        rq = L.apply_rope(q, jnp.array([[pq]]))
+        rk = L.apply_rope(k, jnp.array([[pk]]))
+        return float(jnp.sum(rq * rk))
+    assert abs(ip(0, 5) - ip(7, 12)) < 1e-3
+
+
+def test_rms_norm():
+    x = jnp.array([[1.0, 2.0, 3.0, 4.0]])
+    y = L.rms_norm(x, jnp.ones(4))
+    rms = float(jnp.sqrt(jnp.mean(x ** 2)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) / rms, rtol=1e-5)
+
+
+# ------------------------------------------------------------------- MoE --
+
+def test_dispatch_indices_capacity_and_order():
+    top_e = jnp.array([[0, 1], [0, 1], [0, 2], [0, 2]])    # expert 0: 4x
+    pos, keep = dispatch_indices(top_e, n_experts=4, capacity=2)
+    posn, keepn = np.asarray(pos), np.asarray(keep)
+    # expert 0 gets exactly 2 kept slots (first-come by stable sort)
+    e0 = [i for i in range(8) if i % 2 == 0]
+    kept0 = [i for i in e0 if keepn[i]]
+    assert len(kept0) == 2 and kept0 == [0, 2]
+    assert sorted(posn[kept0].tolist()) == [0, 1]
+    # every kept position is unique
+    kept_pos = posn[keepn]
+    assert len(set(kept_pos.tolist())) == len(kept_pos)
+
+
+def test_moe_matches_dense_oracle_with_big_capacity():
+    key = jax.random.PRNGKey(0)
+    cfg = MoEConfig(n_experts=6, top_k=2, d_model=16, d_ff=32,
+                    n_experts_padded=8, capacity_factor=8.0)
+    params = init_moe_params(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (40, 16))
+    out, aux = moe_ffn(x, params, cfg)
+    want = moe_ffn_dense_oracle(x, params, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0
+
+
+def test_moe_padded_experts_never_routed():
+    key = jax.random.PRNGKey(0)
+    cfg = MoEConfig(n_experts=3, top_k=2, d_model=8, d_ff=16,
+                    n_experts_padded=4, capacity_factor=8.0)
+    params = init_moe_params(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
+    from repro.models.moe import router_topk
+    top_e, _, _ = router_topk(x, params["router"], cfg)
+    assert int(top_e.max()) < 3

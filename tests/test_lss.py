@@ -1,0 +1,91 @@
+"""Retrieval, dedup, sparse logits, prediction, metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simhash
+from repro.core.lss import (LSSConfig, avg_sample_size, build_index,
+                            dedup_mask, label_recall, lss_predict,
+                            precision_at_k, retrieve, sparse_logits_bucketed,
+                            sparse_logits_gather)
+
+
+def _setup(m=200, d=16, n=32, k=3, l=2, seed=0, bucket_major=True):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (m, d))
+    q = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, d))
+    cfg = LSSConfig(k_bits=k, n_tables=l, use_bucket_major=bucket_major)
+    w_aug = simhash.augment_neurons(w, None)
+    theta = simhash.init_hyperplanes(jax.random.PRNGKey(seed + 2),
+                                     d + 1, k, l)
+    index = build_index(w_aug, theta, cfg)
+    return w, q, w_aug, index
+
+
+def test_retrieve_returns_bucket_mates():
+    w, q, w_aug, index = _setup()
+    q_aug = simhash.augment_queries(q)
+    cand, buckets = retrieve(q_aug, index)
+    t = index.tables
+    qb = np.asarray(simhash.bucket_ids(q_aug, index.theta, t.k_bits,
+                                       t.n_tables))
+    ids = np.asarray(t.table_ids)
+    c = np.asarray(cand).reshape(q.shape[0], t.n_tables, t.capacity)
+    for i in range(q.shape[0]):
+        for tt in range(t.n_tables):
+            np.testing.assert_array_equal(c[i, tt], ids[tt, qb[i, tt]])
+
+
+def test_gather_and_bucketed_logits_agree():
+    w, q, w_aug, index = _setup()
+    q_aug = simhash.augment_queries(q)
+    cand, buckets = retrieve(q_aug, index)
+    lg = sparse_logits_gather(q_aug, w_aug, cand)
+    lb, ids = sparse_logits_bucketed(q_aug, index, buckets)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(cand))
+    mask = np.asarray(cand) >= 0
+    np.testing.assert_allclose(np.asarray(lg)[mask], np.asarray(lb)[mask],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lss_predict_equals_exact_over_candidates():
+    """Top-k inside the retrieved set must equal brute force over the
+    same set (incl. dedup semantics)."""
+    w, q, w_aug, index = _setup(seed=3)
+    q_aug = simhash.augment_queries(q)
+    cand, _ = retrieve(q_aug, index)
+    top_l, top_i = lss_predict(q, index, w_aug, top_k=3)
+    full = np.asarray(q_aug @ w_aug.T)
+    candn = np.asarray(cand)
+    for i in range(q.shape[0]):
+        uniq = sorted(set(x for x in candn[i] if x >= 0),
+                      key=lambda j: -full[i, j])
+        want = uniq[:3]
+        got = [x for x in np.asarray(top_i[i]) if x >= 0]
+        assert got == want[:len(got)] and len(got) == min(3, len(uniq))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_dedup_mask_properties(seed):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(-1, 10, size=(4, 16)).astype(np.int32)
+    mask = np.asarray(dedup_mask(jnp.asarray(ids)))
+    for b in range(4):
+        kept = ids[b][mask[b]]
+        assert len(kept) == len(set(kept.tolist()))          # unique
+        assert (kept >= 0).all()                             # no padding
+        assert set(kept.tolist()) == set(x for x in ids[b] if x >= 0)
+
+
+def test_metrics():
+    pred = jnp.array([[3, 1, 2], [0, 5, 4]])
+    labels = jnp.array([[3, 9], [4, -1]])
+    assert float(precision_at_k(pred, labels, 1)) == 0.5
+    p5 = float(precision_at_k(pred, labels, 3))
+    assert abs(p5 - (1 / 3 + 1 / 3) / 2) < 1e-6
+    cand = jnp.array([[3, 9, 9, -1], [1, 2, 3, 4]])
+    assert float(label_recall(cand, labels)) == (2 + 1) / 3
+    assert float(avg_sample_size(cand)) == (2 + 4) / 2

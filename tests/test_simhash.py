@@ -1,0 +1,85 @@
+"""SimHash primitives: unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simhash
+
+
+def test_pack_bits_roundtrip_exhaustive():
+    k, l = 4, 3
+    n = 2 ** (k * l)
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, size=(64, k * l)).astype(bool)
+    ids = simhash.pack_bits(jnp.asarray(bits), k, l)
+    assert ids.shape == (64, l)
+    # manual pack
+    want = np.zeros((64, l), np.int32)
+    for t in range(l):
+        for j in range(k):
+            want[:, t] += bits[:, t * k + j] << j
+    np.testing.assert_array_equal(np.asarray(ids), want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 4), st.integers(2, 33))
+def test_bucket_ids_in_range(k, l, d):
+    key = jax.random.PRNGKey(k * 100 + l * 10 + d)
+    x = jax.random.normal(key, (16, d))
+    theta = simhash.init_hyperplanes(key, d, k, l)
+    ids = simhash.bucket_ids(x, theta, k, l)
+    assert ids.shape == (16, l)
+    assert (ids >= 0).all() and (ids < 2 ** k).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.1, 100.0))
+def test_hash_scale_invariance(scale):
+    """sign(theta^T x) must not change under positive scaling of x."""
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (32, 16))
+    theta = simhash.init_hyperplanes(jax.random.PRNGKey(8), 16, 4, 2)
+    a = simhash.bucket_ids(x, theta, 4, 2)
+    b = simhash.bucket_ids(x * scale, theta, 4, 2)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_collision_probability_matches_angle():
+    """SimHash theory: P(bit collision) = 1 - angle/pi (sanity, 1 bit)."""
+    key = jax.random.PRNGKey(0)
+    d = 64
+    x = jax.random.normal(key, (1, d))
+    # construct y at a known angle ~60 degrees
+    y = 0.5 * x + (3 ** 0.5 / 2) * jax.random.normal(jax.random.PRNGKey(1),
+                                                     (1, d))
+    cos = jnp.sum(x * y) / (jnp.linalg.norm(x) * jnp.linalg.norm(y))
+    angle = float(jnp.arccos(jnp.clip(cos, -1, 1)))
+    theta = simhash.init_hyperplanes(jax.random.PRNGKey(2), d, 1, 4096)
+    bx = simhash.hash_bits(x, theta)
+    by = simhash.hash_bits(y, theta)
+    p = float(jnp.mean(bx == by))
+    assert abs(p - (1 - angle / np.pi)) < 0.05
+
+
+def test_augment():
+    w = jnp.ones((3, 4))
+    b = jnp.arange(3.0)
+    wa = simhash.augment_neurons(w, b)
+    assert wa.shape == (3, 5)
+    np.testing.assert_array_equal(np.asarray(wa[:, -1]), np.arange(3.0))
+    q = simhash.augment_queries(jnp.ones((2, 4)))
+    assert q.shape == (2, 5) and float(q[:, -1].sum()) == 0.0
+
+
+def test_soft_codes_gradient_nonzero():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 16)) * 10.0   # large norm: would
+    theta = simhash.init_hyperplanes(key, 16, 4, 1)  # saturate w/o _unit
+
+    def loss(th):
+        return jnp.sum(simhash.soft_codes(x, th) ** 2)
+
+    g = jax.grad(loss)(theta)
+    assert float(jnp.abs(g).max()) > 1e-4

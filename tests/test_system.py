@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline on a miniature problem: train the paper's XC model on
+topic-structured data -> fit LSS (Algorithm 1) -> serve (Algorithm 2)
+and check the paper's qualitative claims hold:
+  (1) LSS accuracy ~ full accuracy at a small sample size,
+  (2) the learned index retrieves labels better than random SimHash,
+  (3) retrieval compute/query shrinks by >5x vs full inference.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import simhash
+from repro.core.iul import fit_lss
+from repro.core.lss import (LSSConfig, avg_sample_size, build_index,
+                            label_recall, lss_predict, precision_at_k,
+                            retrieve)
+from repro.data.pipeline import ShardedBatchIterator
+from repro.data.synthetic import xc_dataset
+from repro.models import xc
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def test_paper_pipeline_end_to_end():
+    cfg = xc.XCConfig("sys", input_dim=4000, hidden=48, output_dim=2000,
+                      max_in=24, max_labels=4)
+    data = xc_dataset(5, 1536, cfg.input_dim, cfg.output_dim, n_topics=32,
+                      max_in=cfg.max_in, max_labels=cfg.max_labels)
+    tc = TrainConfig(lr=5e-3, warmup_steps=20, total_steps=220,
+                     weight_decay=0.0, ckpt_every=10 ** 9)
+    tr = Trainer(lambda p, b: xc.loss(p, b, cfg),
+                 lambda k: xc.init_params(k, cfg), tc)
+    it = ShardedBatchIterator({"x": data.x, "labels": data.labels}, 256)
+    state, hist = tr.fit(jax.random.PRNGKey(0), it, 220, log_every=10 ** 9)
+    assert hist[-1]["loss"] < 7.0                      # learned something
+    params = state.params
+
+    n_test = 256
+    q_all = xc.embed(params, jnp.asarray(data.x))
+    q_tr, q_te = q_all[n_test:], q_all[:n_test]
+    lab = jnp.asarray(data.labels)
+    w = params["w_out"].astype(jnp.float32)
+    b = params["b_out"].astype(jnp.float32)
+
+    lss_cfg = LSSConfig(k_bits=3, n_tables=2, iul_epochs=6,
+                        iul_inner_steps=8, iul_lr=0.02)
+    index, _ = fit_lss(jax.random.PRNGKey(1), q_tr, lab[n_test:], w, b,
+                       lss_cfg)
+
+    # (2) learned beats random SimHash on label recall
+    theta0 = simhash.init_hyperplanes(jax.random.PRNGKey(9),
+                                      cfg.hidden + 1, lss_cfg.k_bits,
+                                      lss_cfg.n_tables)
+    idx0 = build_index(simhash.augment_neurons(w, b), theta0, lss_cfg)
+    q_aug = simhash.augment_queries(q_te)
+    rec_learned = float(label_recall(retrieve(q_aug, index)[0],
+                                     lab[:n_test]))
+    rec_random = float(label_recall(retrieve(q_aug, idx0)[0],
+                                    lab[:n_test]))
+    assert rec_learned > rec_random, (rec_learned, rec_random)
+
+    # (1) LSS accuracy close to full at a fraction of the neurons
+    full_p1 = float(precision_at_k(
+        jax.lax.top_k(q_te @ w.T + b, 5)[1], lab[:n_test], 1))
+    _, ids = lss_predict(q_te, index, None, top_k=5)
+    lss_p1 = float(precision_at_k(ids, lab[:n_test], 1))
+    assert lss_p1 > 0.5 * full_p1, (lss_p1, full_p1)
+
+    # (3) compute reduction
+    sample = float(avg_sample_size(retrieve(q_aug, index)[0]))
+    assert sample < cfg.output_dim / 5, sample

@@ -1,0 +1,76 @@
+"""Bucket-major table construction vs a naive Python dict-of-lists."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simhash
+from repro.core.tables import bucket_load_stats, build_tables, \
+    bucketize_weights
+
+
+def _naive_tables(buckets: np.ndarray, n_buckets: int, cap: int):
+    """buckets: [m, L] -> list of L dicts bucket->list(neurons), truncated
+    in first-come order (matches the stable-sort build)."""
+    m, l = buckets.shape
+    out = []
+    for t in range(l):
+        d = {b: [] for b in range(n_buckets)}
+        for i in range(m):
+            d[int(buckets[i, t])].append(i)
+        out.append({b: v[:cap] for b, v in d.items()})
+    return out
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(20, 200),
+       st.integers(2, 17))
+def test_table_matches_naive(k, l, m, cap):
+    key = jax.random.PRNGKey(m)
+    w = jax.random.normal(key, (m, 8))
+    theta = simhash.init_hyperplanes(jax.random.PRNGKey(1), 8, k, l)
+    tables = build_tables(w, theta, k, l, cap)
+    buckets = np.asarray(simhash.bucket_ids(w, theta, k, l))
+    naive = _naive_tables(buckets, 2 ** k, cap)
+    ids = np.asarray(tables.table_ids)
+    for t in range(l):
+        for b in range(2 ** k):
+            got = sorted(x for x in ids[t, b] if x >= 0)
+            assert got == sorted(naive[t][b]), (t, b)
+    # every neuron appears at most once per table; drops accounted
+    for t in range(l):
+        flat = ids[t][ids[t] >= 0]
+        assert len(flat) == len(set(flat.tolist()))
+        assert len(flat) + int(tables.n_dropped[t]) == m
+
+
+def test_bucketize_weights_layout():
+    key = jax.random.PRNGKey(0)
+    m, d = 50, 8
+    w = jax.random.normal(key, (m, d))
+    theta = simhash.init_hyperplanes(jax.random.PRNGKey(1), d, 3, 2)
+    tables = build_tables(w, theta, 3, 2, 16)
+    wb = bucketize_weights(w, tables)
+    assert wb.shape == (2, 8, 16, d)
+    ids = np.asarray(tables.table_ids)
+    wbn = np.asarray(wb)
+    wn = np.asarray(w)
+    for t in (0, 1):
+        for b in range(8):
+            for s in range(16):
+                nid = ids[t, b, s]
+                if nid >= 0:
+                    np.testing.assert_allclose(wbn[t, b, s], wn[nid])
+                else:
+                    assert np.all(wbn[t, b, s] == 0)
+
+
+def test_load_stats():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (100, 8))
+    theta = simhash.init_hyperplanes(jax.random.PRNGKey(1), 8, 2, 1)
+    tables = build_tables(w, theta, 2, 1, 10)   # 4 buckets cap 10 -> drops
+    stats = jax.tree.map(float, bucket_load_stats(tables))
+    assert stats["overflow_frac"] > 0.3         # 100 into 40 slots
+    assert stats["max_bucket_occupancy"] <= 10

@@ -1,0 +1,12 @@
+"""Benchmark package.  Falls back to the in-repo ``src/`` layout when the
+package is not pip-installed, so ``python -m benchmarks.run`` works from a
+bare checkout."""
+
+import os
+import sys
+
+try:
+    import repro                                         # noqa: F401
+except ImportError:                                      # bare checkout
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                    "src"))

@@ -32,7 +32,8 @@ from repro.models import lstm as lstm_mod
 from repro.models import xc as xc_mod
 from repro.train.trainer import TrainConfig, Trainer
 
-FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+# fast is the default across benchmarks; BENCH_FAST=0 runs full size
+FAST = os.environ.get("BENCH_FAST", "1") != "0"
 
 
 class Row(NamedTuple):

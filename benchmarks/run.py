@@ -1,9 +1,10 @@
-"""Benchmark entry point: one section per paper table/figure + the
-kernel microbench + the roofline table from the dry-run artifacts.
+"""Benchmark entry point: the serving benchmark (BENCH_serve.json
+artifact) + one section per paper table/figure + the kernel microbench +
+the roofline table from the dry-run artifacts.
 
 Prints ``name,us_per_call,derived`` CSV rows (one per method x dataset).
-Env: BENCH_FAST=1 for a quick pass; BENCH_SKIP_TABLES=1 to only run
-kernels + roofline summary.
+Env: BENCH_FAST=0 for the full pass (fast is the default); BENCH_SKIP_TABLES=1
+to only run serving + kernels + roofline summary.
 """
 
 from __future__ import annotations
@@ -60,8 +61,24 @@ def roofline_summary() -> list[str]:
     return rows
 
 
+def bench_serving_rows() -> list[str]:
+    """Unified-engine serving bench; writes BENCH_serve.json first so the
+    artifact lands even if a later section is interrupted."""
+    from benchmarks.serve_bench import bench_serving, write_artifact
+    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    rec = bench_serving(fast=fast)
+    write_artifact(rec)
+    return [
+        f"serve_m{r['m']}_{r['head']},{r['us_per_query']:.1f},"
+        f"rps={r['req_per_s']};sample={r['avg_sample_size']:.0f};"
+        f"speedup={r['speedup_vs_full']}"
+        for r in rec["rows"]
+    ]
+
+
 def main() -> None:
     rows = []
+    rows += bench_serving_rows()
     rows += bench_kernels()
     if not os.environ.get("BENCH_SKIP_TABLES"):
         from benchmarks.paper_tables import (fig2_collision_curves,

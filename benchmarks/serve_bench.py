@@ -1,0 +1,111 @@
+"""Serving benchmark: full vs LSS vs sharded-LSS on synthetic WOLs.
+
+Measures us/query and req/s through the unified serving engine
+(``repro.serve.engine.Engine``) for wide output layers of 50k-500k
+classes, and writes the ``BENCH_serve.json`` artifact consumed by CI.
+
+The LSS index here is SimHash-initialised (``fit_random``) — retrieval
+*speed* is independent of whether the hyperplanes were IUL-trained, and
+skipping Algorithm 1 keeps the benchmark CPU-friendly.  K is sized so the
+expected candidate set is ~1k neurons regardless of m, which is exactly
+the regime where the paper reports its ~5x win over the exact head.
+
+Env: BENCH_FAST=1 (default when run via benchmarks.run) shrinks sizes
+and iteration counts; BENCH_SERVE_OUT overrides the artifact path.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lss import LSSConfig
+from repro.serve.engine import Engine
+
+D_MODEL = 64
+BATCH = 128
+TOP_K = 10
+TARGET_SAMPLE = 1024           # aim ~1k candidates per query
+
+
+def _lss_cfg(m: int) -> LSSConfig:
+    k_bits = max(4, math.ceil(math.log2(max(2 * m / TARGET_SAMPLE, 2))))
+    # gather path: the bucket-major slab for m=500k would be ~250MB; the
+    # gather layout keeps the benchmark inside CI memory.
+    return LSSConfig(k_bits=k_bits, n_tables=1, use_bucket_major=False)
+
+
+def _time_head(eng: Engine, q, head: str, iters: int) -> float:
+    out = eng.rank(q, head=head, record=False)           # warm/compile
+    jax.block_until_ready(out.logits)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = eng.rank(q, head=head, record=False)
+        jax.block_until_ready(out.logits)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_serving(fast: bool = True) -> dict:
+    sizes = (50_000, 500_000) if fast else (50_000, 200_000, 500_000)
+    rows = []
+    for m in sizes:
+        w = jax.random.normal(jax.random.PRNGKey(0), (m, D_MODEL),
+                              jnp.float32)
+        q = jax.random.normal(jax.random.PRNGKey(1), (BATCH, D_MODEL),
+                              jnp.float32)
+        eng = Engine(None, w, None, _lss_cfg(m), top_k=TOP_K,
+                     buckets=(BATCH,))
+        eng.fit_random(jax.random.PRNGKey(2))
+        full_us = None
+        for head in ("full", "lss", "lss-sharded"):
+            iters = (2 if fast else 5) if head == "full" \
+                else (20 if fast else 50)
+            dt = _time_head(eng, q, head, iters)
+            us = dt / BATCH * 1e6
+            sample = float(eng.rank(q, head=head,
+                                    record=False).sample_size.mean())
+            if head == "full":
+                full_us = us
+            rows.append({
+                "m": m, "head": head, "batch": BATCH, "d": D_MODEL,
+                "k_bits": eng.lss_cfg.k_bits, "top_k": TOP_K,
+                "us_per_query": round(us, 2),
+                "req_per_s": round(BATCH / dt, 1),
+                "avg_sample_size": round(sample, 1),
+                "speedup_vs_full": round(full_us / us, 2),
+            })
+    return {
+        "bench": "serve",
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "fast": fast,
+        "rows": rows,
+    }
+
+
+def write_artifact(record: dict, path: str | None = None) -> str:
+    path = path or os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return path
+
+
+def main() -> None:
+    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    rec = bench_serving(fast=fast)
+    path = write_artifact(rec)
+    print(f"wrote {path}")
+    for r in rec["rows"]:
+        print(f"  m={r['m']:>7} {r['head']:<11} "
+              f"{r['us_per_query']:>9.1f} us/q  {r['req_per_s']:>9.0f} rps  "
+              f"sample={r['avg_sample_size']:>8.0f}  "
+              f"speedup={r['speedup_vs_full']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,12 @@
-"""Serving example: batched LM decoding with the LSS head vs the exact
-vocab head — the paper's technique as a first-class serving feature.
+"""Serving example: the unified engine end to end on both request kinds.
 
-A small decoder-only LM (qwen2-family reduced config) is trained briefly
-on synthetic topic LM data, then served through serve.engine.LMDecoder:
-prefill -> per-token decode -> head (exact | LSS).  Reports tokens/s and
-top-1 agreement between the two heads.
+1. Score path — an Engine over a trained-ish XC model: requests arrive
+   one by one (``submit``), the continuous micro-batcher coalesces them
+   into bucketed batches, and ``metrics()`` reports latency percentiles,
+   throughput, sample size, and label recall from the single retrieval
+   pass.
+2. Decode path — a small decoder-only LM served through ``LMDecoder``
+   (same Engine underneath): exact vs LSS head, tokens/s and agreement.
 
 Run:  PYTHONPATH=src python examples/serve_lss.py
 """
@@ -13,17 +15,55 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.reduced import reduced_model_cfg
 from repro.core.lss import LSSConfig
 from repro.data.pipeline import ShardedBatchIterator
-from repro.data.synthetic import lm_dataset
+from repro.data.synthetic import lm_dataset, xc_dataset
 from repro.models import transformer as T
-from repro.serve.engine import LMDecoder
+from repro.models import xc
+from repro.serve.engine import Engine, LMDecoder
 from repro.train.trainer import TrainConfig, Trainer
 
 
-def main() -> None:
+def score_path() -> None:
+    print("== score path: Engine.submit / flush / metrics ==")
+    cfg = xc.XCConfig("t", input_dim=2000, hidden=32, output_dim=2000,
+                      max_in=16, max_labels=4)
+    data = xc_dataset(0, 1024, cfg.input_dim, cfg.output_dim, n_topics=16,
+                      max_in=16, max_labels=4)
+    params = xc.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(lambda b: xc.embed(params, b["x"]),
+                 params["w_out"].astype(jnp.float32),
+                 params["b_out"].astype(jnp.float32),
+                 LSSConfig(k_bits=5, n_tables=2, iul_epochs=3,
+                           iul_inner_steps=6, iul_lr=0.02),
+                 top_k=5, head="lss")
+    calib = [{"x": jnp.asarray(data.x[i * 128:(i + 1) * 128])}
+             for i in range(4)]
+    eng.fit(jax.random.PRNGKey(1), calib, jnp.asarray(data.labels[:512]))
+
+    # requests trickle in with a ragged arrival pattern
+    rng = np.random.default_rng(0)
+    i = 512
+    while i < 1024:
+        n = int(rng.integers(1, 48))
+        for j in range(i, min(i + n, 1024)):
+            eng.submit({"x": data.x[j]}, labels=data.labels[j])
+        eng.flush()
+        i += n
+    m = eng.metrics()
+    print(f"  {m.n_requests} requests, {m.throughput_rps:,.0f} req/s, "
+          f"p50={m.latency_p50_ms:.2f}ms p99={m.latency_p99_ms:.2f}ms")
+    print(f"  sample size {m.avg_sample_size:.0f}/{cfg.output_dim}, "
+          f"label recall {m.label_recall:.3f}, "
+          f"{m.n_compiles} compiles for buckets "
+          f"{sorted({k[1] for k in eng.compile_counts})}")
+
+
+def decode_path() -> None:
+    print("== decode path: LMDecoder on the same Engine ==")
     cfg = reduced_model_cfg("qwen2-0.5b")._replace(vocab=2048)
     toks = lm_dataset(5, 200_000, cfg.vocab, 33)
     tokens, labels = toks[:, :-1], toks[:, 1:]
@@ -33,32 +73,34 @@ def main() -> None:
                  lambda k: T.init_params(k, cfg), tc)
     it = ShardedBatchIterator({"tokens": tokens, "labels": labels}, 128)
     state, hist = tr.fit(jax.random.PRNGKey(0), it, 300, log_every=100)
-    print(f"LM trained: loss {hist[-1]['loss']:.3f} "
+    print(f"  LM trained: loss {hist[-1]['loss']:.3f} "
           f"(uniform={float(jnp.log(cfg.vocab)):.3f})")
 
     dec = LMDecoder(state.params, cfg,
                     LSSConfig(k_bits=6, n_tables=1, iul_epochs=4,
                               iul_inner_steps=8, iul_lr=0.02))
-    print("fitting LSS index on the LM head...")
+    print("  fitting LSS index on the LM head...")
     dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:256]),
                 verbose=True)
 
     prompt = jnp.asarray(toks[1000:1016, :16])
-    for use_lss in (False, True):
-        out = dec.generate(prompt, steps=32, use_lss=use_lss)  # warm
+    outs = {}
+    for head in ("full", "lss"):
+        out = dec.generate(prompt, steps=32, head=head)      # warm
         t0 = time.perf_counter()
-        out = dec.generate(prompt, steps=32, use_lss=use_lss)
+        out = dec.generate(prompt, steps=32, head=head)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         tps = prompt.shape[0] * 32 / dt
-        name = "LSS " if use_lss else "full"
-        print(f"  {name} head: {tps:,.0f} tok/s")
-        if use_lss:
-            lss_out = out
-        else:
-            full_out = out
-    agree = float(jnp.mean(lss_out == full_out))
-    print(f"top-1 agreement LSS vs full: {agree:.3f}")
+        print(f"  {head:4s} head: {tps:,.0f} tok/s")
+        outs[head] = out
+    agree = float(jnp.mean(outs["lss"] == outs["full"]))
+    print(f"  top-1 agreement LSS vs full: {agree:.3f}")
+
+
+def main() -> None:
+    score_path()
+    decode_path()
 
 
 if __name__ == "__main__":

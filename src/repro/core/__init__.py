@@ -4,9 +4,10 @@ from repro.core.simhash import (augment_neurons, augment_queries,
                                 bucket_ids, hash_bits, init_hyperplanes,
                                 pack_bits, soft_codes)
 from repro.core.tables import LSSTables, bucket_load_stats, build_tables
-from repro.core.lss import (LSSConfig, LSSIndex, avg_sample_size,
-                            build_index, label_recall, lss_predict,
-                            precision_at_k, retrieve)
+from repro.core.lss import (LSSConfig, LSSForward, LSSIndex,
+                            avg_sample_size, build_index, label_recall,
+                            lss_forward, lss_predict, precision_at_k,
+                            retrieve)
 from repro.core.iul import (MinedPairs, calibrate_thresholds, collision_prob,
                             fit_lss, iul_loss, mine_pairs)
 
@@ -14,8 +15,9 @@ __all__ = [
     "augment_neurons", "augment_queries", "bucket_ids", "hash_bits",
     "init_hyperplanes", "pack_bits", "soft_codes",
     "LSSTables", "bucket_load_stats", "build_tables",
-    "LSSConfig", "LSSIndex", "avg_sample_size", "build_index",
-    "label_recall", "lss_predict", "precision_at_k", "retrieve",
+    "LSSConfig", "LSSForward", "LSSIndex", "avg_sample_size", "build_index",
+    "label_recall", "lss_forward", "lss_predict", "precision_at_k",
+    "retrieve",
     "MinedPairs", "calibrate_thresholds", "collision_prob", "fit_lss",
     "iul_loss", "mine_pairs",
 ]

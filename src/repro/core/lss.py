@@ -22,8 +22,8 @@ from repro.core.tables import LSSTables, build_tables, bucketize_weights
 
 __all__ = [
     "LSSConfig", "LSSIndex", "build_index", "retrieve", "dedup_mask",
-    "sparse_logits_gather", "sparse_logits_bucketed", "lss_predict",
-    "label_recall", "precision_at_k", "avg_sample_size",
+    "sparse_logits_gather", "sparse_logits_bucketed", "lss_forward",
+    "lss_predict", "label_recall", "precision_at_k", "avg_sample_size",
 ]
 
 NEG_INF = -1e30
@@ -142,9 +142,22 @@ def sparse_logits_bucketed(q_aug: jax.Array, index: LSSIndex,
     return jnp.where(ids >= 0, logits, NEG_INF), ids
 
 
-def lss_predict(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
-                top_k: int = 5) -> tuple[jax.Array, jax.Array]:
-    """Full Algorithm 2: returns (top-k logits, top-k neuron ids) ``[B, k]``.
+class LSSForward(NamedTuple):
+    """Everything Algorithm 2 produces from ONE retrieval pass.
+
+    The serving engine ranks from ``top_logits``/``top_ids`` and computes
+    its sample-size / recall metrics from ``sample_size``/``cand_ids`` —
+    no second ``retrieve`` call."""
+
+    top_logits: jax.Array        # [B, k]
+    top_ids: jax.Array           # [B, k]   (-1 beyond the candidate count)
+    sample_size: jax.Array       # [B]      unique neurons scored per query
+    cand_ids: jax.Array          # [B, C]   retrieved ids, -1 padded
+
+
+def lss_forward(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
+                top_k: int = 5) -> LSSForward:
+    """Full Algorithm 2 with serving metrics, single retrieval pass.
 
     ``w_aug`` is only needed for the gather path (``w_bucketed is None``).
     """
@@ -155,11 +168,19 @@ def lss_predict(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
     else:
         cand_ids, _ = retrieve(q_aug, index)
         logits = sparse_logits_gather(q_aug, w_aug, cand_ids)
-    logits = jnp.where(dedup_mask(cand_ids), logits, NEG_INF)
+    mask = dedup_mask(cand_ids)
+    logits = jnp.where(mask, logits, NEG_INF)
     top_logits, pos = jax.lax.top_k(logits, top_k)
     top_ids = jnp.take_along_axis(cand_ids, pos, axis=-1)
     top_ids = jnp.where(top_logits > NEG_INF / 2, top_ids, -1)
-    return top_logits, top_ids
+    return LSSForward(top_logits, top_ids, jnp.sum(mask, axis=-1), cand_ids)
+
+
+def lss_predict(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
+                top_k: int = 5) -> tuple[jax.Array, jax.Array]:
+    """(top-k logits, top-k neuron ids) ``[B, k]`` — see ``lss_forward``."""
+    out = lss_forward(q, index, w_aug, top_k)
+    return out.top_logits, out.top_ids
 
 
 # ---------------------------------------------------------------- metrics --

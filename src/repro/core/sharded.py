@@ -25,9 +25,10 @@ from repro.core import simhash
 from repro.core.lss import (LSSConfig, LSSIndex, NEG_INF, build_index,
                             dedup_mask, retrieve, sparse_logits_bucketed,
                             sparse_logits_gather)
+from repro.utils import compat
 
 __all__ = ["build_local_index", "local_topk", "sharded_lss_predict",
-           "make_sharded_predict"]
+           "sharded_lss_forward", "make_sharded_predict"]
 
 
 def build_local_index(w_aug_local: jax.Array, theta: jax.Array,
@@ -38,8 +39,12 @@ def build_local_index(w_aug_local: jax.Array, theta: jax.Array,
 
 
 def local_topk(q: jax.Array, index: LSSIndex, w_aug_local: jax.Array | None,
-               k: int) -> tuple[jax.Array, jax.Array]:
-    """Shard-local Algorithm 2 returning exactly-k (logits, local ids)."""
+               k: int, with_aux: bool = False):
+    """Shard-local Algorithm 2 returning exactly-k (logits, local ids).
+
+    With ``with_aux`` also returns the per-query local sample size (unique
+    neurons scored on this shard), computed from the SAME retrieval pass.
+    """
     q_aug = simhash.augment_queries(q)
     if index.w_bucketed is not None:
         _, buckets = retrieve(q_aug, index)
@@ -47,9 +52,15 @@ def local_topk(q: jax.Array, index: LSSIndex, w_aug_local: jax.Array | None,
     else:
         cand_ids, _ = retrieve(q_aug, index)
         logits = sparse_logits_gather(q_aug, w_aug_local, cand_ids)
-    logits = jnp.where(dedup_mask(cand_ids), logits, NEG_INF)
+    mask = dedup_mask(cand_ids)
+    logits = jnp.where(mask, logits, NEG_INF)
     top_logits, pos = jax.lax.top_k(logits, k)
     top_ids = jnp.take_along_axis(cand_ids, pos, axis=-1)
+    # fewer than k unique candidates: padded slots must read -1, not an
+    # arbitrary duplicate id (they would survive the global all-gather)
+    top_ids = jnp.where(top_logits > NEG_INF / 2, top_ids, -1)
+    if with_aux:
+        return top_logits, top_ids, jnp.sum(mask, axis=-1)
     return top_logits, top_ids
 
 
@@ -73,26 +84,47 @@ def sharded_lss_predict(q: jax.Array, index: LSSIndex,
     return top_logits, top_ids
 
 
+def sharded_lss_forward(q: jax.Array, index: LSSIndex,
+                        w_aug_local: jax.Array | None, *, k: int,
+                        axis_name: str, m_local: int
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``sharded_lss_predict`` + per-query GLOBAL sample size (psum of the
+    shard-local unique-candidate counts) from the single retrieval pass."""
+    logits, ids, local_sample = local_topk(q, index, w_aug_local, k,
+                                           with_aux=True)
+    offset = jax.lax.axis_index(axis_name) * m_local
+    gids = jnp.where(ids >= 0, ids + offset, -1)
+    all_logits = jax.lax.all_gather(logits, axis_name, axis=1)  # [B, TP, k]
+    all_ids = jax.lax.all_gather(gids, axis_name, axis=1)
+    all_logits = all_logits.reshape(q.shape[0], -1)
+    all_ids = all_ids.reshape(q.shape[0], -1)
+    top_logits, pos = jax.lax.top_k(all_logits, k)
+    top_ids = jnp.take_along_axis(all_ids, pos, axis=-1)
+    sample = jax.lax.psum(local_sample, axis_name)              # [B]
+    return top_logits, top_ids, sample
+
+
 def make_sharded_predict(mesh: jax.sharding.Mesh, model_axis: str,
                          cfg: LSSConfig, m_local: int, k: int,
-                         batch_axis: str | None = None):
-    """Wrap sharded_lss_predict in shard_map for the given mesh.
+                         batch_axis: str | None = None,
+                         with_aux: bool = False):
+    """Wrap the sharded predictor in shard_map for the given mesh.
 
     Expects stacked per-shard pytrees: index leaves with a leading [TP] dim
     sharded over ``model_axis``; q sharded over ``batch_axis`` (or
     replicated).  Returns a function (q, stacked_index, w_local_stack|None)
-    -> (logits [B,k], ids [B,k]).
+    -> (logits [B,k], ids [B,k]) — plus sample size [B] if ``with_aux``.
     """
     qspec = P(batch_axis) if batch_axis else P()
-    body = partial(sharded_lss_predict, k=k, axis_name=model_axis,
-                   m_local=m_local)
+    body = partial(sharded_lss_forward if with_aux else sharded_lss_predict,
+                   k=k, axis_name=model_axis, m_local=m_local)
 
     def unstacked_body(q, index_stack, w_stack):
         index = jax.tree.map(lambda x: x[0], index_stack)
         w = None if w_stack is None else w_stack[0]
         return body(q, index, w)
 
-    shard_specs = jax.tree.map(lambda _: P(model_axis), (0, 0))  # placeholder
+    out_specs = (qspec, qspec, qspec) if with_aux else (qspec, qspec)
 
     def fn(q, index_stack, w_stack=None):
         in_specs = (
@@ -101,9 +133,9 @@ def make_sharded_predict(mesh: jax.sharding.Mesh, model_axis: str,
             None if w_stack is None
             else jax.tree.map(lambda _: P(model_axis), w_stack),
         )
-        mapped = jax.shard_map(
+        mapped = compat.shard_map(
             unstacked_body, mesh=mesh, in_specs=in_specs,
-            out_specs=(qspec, qspec), check_vma=False)
+            out_specs=out_specs)
         return mapped(q, index_stack, w_stack)
 
     return fn

@@ -1,8 +1,8 @@
 """Serving launcher: load (or train briefly) an LM, fit the LSS head,
-decode batched requests.
+decode batched requests through the unified serving engine.
 
     python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-        --batch 16 --steps 32 [--no-lss]
+        --batch 16 --steps 32 [--head full|lss|lss-sharded]
 """
 
 import argparse
@@ -15,8 +15,12 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--train-steps", type=int, default=150)
-    ap.add_argument("--no-lss", action="store_true")
+    ap.add_argument("--head", choices=("full", "lss", "lss-sharded"),
+                    default="lss")
+    ap.add_argument("--no-lss", action="store_true",
+                    help="legacy alias for --head full")
     args = ap.parse_args()
+    head = "full" if args.no_lss else args.head
 
     import jax
     import jax.numpy as jnp
@@ -47,13 +51,13 @@ def main() -> None:
     lss_cfg = LSSConfig(k_bits=6, n_tables=1, iul_epochs=4,
                         iul_inner_steps=8, iul_lr=0.02)
     dec = LMDecoder(state.params, cfg, lss_cfg)
-    if not args.no_lss:
+    if head != "full":
         dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:128]))
     prompt = jnp.asarray(toks[500:500 + args.batch, :16])
-    out = dec.generate(prompt, steps=args.steps, use_lss=not args.no_lss)
-    print(f"decoded {out.shape} tokens; head="
-          f"{'LSS' if not args.no_lss else 'full'}")
+    out = dec.generate(prompt, steps=args.steps, head=head)
+    print(f"decoded {out.shape} tokens; head={head}")
     print(out[:2])
+    print(f"engine compiles (head, bucket): {dec.engine.compile_counts}")
 
 
 if __name__ == "__main__":

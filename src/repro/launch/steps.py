@@ -9,7 +9,7 @@ and the real launchers.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchSpec
 from repro.configs.registry import get_config
-from repro.core import simhash
 from repro.core.lss import LSSConfig, LSSIndex
 from repro.core.sharded import sharded_lss_predict
 from repro.core.tables import LSSTables
@@ -26,6 +25,7 @@ from repro.models import transformer as T
 from repro.optim import adamw_init
 from repro.train.trainer import TrainConfig, TrainState, make_train_step, \
     state_shardings
+from repro.utils import compat
 from repro.utils.sharding import specs_to_shardings
 
 f32, bf16, i32 = jnp.float32, jnp.bfloat16, jnp.int32
@@ -167,10 +167,10 @@ def _lm_decode_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
             return body(q, jax.tree.map(lambda x: x[0], idx), None)
 
         idx_specs = jax.tree.map(lambda _: P("model"), index_stack)
-        logits, ids = jax.shard_map(
+        logits, ids = compat.shard_map(
             unstack, mesh=mesh,
-            in_specs=(P(), idx_specs), out_specs=(P(), P()),
-            check_vma=False)(hidden.astype(f32), index_stack)
+            in_specs=(P(), idx_specs),
+            out_specs=(P(), P()))(hidden.astype(f32), index_stack)
         return logits, ids, new_cache
 
     params = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
@@ -490,9 +490,9 @@ def _b4r_serve_cell(spec: ArchSpec, shape, mesh: Mesh) -> Cell:
             return body(qq, jax.tree.map(lambda x: x[0], idx), None)
 
         idx_specs = jax.tree.map(lambda _: P("model"), index_stack)
-        return jax.shard_map(
+        return compat.shard_map(
             unstack, mesh=mesh, in_specs=(P(), idx_specs),
-            out_specs=(P(), P()), check_vma=False)(q, index_stack)
+            out_specs=(P(), P()))(q, index_stack)
 
     params = jax.eval_shape(
         lambda: recsys.init_bert4rec(jax.random.PRNGKey(0), cfg))

@@ -53,9 +53,9 @@ def main() -> None:
     param_specs = None
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh(shape, ("data", "model")[: len(shape)],
-                             axis_types=(jax.sharding.AxisType.Auto,)
-                             * len(shape))
+        from repro.utils import compat
+        mesh = compat.make_mesh(shape, ("data", "model")[: len(shape)],
+                                axis_types=compat.auto_axis_types(len(shape)))
         param_specs = T.param_specs(cfg)
 
     toks = lm_dataset(0, args.batch * args.seq * 64, cfg.vocab,

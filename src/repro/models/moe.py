@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.layers import swiglu
 from repro.utils.sharding import maybe_shard
 
 

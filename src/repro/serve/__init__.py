@@ -1,1 +1,21 @@
-"""serve subpackage."""
+"""Serving subpackage: unified batched engine + pluggable WOL heads.
+
+  * ``engine``  — :class:`Engine` (submit/flush/metrics), plus the legacy
+    ``WOLServer`` / ``LMDecoder`` facades.
+  * ``heads``   — the full | lss | lss-sharded head protocol.
+  * ``batcher`` — bucketed continuous micro-batching (pure shape logic).
+"""
+
+from repro.serve.batcher import DEFAULT_BUCKETS, Chunk, MicroBatcher
+from repro.serve.engine import (Engine, LMDecoder, RankResult, ServeMetrics,
+                                WOLServer)
+from repro.serve.heads import (HEAD_KINDS, HeadOutput, make_full_head,
+                               make_lss_head, make_sharded_lss_head,
+                               shard_index)
+
+__all__ = [
+    "DEFAULT_BUCKETS", "Chunk", "MicroBatcher",
+    "Engine", "LMDecoder", "RankResult", "ServeMetrics", "WOLServer",
+    "HEAD_KINDS", "HeadOutput", "make_full_head", "make_lss_head",
+    "make_sharded_lss_head", "shard_index",
+]

@@ -1,106 +1,430 @@
-"""Serving engine: batched WOL inference with the LSS head.
+"""Unified batched serving engine for WOL inference.
 
-Two request kinds (the paper's two evaluation families):
-  * ``score``   — XC / recsys: embedding -> WOL top-k (full or LSS).
-  * ``decode``  — LM: KV-cache decode loop; the per-token head is either
-    the exact vocab matmul or the LSS index (paper Algorithm 2).
+One :class:`Engine` owns:
 
-The engine owns: frozen model params, the fitted LSSIndex, a simple
-continuous batcher (pad-to-batch with -1 slots so arrival patterns don't
-retrigger compilation), and serving metrics (sample size, recall when
-labels are supplied).
+  * the frozen model body (``embed_fn``) and WOL parameters ``w, b``,
+  * a fitted :class:`LSSIndex` (plus its vocab-sharded form, built lazily),
+  * a pluggable head per request — ``full`` | ``lss`` | ``lss-sharded`` —
+    shared by the score path (XC / recsys top-k) and the decode path
+    (LM next-token), see ``serve.heads``,
+  * a continuous micro-batcher that coalesces submitted requests into
+    fixed bucketed batch shapes (``serve.batcher``) so arrival patterns
+    never retrigger compilation: exactly one jitted step per
+    (head, bucket) pair, trace counts exposed via ``compile_counts``,
+  * first-class serving metrics — p50/p95/p99 latency, throughput, avg
+    sample size, label recall — computed from the SAME retrieval pass
+    that produced the ranking (no second ``retrieve`` call).
+
+Request flow::
+
+    engine.submit(x, labels=...)   # enqueue one example
+    engine.flush()                 # coalesce -> bucketed jitted steps
+    engine.metrics()               # ServeMetrics snapshot
+
+``WOLServer`` and ``LMDecoder`` remain as thin compatibility wrappers.
 """
 
 from __future__ import annotations
 
+import math
 import time
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import lss as lss_lib
+from repro.core import simhash
 from repro.core.iul import fit_lss
-from repro.core.lss import LSSConfig, LSSIndex
+from repro.core.lss import LSSConfig, LSSIndex, build_index
+from repro.serve.batcher import DEFAULT_BUCKETS, MicroBatcher
+from repro.serve.heads import (HEAD_KINDS, HeadOutput, make_full_head,
+                               make_lss_head, make_sharded_lss_head,
+                               shard_index)
+from repro.utils import compat
+
+__all__ = ["Engine", "ServeMetrics", "RankResult", "WOLServer", "LMDecoder"]
 
 
 class ServeMetrics(NamedTuple):
+    """Serving metrics window.  The first three fields keep the legacy
+    (n_requests, wall_s, avg_sample_size) positional layout."""
+
     n_requests: int
     wall_s: float
     avg_sample_size: float
+    throughput_rps: float
+    latency_p50_ms: float
+    latency_p95_ms: float
+    latency_p99_ms: float
+    label_recall: float          # nan until labels are supplied
+    n_compiles: int
 
+
+class RankResult(NamedTuple):
+    """Per-request result handed back by ``flush``."""
+
+    rid: int
+    logits: np.ndarray           # [k]
+    ids: np.ndarray              # [k]
+
+
+class _Pending(NamedTuple):
+    rid: int
+    x: Any                       # example pytree (no batch dim)
+    labels: np.ndarray | None    # [NL] int, -1 padded
+    t_submit: float
+
+
+def _as_label_row(labels) -> np.ndarray | None:
+    if labels is None:
+        return None
+    arr = np.atleast_1d(np.asarray(labels, np.int32))
+    return arr
+
+
+class Engine:
+    """Batched WOL serving with a pluggable head.
+
+    ``embed_fn(batch) -> [B, d]`` maps a request batch to query
+    embeddings; pass None when requests already ARE embeddings (the LM
+    decode path).  ``w [m, d]``, ``b [m]`` are the WOL parameters.
+    """
+
+    def __init__(self, embed_fn: Callable | None, w: jax.Array,
+                 b: jax.Array | None = None,
+                 lss_cfg: LSSConfig = LSSConfig(), *,
+                 top_k: int = 5, head: str = "lss",
+                 buckets=DEFAULT_BUCKETS,
+                 mesh: jax.sharding.Mesh | None = None,
+                 model_axis: str = "model"):
+        if head not in HEAD_KINDS:
+            raise ValueError(f"head must be one of {HEAD_KINDS}, got {head}")
+        self.embed_fn = embed_fn
+        self.w = w.astype(jnp.float32)
+        self.b = (jnp.zeros((w.shape[0],), jnp.float32) if b is None
+                  else b.astype(jnp.float32))
+        self.lss_cfg = lss_cfg
+        self.top_k = top_k
+        self.default_head = head
+        self.batcher = MicroBatcher(buckets)
+        self.mesh = mesh
+        self.model_axis = model_axis
+        self.index: LSSIndex | None = None
+        self._w_aug_cache: jax.Array | None = None
+        self._sharded = None          # (index_stack, w_stack, m_local)
+        self._heads: dict[str, Callable] = {}
+        self._steps: dict[tuple[str, int], Callable] = {}
+        self.compile_counts: dict[tuple[str, int], int] = {}
+        self._queue: list[_Pending] = []
+        self._results: list[RankResult] = []
+        self._next_rid = 0
+        self.reset_metrics()
+
+    @property
+    def _w_aug(self) -> jax.Array:
+        """Bias-augmented neurons, built on first LSS use — a full-head-only
+        engine (e.g. LMDecoder without fit_lss) never pays the O(m*d)
+        augment or holds the second copy of W."""
+        if self._w_aug_cache is None:
+            self._w_aug_cache = simhash.augment_neurons(self.w, self.b)
+        return self._w_aug_cache
+
+    # ------------------------------------------------- offline fitting --
+    def fit(self, key: jax.Array, calib_batches: list, labels: jax.Array,
+            verbose: bool = False) -> dict:
+        """Paper Algorithm 1: embed the calibration batches through the
+        frozen model body, then IUL-train the hyperplanes."""
+        assert self.embed_fn is not None, "fit() needs an embed_fn; " \
+            "use fit_from_queries() when requests are raw embeddings"
+        q = jnp.concatenate([self.embed_fn(bb) for bb in calib_batches])
+        return self.fit_from_queries(key, q, labels, verbose=verbose)
+
+    def fit_from_queries(self, key: jax.Array, q: jax.Array,
+                         labels: jax.Array, verbose: bool = False) -> dict:
+        index, hist = fit_lss(key, q, labels, self.w, self.b, self.lss_cfg,
+                              verbose=verbose)
+        self._set_index(index)
+        return hist
+
+    def fit_random(self, key: jax.Array) -> None:
+        """SimHash init without IUL (the SLIDE-style baseline; also what
+        the speed benchmarks use — timing is learning-independent)."""
+        theta = simhash.init_hyperplanes(key, self._w_aug.shape[1],
+                                         self.lss_cfg.k_bits,
+                                         self.lss_cfg.n_tables)
+        self._set_index(build_index(self._w_aug, theta, self.lss_cfg))
+
+    def _set_index(self, index: LSSIndex) -> None:
+        self.index = index
+        self._sharded = None
+        self._heads.pop("lss", None)
+        self._heads.pop("lss-sharded", None)
+        for k in [k for k in self._steps if k[0] != "full"]:
+            del self._steps[k]
+
+    # ------------------------------------------------------ head lookup --
+    def _get_mesh(self):
+        if self.mesh is None:
+            self.mesh = compat.make_mesh(
+                (len(jax.devices()),), (self.model_axis,),
+                axis_types=compat.auto_axis_types(1))
+        return self.mesh
+
+    def _head(self, kind: str) -> Callable:
+        if kind not in HEAD_KINDS:
+            raise ValueError(f"unknown head {kind!r}")
+        if kind in self._heads:
+            return self._heads[kind]
+        if kind == "full":
+            head = make_full_head(self.w, self.b, self.top_k)
+        else:
+            assert self.index is not None, \
+                f"head {kind!r} needs a fitted index: call fit()/fit_random()"
+            if kind == "lss":
+                w_aug = None if self.index.w_bucketed is not None \
+                    else self._w_aug
+                head = make_lss_head(self.index, w_aug, self.top_k)
+            else:
+                mesh = self._get_mesh()
+                tp = mesh.shape[self.model_axis]
+                if self._sharded is None:
+                    self._sharded = shard_index(self._w_aug,
+                                                self.index.theta,
+                                                self.lss_cfg, tp)
+                stack, w_stack, m_local = self._sharded
+                head = make_sharded_lss_head(stack, w_stack, mesh,
+                                             self.lss_cfg, m_local,
+                                             self.top_k, self.model_axis)
+        self._heads[kind] = head
+        return head
+
+    # ------------------------------------------------------ jitted steps --
+    def _step(self, kind: str, bucket: int) -> Callable:
+        """One jitted step per (head, bucket): compile count is observable
+        because the Python body runs exactly once per trace."""
+        key = (kind, bucket)
+        if key not in self._steps:
+            head = self._head(kind)
+            embed = self.embed_fn
+
+            def raw_step(x):
+                self.compile_counts[key] = \
+                    self.compile_counts.get(key, 0) + 1
+                q = embed(x) if embed is not None else x
+                return head(q)
+
+            self._steps[key] = jax.jit(raw_step)
+        return self._steps[key]
+
+    def _pad_to_bucket(self, x, bucket: int):
+        """Device-side row padding (no host round-trip for jax inputs)."""
+        def pad(leaf):
+            n = leaf.shape[0]
+            if n == bucket:
+                return leaf
+            fill = jnp.zeros((bucket - n,) + leaf.shape[1:], leaf.dtype)
+            return jnp.concatenate([leaf, fill], axis=0)
+        if isinstance(x, dict):
+            return {k: pad(jnp.asarray(v)) for k, v in x.items()}
+        return pad(jnp.asarray(x))
+
+    # ------------------------------------------------------- score path --
+    def rank(self, x, head: str | None = None, labels=None,
+             record: bool = True) -> HeadOutput:
+        """Rank one already-batched request group (rows = requests).
+
+        Pads to the bucket, runs the (head, bucket) jitted step, slices
+        back to the true row count.  ``labels`` (int [B, NL], -1 padded)
+        feed the recall metric.  The decode loop calls this with
+        ``record=False`` to keep the token loop free of host syncs.
+        """
+        kind = head or self.default_head
+        leaves = jax.tree.leaves(x)
+        n = leaves[0].shape[0]
+        t0 = time.perf_counter()
+        outs = []
+        for chunk in self.batcher.plan(n):
+            part = jax.tree.map(
+                lambda l: l[chunk.start:chunk.start + chunk.size], x)
+            padded = self._pad_to_bucket(part, chunk.bucket)
+            o = self._step(kind, chunk.bucket)(padded)
+            outs.append(jax.tree.map(lambda l: l[:chunk.size], o))
+        out = outs[0] if len(outs) == 1 else HeadOutput(
+            *(None if any(l is None for l in ls) else jnp.concatenate(ls)
+              for ls in zip(*outs)))
+        if record:
+            jax.block_until_ready(out.logits)
+            wall = time.perf_counter() - t0
+            self._record(out, n, wall, [wall] * n, labels)
+        return out
+
+    # --------------------------------------------------- request queue --
+    def submit(self, x, labels=None) -> int:
+        """Enqueue one example (leaves WITHOUT the batch dim).  Returns a
+        request id; auto-flushes once a full max bucket is waiting."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(_Pending(rid, x, _as_label_row(labels),
+                                    time.perf_counter()))
+        if len(self._queue) >= self.batcher.max_bucket:
+            self._flush_ready()
+        return rid
+
+    def submit_batch(self, xb, labels=None) -> list[int]:
+        """Enqueue every row of a batched pytree."""
+        xb_np = jax.tree.map(np.asarray, xb)     # one device->host copy
+        n = jax.tree.leaves(xb_np)[0].shape[0]
+        lab = None if labels is None else np.asarray(labels)
+        return [self.submit(jax.tree.map(lambda l: l[i], xb_np),
+                            None if lab is None else lab[i])
+                for i in range(n)]
+
+    def _flush_ready(self) -> None:
+        while len(self._queue) >= self.batcher.max_bucket:
+            group = self._queue[:self.batcher.max_bucket]
+            del self._queue[:self.batcher.max_bucket]
+            self._results.extend(self._run_group(group))
+
+    def flush(self, head: str | None = None) -> list[RankResult]:
+        """Drain the queue through bucketed steps; return all finished
+        results (including auto-flushed ones) in submit order."""
+        while self._queue:
+            take = min(len(self._queue), self.batcher.max_bucket)
+            group = self._queue[:take]
+            del self._queue[:take]
+            self._results.extend(self._run_group(group, head))
+        out = sorted(self._results, key=lambda r: r.rid)
+        self._results = []
+        return out
+
+    def _run_group(self, group: list[_Pending],
+                   head: str | None = None) -> list[RankResult]:
+        kind = head or self.default_head
+        bucket = self.batcher.bucket_for(len(group))
+        x = jax.tree.map(lambda *rows: np.stack(rows),
+                         *[g.x for g in group])
+        padded = self._pad_to_bucket(x, bucket)
+        t0 = time.perf_counter()
+        out = self._step(kind, bucket)(padded)
+        jax.block_until_ready(out.logits)
+        t1 = time.perf_counter()
+        n = len(group)
+        out = jax.tree.map(lambda l: l[:n], out)
+        lats = [t1 - g.t_submit for g in group]
+        labels = self._stack_labels([g.labels for g in group])
+        self._record(out, n, t1 - t0, lats, labels)
+        logits = np.asarray(out.logits)
+        ids = np.asarray(out.ids)
+        return [RankResult(g.rid, logits[i], ids[i])
+                for i, g in enumerate(group)]
+
+    @staticmethod
+    def _stack_labels(rows) -> np.ndarray | None:
+        if all(r is None for r in rows):
+            return None
+        width = max(1 if r is None else r.shape[0] for r in rows)
+        out = np.full((len(rows), width), -1, np.int32)
+        for i, r in enumerate(rows):
+            if r is not None:
+                out[i, :r.shape[0]] = r
+        return out
+
+    # ----------------------------------------------------------- metrics --
+    def reset_metrics(self) -> None:
+        """Start a fresh metrics window.  Pending request results are NOT
+        metrics and survive (they belong to the next ``flush``)."""
+        self._n = 0
+        self._wall = 0.0
+        self._lat: list[float] = []
+        self._sample_sum = 0.0
+        self._recall_hit = 0
+        self._recall_tot = 0
+
+    def _record(self, out: HeadOutput, n: int, wall: float,
+                lats: list[float], labels) -> None:
+        self._n += n
+        self._wall += wall
+        self._lat.extend(lats)
+        self._sample_sum += float(jnp.sum(out.sample_size[:n]))
+        if labels is not None:
+            lab = jnp.asarray(labels)[:n]
+            if lab.ndim == 1:                 # one label per request
+                lab = lab[:, None]
+            pool = out.cand_ids if out.cand_ids is not None else out.ids
+            hit = (lab[:, :, None] == pool[:n, None, :]).any(-1)
+            valid = lab >= 0
+            self._recall_hit += int(jnp.sum(hit & valid))
+            self._recall_tot += int(jnp.sum(valid))
+
+    def metrics(self) -> ServeMetrics:
+        lat_ms = np.asarray(self._lat, np.float64) * 1e3
+        p50, p95, p99 = (np.percentile(lat_ms, (50, 95, 99))
+                         if lat_ms.size else (math.nan,) * 3)
+        return ServeMetrics(
+            n_requests=self._n,
+            wall_s=self._wall,
+            avg_sample_size=self._sample_sum / max(self._n, 1),
+            throughput_rps=self._n / self._wall if self._wall else 0.0,
+            latency_p50_ms=float(p50),
+            latency_p95_ms=float(p95),
+            latency_p99_ms=float(p99),
+            label_recall=(self._recall_hit / self._recall_tot
+                          if self._recall_tot else math.nan),
+            n_compiles=sum(self.compile_counts.values()),
+        )
+
+
+# ================================================= compatibility wrappers ==
 
 class WOLServer:
-    """Serves one wide output layer, full or LSS.
+    """Legacy facade: one wide output layer, full or LSS head.
 
-    ``embed_fn(batch) -> [B, d]`` is the model body below the WOL;
-    ``w, b`` are the WOL parameters.
+    Kept API-stable for existing callers/tests; all work happens in the
+    unified :class:`Engine`.
     """
 
     def __init__(self, embed_fn: Callable, w: jax.Array,
                  b: jax.Array | None, cfg: LSSConfig, top_k: int = 5):
-        self.embed_fn = jax.jit(embed_fn)
-        self.w = w
-        self.b = b if b is not None else jnp.zeros((w.shape[0],), w.dtype)
-        self.cfg = cfg
-        self.top_k = top_k
-        self.index: LSSIndex | None = None
-        self._full = jax.jit(self._full_topk)
-        self._lss = jax.jit(self._lss_topk)
+        self.engine = Engine(embed_fn, w, b, cfg, top_k=top_k)
 
-    # -- offline preprocessing (paper Algorithm 1) ----------------------
+    @property
+    def index(self):
+        return self.engine.index
+
     def fit(self, key: jax.Array, calib_batches: list[dict],
             labels: jax.Array, verbose: bool = False) -> dict:
-        q = jnp.concatenate([self.embed_fn(b) for b in calib_batches])
-        self.index, hist = fit_lss(key, q, labels, self.w, self.b,
-                                   self.cfg, verbose=verbose)
-        return hist
+        return self.engine.fit(key, calib_batches, labels, verbose=verbose)
 
-    # -- heads -----------------------------------------------------------
-    def _full_topk(self, q: jax.Array):
-        logits = q @ self.w.T + self.b
-        top, ids = jax.lax.top_k(logits, self.top_k)
-        return top, ids
-
-    def _lss_topk(self, q: jax.Array, index: LSSIndex):
-        return lss_lib.lss_predict(
-            q, index, lss_lib.simhash.augment_neurons(self.w, self.b),
-            top_k=self.top_k)
-
-    # -- serving ---------------------------------------------------------
     def serve(self, batches: list[dict], use_lss: bool = True
               ) -> tuple[list, ServeMetrics]:
-        assert not use_lss or self.index is not None, "fit() first"
+        assert not use_lss or self.engine.index is not None, "fit() first"
+        self.engine.reset_metrics()
+        kind = "lss" if use_lss else "full"
         out = []
-        t0 = time.time()
-        sample = 0.0
         for b in batches:
-            q = self.embed_fn(b)
-            if use_lss:
-                top, ids = self._lss(q, self.index)
-                cand, _ = lss_lib.retrieve(
-                    lss_lib.simhash.augment_queries(q), self.index)
-                sample += float(lss_lib.avg_sample_size(cand))
-            else:
-                top, ids = self._full(q)
-            out.append((top, ids))
-        jax.block_until_ready(out[-1])
-        wall = time.time() - t0
-        return out, ServeMetrics(len(batches), wall,
-                                 sample / max(len(batches), 1))
+            ho = self.engine.rank(b, head=kind)
+            out.append((ho.logits, ho.ids))
+        return out, self.engine.metrics()
 
 
 class LMDecoder:
-    """KV-cache decode loop with a pluggable head (exact | LSS)."""
+    """KV-cache decode loop; the per-token head is the Engine's."""
 
     def __init__(self, params: dict, cfg, lss_cfg: LSSConfig | None = None):
         from repro.models import transformer as T
         self.T = T
         self.params = params
         self.cfg = cfg
-        self.index: LSSIndex | None = None
         self.lss_cfg = lss_cfg
         self._decode = jax.jit(T.decode_step, static_argnames="cfg")
+        self.engine = Engine(None, self.head_weights().astype(jnp.float32),
+                             None, lss_cfg or LSSConfig(), top_k=1,
+                             head="full")
+
+    @property
+    def index(self):
+        return self.engine.index
 
     def head_weights(self) -> jax.Array:
         return (self.params["embed"] if self.cfg.tie_embeddings
@@ -113,31 +437,26 @@ class LMDecoder:
         'training data through the trained model' recipe)."""
         hidden, _, _ = self.T.forward(self.params, calib_tokens, self.cfg,
                                       mode="train")
-        q = hidden[:, :-1].reshape(-1, hidden.shape[-1])
+        q = hidden[:, :-1].reshape(-1, hidden.shape[-1]).astype(jnp.float32)
         labels = calib_tokens[:, 1:].reshape(-1, 1)
-        self.index, hist = fit_lss(key, q, labels,
-                                   self.head_weights().astype(jnp.float32),
-                                   None, self.lss_cfg, verbose=verbose)
-        return hist
+        return self.engine.fit_from_queries(key, q, labels, verbose=verbose)
 
-    def generate(self, prompt: jax.Array, steps: int, use_lss: bool = False
-                 ) -> jax.Array:
-        """Greedy decode.  prompt [B, S] -> tokens [B, steps]."""
+    def generate(self, prompt: jax.Array, steps: int, use_lss: bool = False,
+                 head: str | None = None) -> jax.Array:
+        """Greedy decode.  prompt [B, S] -> tokens [B, steps].
+
+        ``head`` overrides the full/LSS switch (e.g. "lss-sharded")."""
+        kind = head or ("lss" if use_lss else "full")
+        if kind != "full":
+            assert self.engine.index is not None, "fit_lss() first"
         hidden, cache = self.T.prefill(self.params, prompt, self.cfg,
                                        max_len=prompt.shape[1] + steps)
-        w = self.head_weights()
         outs = []
         h = hidden[:, -1]
         for _ in range(steps):
-            if use_lss:
-                assert self.index is not None
-                _, ids = lss_lib.lss_predict(
-                    h.astype(jnp.float32), self.index, None, top_k=1)
-                tok = jnp.maximum(ids[:, 0], 0)
-            else:
-                logits = jnp.einsum("bd,vd->bv", h.astype(jnp.float32),
-                                    w.astype(jnp.float32))
-                tok = jnp.argmax(logits, -1)
+            ho = self.engine.rank(h.astype(jnp.float32), head=kind,
+                                  record=False)
+            tok = jnp.maximum(ho.ids[:, 0], 0)
             outs.append(tok)
             h, cache = self._decode(self.params, tok, cache, self.cfg)
         return jnp.stack(outs, 1)

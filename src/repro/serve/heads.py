@@ -1,0 +1,107 @@
+"""Pluggable WOL head protocol shared by the score and decode paths.
+
+A *head* is a pure function ``q [B, d] -> HeadOutput`` ranking the wide
+output layer for a batch of query embeddings.  Three implementations:
+
+  * ``full``         — exact ``q @ W.T + b`` then top-k (the baseline the
+    paper speeds up).
+  * ``lss``          — Algorithm 2 over a fitted :class:`LSSIndex`
+    (single retrieval pass; sample size comes from the same pass).
+  * ``lss-sharded``  — the vocab-sharded index from ``core.sharded``:
+    shard-local retrieve + top-k, O(TP*k) all-gather, global top-k.
+
+All heads return the same :class:`HeadOutput`, so the engine's batcher,
+metrics, and the LM decode loop are head-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lss import LSSConfig, LSSIndex, lss_forward
+from repro.core.sharded import build_local_index, make_sharded_predict
+
+__all__ = ["HeadOutput", "HEAD_KINDS", "make_full_head", "make_lss_head",
+           "make_sharded_lss_head", "shard_index"]
+
+HEAD_KINDS = ("full", "lss", "lss-sharded")
+
+
+class HeadOutput(NamedTuple):
+    """What every head returns for a query batch."""
+
+    logits: jax.Array            # [B, k] top-k scores
+    ids: jax.Array               # [B, k] top-k neuron ids (-1 = none)
+    sample_size: jax.Array       # [B]    neurons actually scored
+    cand_ids: jax.Array | None   # [B, C] retrieved set (None: full/sharded)
+
+
+def make_full_head(w: jax.Array, b: jax.Array, top_k: int
+                   ) -> Callable[[jax.Array], HeadOutput]:
+    """Exact WOL: every neuron is scored (sample size == m)."""
+    m = w.shape[0]
+
+    def head(q: jax.Array) -> HeadOutput:
+        logits = q.astype(jnp.float32) @ w.T.astype(jnp.float32) + b
+        top, ids = jax.lax.top_k(logits, top_k)
+        return HeadOutput(top, ids,
+                          jnp.full((q.shape[0],), m, jnp.int32), None)
+
+    return head
+
+
+def make_lss_head(index: LSSIndex, w_aug: jax.Array | None, top_k: int
+                  ) -> Callable[[jax.Array], HeadOutput]:
+    """Algorithm 2 over one fitted index (single-device)."""
+
+    def head(q: jax.Array) -> HeadOutput:
+        out = lss_forward(q.astype(jnp.float32), index, w_aug, top_k)
+        return HeadOutput(out.top_logits, out.top_ids, out.sample_size,
+                          out.cand_ids)
+
+    return head
+
+
+def shard_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig,
+                n_shards: int):
+    """Split the WOL rows into ``n_shards`` contiguous vocab shards, build
+    one local index per shard, and stack the leaves ([TP, ...]).
+
+    Returns (stacked_index, stacked_w_aug or None, m_local).
+    """
+    m = w_aug.shape[0]
+    if m % n_shards:
+        raise ValueError(f"m={m} not divisible by n_shards={n_shards}")
+    m_local = m // n_shards
+    locals_ = [build_local_index(w_aug[i * m_local:(i + 1) * m_local],
+                                 theta, cfg)
+               for i in range(n_shards)]
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
+    w_stack = None
+    if not cfg.use_bucket_major:
+        w_stack = w_aug.reshape(n_shards, m_local, w_aug.shape[-1])
+    return stack, w_stack, m_local
+
+
+def make_sharded_lss_head(index_stack, w_stack, mesh, cfg: LSSConfig,
+                          m_local: int, top_k: int,
+                          model_axis: str = "model"
+                          ) -> Callable[[jax.Array], HeadOutput]:
+    """Vocab-sharded Algorithm 2 (sample size psum'd across shards).
+
+    ``cand_ids`` is None: the retrieved sets live shard-local and only the
+    O(TP*k) winners cross the interconnect — recall metrics fall back to
+    the top-k set.
+    """
+    fwd = make_sharded_predict(mesh, model_axis, cfg, m_local, top_k,
+                               with_aux=True)
+
+    def head(q: jax.Array) -> HeadOutput:
+        logits, ids, sample = fwd(q.astype(jnp.float32), index_stack,
+                                  w_stack)
+        return HeadOutput(logits, ids, sample, None)
+
+    return head

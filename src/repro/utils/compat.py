@@ -1,0 +1,91 @@
+"""Version-tolerant wrappers for jax APIs that moved between releases.
+
+The repo pins jax 0.4.37 (the jaxlib in the image), but the sharding API
+surface it uses was renamed upstream several times:
+
+  * ``jax.sharding.get_abstract_mesh``  -> pre-0.5: thread-resources mesh
+  * ``jax.set_mesh(mesh)`` context      -> pre-0.5: ``with mesh:``
+  * ``jax.shard_map(..., check_vma=)``  -> pre-0.5:
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``
+  * ``jax.make_mesh(..., axis_types=)`` -> pre-0.5: no ``axis_types``
+  * ``jax.sharding.AxisType``           -> absent pre-0.5
+
+Every call site in the repo goes through these helpers so the same code
+runs on the pinned jax and on current releases.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+__all__ = ["get_abstract_mesh", "set_mesh", "make_mesh", "shard_map",
+           "auto_axis_types", "cost_analysis"]
+
+
+def get_abstract_mesh():
+    """The mesh of the surrounding ``set_mesh``/``with mesh`` context.
+
+    Returns a mesh object whose ``empty`` attribute is True when no mesh
+    is active (matching ``jax.sharding.get_abstract_mesh`` semantics), or
+    None when no context mechanism exists at all.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        fn = getattr(jax.sharding, "get_mesh", None)
+    if fn is not None:
+        return fn()
+    try:
+        from jax._src import mesh as _mesh_lib
+        return _mesh_lib.thread_resources.env.physical_mesh
+    except Exception:       # pragma: no cover - very old/new internals
+        return None
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for sharding-constraint
+    resolution: ``jax.set_mesh`` when present, else the classic
+    ``with mesh:`` (Mesh is its own context manager pre-0.5)."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh
+
+
+def auto_axis_types(n_axes: int):
+    """``(AxisType.Auto,) * n`` on jax versions that have AxisType,
+    else None (pre-0.5 meshes are implicitly auto)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return None if at is None else (at.Auto,) * n_axes
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` dropping kwargs the pinned version lacks."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and \
+            "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict: pre-0.5 jax returned a
+    one-element list of per-program dicts."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` (check_vma) or the experimental one (check_rep)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

@@ -1,0 +1,82 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The image pins the runtime deps only; ``hypothesis`` lives in the ``dev``
+extra.  When it is absent, tests that use ``@given`` still run — against a
+fixed seeded sweep (endpoints first, then pseudo-random draws) instead of
+hypothesis' adaptive search.  With the real package installed (CI does
+``pip install -e .[dev]``), this module is never imported.
+
+Only the surface the test suite uses is implemented: ``given``,
+``settings(max_examples=, deadline=)``, ``strategies.integers`` and
+``strategies.floats``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    """A strategy is (endpoint examples, pseudo-random generator)."""
+
+    def __init__(self, endpoints, gen):
+        self.endpoints = endpoints
+        self.gen = gen
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        (int(min_value), int(max_value)),
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_) -> _Strategy:
+    return _Strategy(
+        (float(min_value), float(max_value)),
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for i in range(max(n, 2)):
+                drawn = tuple(
+                    s.endpoints[i] if i < 2 else s.gen(rng)
+                    for s in strategies)
+                fn(*args, *drawn, **kwargs)
+        # the drawn params must not look like pytest fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` / ``hypothesis.strategies`` modules."""
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -5,6 +5,12 @@ subprocesses with their own XLA_FLAGS)."""
 import numpy as np
 import pytest
 
+try:                                    # hypothesis is a dev-extra install;
+    import hypothesis                   # noqa: F401
+except ImportError:                     # fall back to a deterministic sweep
+    from _hypothesis_stub import install as _install_hypothesis_stub
+    _install_hypothesis_stub()
+
 
 @pytest.fixture
 def rng():

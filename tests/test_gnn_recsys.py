@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
 from repro.data.synthetic import graph_dataset, to_csr
 from repro.models import gnn, recsys

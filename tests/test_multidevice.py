@@ -20,8 +20,10 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.utils import compat
+
+mesh = compat.make_mesh((2, 4), ("data", "model"),
+                        axis_types=compat.auto_axis_types(2))
 
 # ---- 1. vocab-sharded LSS == single-device LSS -------------------------
 from repro.core import simhash
@@ -45,10 +47,10 @@ body = functools.partial(sharded_lss_predict, k=6, axis_name="model",
 def unstack(qq, idx):
     return body(qq, jax.tree.map(lambda x: x[0], idx), None)
 idx_specs = jax.tree.map(lambda _: P("model"), stack)
-with jax.set_mesh(mesh):
-    fn = jax.jit(jax.shard_map(unstack, mesh=mesh,
-                               in_specs=(P(), idx_specs),
-                               out_specs=(P(), P()), check_vma=False))
+with compat.set_mesh(mesh):
+    fn = jax.jit(compat.shard_map(unstack, mesh=mesh,
+                                  in_specs=(P(), idx_specs),
+                                  out_specs=(P(), P())))
     logits_sh, ids_sh = fn(q, stack)
 
 # single-device oracle: per-shard local top-k then global merge
@@ -64,7 +66,10 @@ for i in range(bq):
     want_ids.append([c[1] for c in cands[:6]])
 got = np.asarray(ids_sh)
 for i in range(bq):
-    assert got[i].tolist() == want_ids[i], (i, got[i], want_ids[i])
+    got_valid = [int(x) for x in got[i] if x >= 0]
+    assert got_valid == want_ids[i][:len(got_valid)] \
+        and len(got_valid) == min(6, len(want_ids[i])), \
+        (i, got[i], want_ids[i])
 print("SHARDED-LSS-OK")
 
 # ---- 2. sharded LM train step runs + loss finite -----------------------
@@ -89,18 +94,17 @@ print("SHARDED-TRAIN-OK")
 
 # ---- 3. int8 error-feedback compressed all-reduce ----------------------
 from repro.optim.compression import compressed_psum, init_error_state
-gmesh = jax.make_mesh((8,), ("pod",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+gmesh = compat.make_mesh((8,), ("pod",),
+                         axis_types=compat.auto_axis_types(1))
 g = {"w": jax.random.normal(jax.random.PRNGKey(5), (8, 64)) * 0.1}
 err = {"w": jnp.zeros((8, 64))}
 def body2(gg, ee):
     return compressed_psum(gg, ee, "pod")
-with jax.set_mesh(gmesh):
-    out, new_err = jax.jit(jax.shard_map(
+with compat.set_mesh(gmesh):
+    out, new_err = jax.jit(compat.shard_map(
         body2, mesh=gmesh,
         in_specs=({"w": P("pod", None)}, {"w": P("pod", None)}),
-        out_specs=({"w": P("pod", None)}, {"w": P("pod", None)}),
-        check_vma=False))(g, err)
+        out_specs=({"w": P("pod", None)}, {"w": P("pod", None)})))(g, err)
 true_mean = jnp.mean(g["w"], axis=0)
 got_rows = np.asarray(out["w"])
 for r in range(8):
@@ -117,10 +121,10 @@ for arch, shape in (("qwen2-0.5b", "decode_32k"), ("deepfm", "serve_p99"),
     # shrink: reuse the production builder on the debug mesh
     cell = build_cell(arch, shape, mesh, lm_layers=2) \
         if arch == "qwen2-0.5b" else build_cell(arch, shape, mesh)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings
                            ).lower(*cell.args).compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    assert compat.cost_analysis(compiled)["flops"] > 0
     print(f"MINIDRY-{arch}-OK")
 print("ALL-OK")
 """

@@ -1,0 +1,224 @@
+"""Unified serving engine: batcher shape-stability, head parity, and
+single-pass metrics correctness."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import simhash
+from repro.core.lss import LSSConfig, avg_sample_size, label_recall, retrieve
+from repro.serve.batcher import MicroBatcher
+from repro.serve.engine import Engine
+
+
+def _engine(m=512, d=32, k_bits=4, n_tables=2, top_k=5, buckets=(1, 2, 4, 8),
+            bucket_major=True):
+    w = jax.random.normal(jax.random.PRNGKey(0), (m, d))
+    eng = Engine(None, w, None,
+                 LSSConfig(k_bits=k_bits, n_tables=n_tables,
+                           use_bucket_major=bucket_major),
+                 top_k=top_k, head="lss", buckets=buckets)
+    eng.fit_random(jax.random.PRNGKey(1))
+    return eng
+
+
+# ------------------------------------------------------------- batcher --
+
+def test_batcher_bucket_ladder():
+    b = MicroBatcher((1, 2, 4, 8))
+    assert [b.bucket_for(n) for n in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    with pytest.raises(ValueError):
+        b.bucket_for(9)
+    # 19 requests -> two full max buckets + one bucketed remainder
+    assert [(c.size, c.bucket) for c in b.plan(19)] == \
+        [(8, 8), (8, 8), (3, 4)]
+    assert b.plan(0) == []
+
+
+def test_batcher_pad_rows():
+    b = MicroBatcher((4,))
+    x = {"a": np.ones((3, 5)), "b": np.arange(3)}
+    p = b.pad_rows(x, 4)
+    assert p["a"].shape == (4, 5) and p["b"].shape == (4,)
+    assert p["a"][3].sum() == 0 and p["b"][3] == 0
+
+
+# ------------------------------------------- shape-stable compilation --
+
+def test_no_recompile_across_arrival_patterns():
+    """Any arrival pattern maps onto the fixed bucket ladder, so traces
+    happen once per (head, bucket) no matter how traffic arrives."""
+    eng = _engine(buckets=(1, 2, 4, 8))
+    rng = np.random.default_rng(0)
+
+    def drive(pattern):
+        for n in pattern:
+            for _ in range(n):
+                eng.submit(rng.standard_normal(32).astype(np.float32))
+            eng.flush()
+
+    drive([3, 5, 2, 7, 1])
+    counts1 = dict(eng.compile_counts)
+    assert all(v == 1 for v in counts1.values())
+    # a completely different arrival pattern: zero new compilations for
+    # already-seen buckets, at most the missing ladder entries otherwise
+    drive([7, 2, 3, 8, 8, 5, 1, 4, 6])
+    for key, v in eng.compile_counts.items():
+        assert v == 1, f"{key} recompiled: {v} traces"
+    # every step was an ('lss', bucket) pair from the ladder
+    assert all(k[0] == "lss" and k[1] in (1, 2, 4, 8)
+               for k in eng.compile_counts)
+
+
+def test_oversize_group_splits_into_max_buckets():
+    eng = _engine(buckets=(4, 8))
+    q = np.asarray(jax.random.normal(jax.random.PRNGKey(5), (20, 32)))
+    out = eng.rank(q, record=False)            # 20 -> 8 + 8 + 4
+    assert out.ids.shape == (20, 5)
+    assert set(eng.compile_counts) == {("lss", 8), ("lss", 4)}
+
+
+# ----------------------------------------------------------- parity --
+
+def test_head_parity_full_lss_sharded():
+    """When LSS retrieves the full head's argmax, all three heads agree
+    on top-1; lss and lss-sharded agree everywhere (TP=1 shard)."""
+    eng = _engine(m=256, d=16, k_bits=3)
+    q = np.asarray(jax.random.normal(jax.random.PRNGKey(7), (8, 16)))
+    full = eng.rank(q, head="full", record=False)
+    lss = eng.rank(q, head="lss", record=False)
+    sh = eng.rank(q, head="lss-sharded", record=False)
+    np.testing.assert_array_equal(np.asarray(lss.ids), np.asarray(sh.ids))
+    np.testing.assert_allclose(np.asarray(lss.logits),
+                               np.asarray(sh.logits), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(lss.sample_size),
+                                  np.asarray(sh.sample_size))
+    cand = np.asarray(lss.cand_ids)
+    full_top1 = np.asarray(full.ids[:, 0])
+    retrieved = [(full_top1[i] == cand[i]).any() for i in range(8)]
+    assert any(retrieved), "degenerate test: no query retrieved its argmax"
+    for i in range(8):
+        if retrieved[i]:
+            assert int(lss.ids[i, 0]) == int(full_top1[i])
+            assert int(sh.ids[i, 0]) == int(full_top1[i])
+
+
+def test_sharded_pads_missing_candidates_with_minus_one():
+    """top_k > retrieved candidates: the sharded head must report -1 for
+    the padded slots exactly like the single-device head, not arbitrary
+    duplicate ids surviving the all-gather."""
+    # C = 2 tables x 8 capacity = 16 >= top_k, but cross-table duplicates
+    # leave fewer than top_k unique candidates per query
+    eng = _engine(m=64, d=16, k_bits=4, n_tables=2, top_k=12,
+                  buckets=(4,))
+    q = np.asarray(jax.random.normal(jax.random.PRNGKey(11), (4, 16)))
+    lss = eng.rank(q, head="lss", record=False)
+    sh = eng.rank(q, head="lss-sharded", record=False)
+    assert (np.asarray(lss.ids) == -1).any(), "want padded slots"
+    np.testing.assert_array_equal(np.asarray(lss.ids), np.asarray(sh.ids))
+
+
+def test_rank_accepts_1d_labels():
+    eng = _engine(m=256, d=16)
+    q = np.asarray(jax.random.normal(jax.random.PRNGKey(12), (4, 16)))
+    eng.reset_metrics()
+    eng.rank(q, head="lss", labels=np.array([1, 2, 3, 4], np.int32))
+    assert 0.0 <= eng.metrics().label_recall <= 1.0
+
+
+def test_reset_metrics_keeps_pending_results():
+    eng = _engine(m=256, d=16, buckets=(1, 2))
+    rids = [eng.submit(np.zeros(16, np.float32)) for _ in range(3)]
+    # 3 submits > max bucket 2 -> one group auto-flushed already
+    eng.reset_metrics()
+    res = eng.flush()
+    assert [r.rid for r in res] == rids
+
+
+def test_full_head_sample_size_is_m():
+    eng = _engine(m=256, d=16)
+    q = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (4, 16)))
+    out = eng.rank(q, head="full", record=False)
+    assert (np.asarray(out.sample_size) == 256).all()
+
+
+# ----------------------------------------------------------- metrics --
+
+def test_metrics_sample_size_matches_single_retrieval_pass():
+    """avg_sample_size reported by the engine must equal the paper metric
+    computed independently from a fresh retrieve() over the same queries —
+    proving the serving pass and the metric share one retrieval."""
+    eng = _engine(m=512, d=32)
+    q = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (8, 32)))
+    eng.reset_metrics()
+    out = eng.rank(q, head="lss")
+    cand, _ = retrieve(simhash.augment_queries(jnp.asarray(q)), eng.index)
+    want = float(avg_sample_size(cand))
+    got = eng.metrics().avg_sample_size
+    assert got == pytest.approx(want, rel=1e-6)
+    # and the per-query sizes came from the same pass as the ranking
+    assert float(jnp.mean(out.sample_size)) == pytest.approx(want, rel=1e-6)
+
+
+def test_metrics_label_recall_and_latency():
+    eng = _engine(m=512, d=32)
+    q = np.asarray(jax.random.normal(jax.random.PRNGKey(4), (8, 32)))
+    labels = np.asarray(jax.random.randint(jax.random.PRNGKey(5),
+                                           (8, 2), 0, 512), np.int32)
+    eng.reset_metrics()
+    out = eng.rank(q, head="lss", labels=labels)
+    m = eng.metrics()
+    want = float(label_recall(out.cand_ids, jnp.asarray(labels)))
+    assert m.label_recall == pytest.approx(want, rel=1e-6)
+    assert m.n_requests == 8
+    assert m.wall_s > 0 and m.throughput_rps > 0
+    assert m.latency_p99_ms >= m.latency_p50_ms > 0
+
+
+def test_metrics_nan_recall_without_labels():
+    eng = _engine()
+    eng.reset_metrics()
+    eng.rank(np.zeros((2, 32), np.float32))
+    assert math.isnan(eng.metrics().label_recall)
+
+
+# ------------------------------------------------------ request layer --
+
+def test_submit_flush_roundtrip_order_and_results():
+    eng = _engine(m=256, d=16, buckets=(1, 2, 4))
+    rng = np.random.default_rng(1)
+    xs = rng.standard_normal((11, 16)).astype(np.float32)
+    rids = [eng.submit(xs[i]) for i in range(11)]
+    res = eng.flush()
+    assert [r.rid for r in res] == sorted(rids)
+    assert all(r.ids.shape == (5,) for r in res)
+    # flushing a ranked batch == ranking it directly
+    direct = eng.rank(xs, record=False)
+    np.testing.assert_array_equal(
+        np.stack([r.ids for r in res]), np.asarray(direct.ids))
+
+
+@pytest.mark.slow
+def test_serving_throughput_smoke():
+    """End-to-end: a few hundred ragged submissions through the bucketed
+    batcher; sane latency distribution and stable compile counts."""
+    eng = _engine(m=2048, d=32, k_bits=5, buckets=(1, 2, 4, 8, 16, 32))
+    rng = np.random.default_rng(0)
+    total = 0
+    while total < 400:
+        n = int(rng.integers(1, 40))
+        for _ in range(n):
+            eng.submit(rng.standard_normal(32).astype(np.float32),
+                       labels=int(rng.integers(0, 2048)))
+        eng.flush()
+        total += n
+    m = eng.metrics()
+    assert m.n_requests == total
+    assert m.throughput_rps > 100          # CPU does thousands of req/s
+    assert m.latency_p50_ms <= m.latency_p95_ms <= m.latency_p99_ms
+    assert 0 < m.avg_sample_size < 2048
+    assert 0 <= m.label_recall <= 1
+    assert m.n_compiles <= 6               # one per bucket in the ladder

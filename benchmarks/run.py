@@ -2,9 +2,15 @@
 artifact) + one section per paper table/figure + the kernel microbench +
 the roofline table from the dry-run artifacts.
 
+Every section now writes a ``BENCH_<name>.json`` artifact next to the
+existing ``BENCH_serve.json`` (table1, table2, fig2, kernels, roofline),
+so CI can upload machine-readable results even when a section partially
+fails — failures are recorded in the artifact instead of lost in stdout.
+
 Prints ``name,us_per_call,derived`` CSV rows (one per method x dataset).
 Env: BENCH_FAST=0 for the full pass (fast is the default); BENCH_SKIP_TABLES=1
-to only run serving + kernels + roofline summary.
+to only run serving + kernels + roofline summary; BENCH_OUT_DIR overrides
+where the JSON artifacts land (default: cwd).
 """
 
 from __future__ import annotations
@@ -18,11 +24,21 @@ import jax
 import jax.numpy as jnp
 
 
-def bench_kernels() -> list[str]:
+def _write_artifact(name: str, payload: dict) -> str:
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {"bench": name, "backend": jax.default_backend(), **payload}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    return path
+
+
+def bench_kernels() -> tuple[list[dict], list[str]]:
     """Pallas-kernel wrappers vs refs (CPU: interpret-mode correctness
     pass + ref-path timing; TPU timing is the deploy target)."""
     from repro.kernels import bucket_logits, simhash_codes
-    rows = []
+    recs, rows = [], []
     key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (256, 128))
     theta = jax.random.normal(jax.random.PRNGKey(1), (128, 12))
@@ -32,6 +48,8 @@ def bench_kernels() -> list[str]:
     for _ in range(20):
         jax.block_until_ready(f(q))
     us = (time.perf_counter() - t0) / 20 / 256 * 1e6
+    recs.append({"kernel": "simhash_codes", "impl": "ref",
+                 "us_per_query": round(us, 3), "shape": "B256_d128_K12"})
     rows.append(f"kernel_simhash_codes_ref,{us:.3f},B256_d128_K12")
 
     w = jax.random.normal(jax.random.PRNGKey(2), (1024, 128, 128))
@@ -42,23 +60,28 @@ def bench_kernels() -> list[str]:
     for _ in range(20):
         jax.block_until_ready(g(q, ids))
     us = (time.perf_counter() - t0) / 20 / 256 * 1e6
+    recs.append({"kernel": "bucket_logits", "impl": "ref",
+                 "us_per_query": round(us, 3), "shape": "S1024_P128_d128"})
     rows.append(f"kernel_bucket_logits_ref,{us:.3f},S1024_P128_d128")
-    return rows
+    return recs, rows
 
 
-def roofline_summary() -> list[str]:
-    rows = []
+def roofline_summary() -> tuple[list[dict], list[str]]:
+    recs, rows = [], []
     for tag, pat in (("dryrun", "experiments/dryrun/*.json"),
                      ("dryrun_opt", "experiments/dryrun_opt/*.json")):
         for path in sorted(glob.glob(pat)):
             rec = json.load(open(path))
             r = rec["roofline"]
+            recs.append({"tag": tag, "arch": rec["arch"],
+                         "shape": rec["shape"], "mesh": rec["mesh"],
+                         "roofline": r, "memory": rec["memory"]})
             rows.append(
                 f"{tag}_{rec['arch']}_{rec['shape']}_{rec['mesh']},"
                 f"{max(r['t_compute'], r['t_memory'], r['t_collective']) * 1e6:.1f},"
                 f"bound={r['bottleneck']};useful={r['useful_ratio']:.2f};"
                 f"mem_gb={rec['memory']['total_per_device_gb']}")
-    return rows
+    return recs, rows
 
 
 def bench_serving_rows() -> list[str]:
@@ -67,54 +90,72 @@ def bench_serving_rows() -> list[str]:
     from benchmarks.serve_bench import bench_serving, write_artifact
     fast = os.environ.get("BENCH_FAST", "1") != "0"
     rec = bench_serving(fast=fast)
-    write_artifact(rec)
+    write_artifact(rec)   # honors BENCH_SERVE_OUT / BENCH_OUT_DIR itself
     return [
-        f"serve_m{r['m']}_{r['head']},{r['us_per_query']:.1f},"
+        f"serve_m{r['m']}_{r['head']}_{r['impl']},{r['us_per_query']:.1f},"
         f"rps={r['req_per_s']};sample={r['avg_sample_size']:.0f};"
         f"speedup={r['speedup_vs_full']}"
         for r in rec["rows"]
     ]
 
 
+def bench_tables(rows: list[str]) -> None:
+    from benchmarks.paper_tables import (fig2_collision_curves,
+                                         run_setting, table2_kl_sweep)
+    # Table 1 (4 datasets x 5 methods)
+    t1_rows, t1_failures = [], {}
+    for name in ("wiki10-31k", "delicious-200k", "text8",
+                 "wiki-text-2"):
+        try:
+            for r in run_setting(name):
+                t1_rows.append(r._asdict())
+                rows.append(
+                    f"table1_{r.dataset}_{r.method},"
+                    f"{r.us_per_query:.1f},"
+                    f"P@1={r.p1:.4f};P@5={r.p5:.4f};"
+                    f"recall={r.recall:.3f};sample={r.sample:.0f};"
+                    f"mflop={r.mflop_per_query:.2f}")
+        except Exception as e:   # keep the harness running
+            t1_failures[name] = repr(e)
+            rows.append(f"table1_{name}_FAILED,0,{e!r}")
+    _write_artifact("table1", {"rows": t1_rows, "failures": t1_failures})
+    # Table 2 (K x L sweep)
+    try:
+        t2 = table2_kl_sweep()
+        _write_artifact("table2", {"rows": t2})
+        for r in t2:
+            rows.append(f"table2_K{r['K']}_L{r['L']},0,"
+                        f"P@1={r['P@1']};P@5={r['P@5']};"
+                        f"sample={r['sample']}")
+    except Exception as e:
+        _write_artifact("table2", {"rows": [], "failures": {"sweep": repr(e)}})
+        rows.append(f"table2_FAILED,0,{e!r}")
+    # Figure 2 (collision curves)
+    try:
+        hist = fig2_collision_curves()
+        _write_artifact("fig2", {"curves": {
+            k: list(map(float, v)) for k, v in hist.items()}})
+        rows.append(
+            "fig2_collision,0,"
+            f"pos={[round(x, 3) for x in hist['p_collide_pos']]};"
+            f"neg={[round(x, 3) for x in hist['p_collide_neg']]};"
+            f"recall={[round(x, 3) for x in hist['recall']]}")
+    except Exception as e:
+        _write_artifact("fig2", {"curves": {}, "failures": {"fig2": repr(e)}})
+        rows.append(f"fig2_FAILED,0,{e!r}")
+
+
 def main() -> None:
     rows = []
     rows += bench_serving_rows()
-    rows += bench_kernels()
+    kern_recs, kern_rows = bench_kernels()
+    _write_artifact("kernels", {"rows": kern_recs})
+    rows += kern_rows
     if not os.environ.get("BENCH_SKIP_TABLES"):
-        from benchmarks.paper_tables import (fig2_collision_curves,
-                                             run_setting, table2_kl_sweep)
-        # Table 1 (4 datasets x 5 methods)
-        for name in ("wiki10-31k", "delicious-200k", "text8",
-                     "wiki-text-2"):
-            try:
-                for r in run_setting(name):
-                    rows.append(
-                        f"table1_{r.dataset}_{r.method},"
-                        f"{r.us_per_query:.1f},"
-                        f"P@1={r.p1:.4f};P@5={r.p5:.4f};"
-                        f"recall={r.recall:.3f};sample={r.sample:.0f};"
-                        f"mflop={r.mflop_per_query:.2f}")
-            except Exception as e:   # keep the harness running
-                rows.append(f"table1_{name}_FAILED,0,{e!r}")
-        # Table 2 (K x L sweep)
-        try:
-            for r in table2_kl_sweep():
-                rows.append(f"table2_K{r['K']}_L{r['L']},0,"
-                            f"P@1={r['P@1']};P@5={r['P@5']};"
-                            f"sample={r['sample']}")
-        except Exception as e:
-            rows.append(f"table2_FAILED,0,{e!r}")
-        # Figure 2 (collision curves)
-        try:
-            hist = fig2_collision_curves()
-            rows.append(
-                "fig2_collision,0,"
-                f"pos={[round(x, 3) for x in hist['p_collide_pos']]};"
-                f"neg={[round(x, 3) for x in hist['p_collide_neg']]};"
-                f"recall={[round(x, 3) for x in hist['recall']]}")
-        except Exception as e:
-            rows.append(f"fig2_FAILED,0,{e!r}")
-    rows += roofline_summary()
+        bench_tables(rows)
+    roof_recs, roof_rows = roofline_summary()
+    _write_artifact("roofline", {"rows": roof_recs})
+    rows += roof_rows
     print("name,us_per_call,derived")
     for r in rows:
         print(r)

@@ -10,6 +10,18 @@ skipping Algorithm 1 keeps the benchmark CPU-friendly.  K is sized so the
 expected candidate set is ~1k neurons regardless of m, which is exactly
 the regime where the paper reports its ~5x win over the exact head.
 
+Two sections:
+
+  * the head comparison (full | lss | lss-sharded) on the gather-layout
+    index at 50k-500k classes (the bucket-major slab for m=500k would be
+    ~250MB; gather keeps CI memory bounded) — rows carry ``impl: ref``;
+  * the kernel-impl dimension on a bucket-major index at a smaller m:
+    one engine per registry impl (``ref`` | ``pallas_interpret`` and, on
+    TPU, ``pallas``) so ``BENCH_serve.json`` reports ref-vs-pallas
+    us/query side by side through the SAME fused ``lss_topk`` hot path.
+    Interpret mode executes the kernel body per grid step in Python — it
+    validates the fused pipeline, it does not represent TPU speed.
+
 Env: BENCH_FAST=1 (default when run via benchmarks.run) shrinks sizes
 and iteration counts; BENCH_SERVE_OUT overrides the artifact path.
 """
@@ -31,13 +43,15 @@ D_MODEL = 64
 BATCH = 128
 TOP_K = 10
 TARGET_SAMPLE = 1024           # aim ~1k candidates per query
+IMPL_BATCH = 16                # per-impl section: small B, interpret is slow
+IMPL_TARGET_SAMPLE = 512
 
 
-def _lss_cfg(m: int) -> LSSConfig:
-    k_bits = max(4, math.ceil(math.log2(max(2 * m / TARGET_SAMPLE, 2))))
-    # gather path: the bucket-major slab for m=500k would be ~250MB; the
-    # gather layout keeps the benchmark inside CI memory.
-    return LSSConfig(k_bits=k_bits, n_tables=1, use_bucket_major=False)
+def _lss_cfg(m: int, *, bucket_major: bool = False,
+             n_tables: int = 1, target: int = TARGET_SAMPLE) -> LSSConfig:
+    k_bits = max(4, math.ceil(math.log2(max(2 * m / target, 2))))
+    return LSSConfig(k_bits=k_bits, n_tables=n_tables,
+                     use_bucket_major=bucket_major)
 
 
 def _time_head(eng: Engine, q, head: str, iters: int) -> float:
@@ -50,7 +64,24 @@ def _time_head(eng: Engine, q, head: str, iters: int) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def bench_serving(fast: bool = True) -> dict:
+def _row(eng: Engine, q, head: str, impl: str, m: int, batch: int,
+         iters: int, full_us: float | None) -> dict:
+    dt = _time_head(eng, q, head, iters)
+    us = dt / batch * 1e6
+    sample = float(eng.rank(q, head=head, record=False).sample_size.mean())
+    return {
+        "m": m, "head": head, "impl": impl, "batch": batch, "d": D_MODEL,
+        "k_bits": eng.lss_cfg.k_bits, "n_tables": eng.lss_cfg.n_tables,
+        "top_k": TOP_K,
+        "us_per_query": round(us, 2),
+        "req_per_s": round(batch / dt, 1),
+        "avg_sample_size": round(sample, 1),
+        "speedup_vs_full": (round(full_us / us, 2)
+                            if full_us is not None else None),
+    }
+
+
+def bench_heads(fast: bool) -> list[dict]:
     sizes = (50_000, 500_000) if fast else (50_000, 200_000, 500_000)
     rows = []
     for m in sizes:
@@ -58,38 +89,61 @@ def bench_serving(fast: bool = True) -> dict:
                               jnp.float32)
         q = jax.random.normal(jax.random.PRNGKey(1), (BATCH, D_MODEL),
                               jnp.float32)
+        # impl pinned so the artifact's "impl": "ref" label stays true
+        # even under $REPRO_KERNEL_IMPL or on a TPU backend
         eng = Engine(None, w, None, _lss_cfg(m), top_k=TOP_K,
-                     buckets=(BATCH,))
+                     buckets=(BATCH,), impl="ref")
         eng.fit_random(jax.random.PRNGKey(2))
         full_us = None
         for head in ("full", "lss", "lss-sharded"):
             iters = (2 if fast else 5) if head == "full" \
                 else (20 if fast else 50)
-            dt = _time_head(eng, q, head, iters)
-            us = dt / BATCH * 1e6
-            sample = float(eng.rank(q, head=head,
-                                    record=False).sample_size.mean())
+            row = _row(eng, q, head, "ref", m, BATCH, iters, full_us)
             if head == "full":
-                full_us = us
-            rows.append({
-                "m": m, "head": head, "batch": BATCH, "d": D_MODEL,
-                "k_bits": eng.lss_cfg.k_bits, "top_k": TOP_K,
-                "us_per_query": round(us, 2),
-                "req_per_s": round(BATCH / dt, 1),
-                "avg_sample_size": round(sample, 1),
-                "speedup_vs_full": round(full_us / us, 2),
-            })
+                full_us = row["us_per_query"]
+                row["speedup_vs_full"] = 1.0
+            rows.append(row)
+    return rows
+
+
+def bench_impls(fast: bool) -> list[dict]:
+    """One engine per kernel impl over the SAME bucket-major index."""
+    m = 20_000 if fast else 100_000
+    impls = ["ref", "pallas_interpret"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")
+    w = jax.random.normal(jax.random.PRNGKey(0), (m, D_MODEL), jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(1), (IMPL_BATCH, D_MODEL),
+                          jnp.float32)
+    cfg = _lss_cfg(m, bucket_major=True, n_tables=2,
+                   target=IMPL_TARGET_SAMPLE)
+    rows = []
+    for impl in impls:
+        eng = Engine(None, w, None, cfg, top_k=TOP_K, buckets=(IMPL_BATCH,),
+                     impl=impl)
+        eng.fit_random(jax.random.PRNGKey(2))
+        iters = 1 if (impl == "pallas_interpret" and fast) else \
+            (2 if impl == "pallas_interpret" else (20 if fast else 50))
+        rows.append(_row(eng, q, "lss", impl, m, IMPL_BATCH, iters, None))
+    return rows
+
+
+def bench_serving(fast: bool = True) -> dict:
     return {
         "bench": "serve",
         "backend": jax.default_backend(),
         "n_devices": len(jax.devices()),
         "fast": fast,
-        "rows": rows,
+        "rows": bench_heads(fast) + bench_impls(fast),
     }
 
 
 def write_artifact(record: dict, path: str | None = None) -> str:
-    path = path or os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
+    """Precedence: explicit path > $BENCH_SERVE_OUT > $BENCH_OUT_DIR/
+    BENCH_serve.json > ./BENCH_serve.json."""
+    path = (path or os.environ.get("BENCH_SERVE_OUT")
+            or os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
+                            "BENCH_serve.json"))
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
     return path
@@ -101,10 +155,11 @@ def main() -> None:
     path = write_artifact(rec)
     print(f"wrote {path}")
     for r in rec["rows"]:
-        print(f"  m={r['m']:>7} {r['head']:<11} "
-              f"{r['us_per_query']:>9.1f} us/q  {r['req_per_s']:>9.0f} rps  "
-              f"sample={r['avg_sample_size']:>8.0f}  "
-              f"speedup={r['speedup_vs_full']:.2f}x")
+        speed = ("" if r["speedup_vs_full"] is None
+                 else f"  speedup={r['speedup_vs_full']:.2f}x")
+        print(f"  m={r['m']:>7} {r['head']:<11} {r['impl']:<16} "
+              f"{r['us_per_query']:>10.1f} us/q  {r['req_per_s']:>9.0f} rps"
+              f"  sample={r['avg_sample_size']:>7.0f}{speed}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,15 @@ Pipeline per query embedding q (from the layer below the WOL):
 Everything is static-shape: the candidate set is ``[B, L*P]`` with -1
 padding; duplicates across tables are masked (not compacted) before
 ranking, which preserves exact top-k semantics.
+
+Retrieval and scoring dispatch through the kernel registry
+(``repro.kernels.registry``): on a bucket-major index, ``lss_forward``
+routes the whole pipeline through the fused ``lss_topk`` op (one Pallas
+pass on TPU, the jnp oracle on CPU); ``retrieve`` and
+``sparse_logits_bucketed`` route through the ``simhash_codes`` /
+``bucket_logits`` ops.  Pass ``impl=`` to pin an implementation
+(``ref`` | ``pallas`` | ``pallas_interpret``) or leave ``None`` for
+backend auto-selection.
 """
 
 from __future__ import annotations
@@ -19,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import simhash
 from repro.core.tables import LSSTables, build_tables, bucketize_weights
+from repro.kernels import bucket_logits, lss_topk, simhash_codes
 
 __all__ = [
     "LSSConfig", "LSSIndex", "build_index", "retrieve", "dedup_mask",
@@ -72,7 +82,8 @@ def build_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig) -> LSSIndex:
     return LSSIndex(theta, tables, wb)
 
 
-def retrieve(q_aug: jax.Array, index: LSSIndex) -> tuple[jax.Array, jax.Array]:
+def retrieve(q_aug: jax.Array, index: LSSIndex, impl: str | None = None
+             ) -> tuple[jax.Array, jax.Array]:
     """Query the L tables.
 
     Returns:
@@ -80,7 +91,11 @@ def retrieve(q_aug: jax.Array, index: LSSIndex) -> tuple[jax.Array, jax.Array]:
       buckets:  int32 ``[B, L]`` the bucket hit in each table
     """
     t = index.tables
-    buckets = simhash.bucket_ids(q_aug, index.theta, t.k_bits, t.n_tables)
+    # registry-dispatched simhash_codes on the normalized queries is
+    # exactly simhash.bucket_ids (sign is scale-invariant; the ref impls
+    # share the same fp32 op sequence)
+    buckets = simhash_codes(simhash.unit(q_aug), index.theta, t.k_bits,
+                            t.n_tables, impl=impl)
     # table_ids[l, buckets[b, l]] for every (b, l)
     cand = jnp.take_along_axis(
         t.table_ids[None],                       # [1, L, 2^K, P]
@@ -121,23 +136,22 @@ def sparse_logits_gather(q_aug: jax.Array, w_aug: jax.Array,
 
 
 def sparse_logits_bucketed(q_aug: jax.Array, index: LSSIndex,
-                           buckets: jax.Array) -> tuple[jax.Array, jax.Array]:
+                           buckets: jax.Array, impl: str | None = None
+                           ) -> tuple[jax.Array, jax.Array]:
     """Bucket-major path: one contiguous ``[P, d]`` slab per (query, table).
 
-    This is the layout the Pallas kernel (kernels/bucket_logits) consumes;
-    here it is expressed as take_along_axis so the dry-run lowers on any
-    backend while XLA still sees contiguous dynamic slices.
+    Routes through the registry ``bucket_logits`` op on the flattened
+    ``[S, P, d]`` slab layout (S = L * 2^K) — the jnp ref for the XLA
+    path, the scalar-prefetch Pallas kernel on TPU.
     """
     t = index.tables
     wb = index.w_bucketed                                 # [L, 2^K, P, d]
-    slabs = jnp.take_along_axis(
-        wb[None], buckets.T[None, :, :, None, None], axis=2)[0]   # [L,B,P,d]
-    slabs = jnp.swapaxes(slabs, 0, 1)                     # [B, L, P, d]
-    logits = jnp.einsum("bd,blpd->blp", q_aug.astype(jnp.float32),
-                        slabs.astype(jnp.float32))
-    ids = jnp.take_along_axis(
-        t.table_ids[None], buckets.T[None, :, :, None], axis=2)[0]
-    ids = jnp.swapaxes(ids, 0, 1).reshape(q_aug.shape[0], -1)
+    w_flat = wb.reshape(t.n_tables * t.n_buckets, t.capacity, wb.shape[-1])
+    slab_ids = buckets + jnp.arange(
+        t.n_tables, dtype=buckets.dtype)[None, :] * t.n_buckets   # [B, L]
+    logits = bucket_logits(q_aug, w_flat, slab_ids, impl=impl)    # [B,L,P]
+    ids = t.table_ids.reshape(-1, t.capacity)[slab_ids]           # [B,L,P]
+    ids = ids.reshape(q_aug.shape[0], -1)
     logits = logits.reshape(q_aug.shape[0], -1)
     return jnp.where(ids >= 0, logits, NEG_INF), ids
 
@@ -156,18 +170,22 @@ class LSSForward(NamedTuple):
 
 
 def lss_forward(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
-                top_k: int = 5) -> LSSForward:
+                top_k: int = 5, *, impl: str | None = None) -> LSSForward:
     """Full Algorithm 2 with serving metrics, single retrieval pass.
 
-    ``w_aug`` is only needed for the gather path (``w_bucketed is None``).
+    On a bucket-major index the whole retrieve -> slab logits -> dedup ->
+    top-k pipeline is one registry-dispatched ``lss_topk`` op (a single
+    fused Pallas pass on TPU).  ``w_aug`` is only needed for the gather
+    path (``w_bucketed is None``), which keeps the XLA gather lowering.
     """
     q_aug = simhash.augment_queries(q)
     if index.w_bucketed is not None:
-        cand_ids, buckets = retrieve(q_aug, index)
-        logits, cand_ids = sparse_logits_bucketed(q_aug, index, buckets)
-    else:
-        cand_ids, _ = retrieve(q_aug, index)
-        logits = sparse_logits_gather(q_aug, w_aug, cand_ids)
+        t = index.tables
+        out = lss_topk(q_aug, index.theta, t.table_ids, index.w_bucketed,
+                       top_k=top_k, impl=impl)
+        return LSSForward(*out)
+    cand_ids, _ = retrieve(q_aug, index, impl=impl)
+    logits = sparse_logits_gather(q_aug, w_aug, cand_ids)
     mask = dedup_mask(cand_ids)
     logits = jnp.where(mask, logits, NEG_INF)
     top_logits, pos = jax.lax.top_k(logits, top_k)
@@ -177,9 +195,10 @@ def lss_forward(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
 
 
 def lss_predict(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
-                top_k: int = 5) -> tuple[jax.Array, jax.Array]:
+                top_k: int = 5, *, impl: str | None = None
+                ) -> tuple[jax.Array, jax.Array]:
     """(top-k logits, top-k neuron ids) ``[B, k]`` — see ``lss_forward``."""
-    out = lss_forward(q, index, w_aug, top_k)
+    out = lss_forward(q, index, w_aug, top_k, impl=impl)
     return out.top_logits, out.top_ids
 
 

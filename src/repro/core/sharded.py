@@ -21,10 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import simhash
-from repro.core.lss import (LSSConfig, LSSIndex, NEG_INF, build_index,
-                            dedup_mask, retrieve, sparse_logits_bucketed,
-                            sparse_logits_gather)
+from repro.core.lss import LSSConfig, LSSIndex, build_index, lss_forward
 from repro.utils import compat
 
 __all__ = ["build_local_index", "local_topk", "sharded_lss_predict",
@@ -39,40 +36,32 @@ def build_local_index(w_aug_local: jax.Array, theta: jax.Array,
 
 
 def local_topk(q: jax.Array, index: LSSIndex, w_aug_local: jax.Array | None,
-               k: int, with_aux: bool = False):
+               k: int, with_aux: bool = False, impl: str | None = None):
     """Shard-local Algorithm 2 returning exactly-k (logits, local ids).
 
-    With ``with_aux`` also returns the per-query local sample size (unique
-    neurons scored on this shard), computed from the SAME retrieval pass.
+    Delegates to ``lss_forward`` (registry-dispatched; the fused Pallas
+    pass on a bucket-major index), so shard-local slots fewer than k read
+    -1 rather than an arbitrary duplicate id that would survive the
+    global all-gather.  With ``with_aux`` also returns the per-query
+    local sample size from the SAME retrieval pass.
     """
-    q_aug = simhash.augment_queries(q)
-    if index.w_bucketed is not None:
-        _, buckets = retrieve(q_aug, index)
-        logits, cand_ids = sparse_logits_bucketed(q_aug, index, buckets)
-    else:
-        cand_ids, _ = retrieve(q_aug, index)
-        logits = sparse_logits_gather(q_aug, w_aug_local, cand_ids)
-    mask = dedup_mask(cand_ids)
-    logits = jnp.where(mask, logits, NEG_INF)
-    top_logits, pos = jax.lax.top_k(logits, k)
-    top_ids = jnp.take_along_axis(cand_ids, pos, axis=-1)
-    # fewer than k unique candidates: padded slots must read -1, not an
-    # arbitrary duplicate id (they would survive the global all-gather)
-    top_ids = jnp.where(top_logits > NEG_INF / 2, top_ids, -1)
+    out = lss_forward(q, index, w_aug_local, k, impl=impl)
     if with_aux:
-        return top_logits, top_ids, jnp.sum(mask, axis=-1)
-    return top_logits, top_ids
+        return out.top_logits, out.top_ids, out.sample_size
+    return out.top_logits, out.top_ids
 
 
 def sharded_lss_predict(q: jax.Array, index: LSSIndex,
                         w_aug_local: jax.Array | None, *, k: int,
-                        axis_name: str, m_local: int
+                        axis_name: str, m_local: int,
+                        impl: str | None = None
                         ) -> tuple[jax.Array, jax.Array]:
     """Body to run INSIDE shard_map: q replicated, index/w shard-local.
 
     Returns global (top-k logits, top-k GLOBAL neuron ids), replicated.
     """
-    logits, ids = local_topk(q, index, w_aug_local, k)          # [B, k]
+    logits, ids = local_topk(q, index, w_aug_local, k,
+                             impl=impl)                         # [B, k]
     offset = jax.lax.axis_index(axis_name) * m_local
     gids = jnp.where(ids >= 0, ids + offset, -1)
     all_logits = jax.lax.all_gather(logits, axis_name, axis=1)  # [B, TP, k]
@@ -86,12 +75,13 @@ def sharded_lss_predict(q: jax.Array, index: LSSIndex,
 
 def sharded_lss_forward(q: jax.Array, index: LSSIndex,
                         w_aug_local: jax.Array | None, *, k: int,
-                        axis_name: str, m_local: int
+                        axis_name: str, m_local: int,
+                        impl: str | None = None
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """``sharded_lss_predict`` + per-query GLOBAL sample size (psum of the
     shard-local unique-candidate counts) from the single retrieval pass."""
     logits, ids, local_sample = local_topk(q, index, w_aug_local, k,
-                                           with_aux=True)
+                                           with_aux=True, impl=impl)
     offset = jax.lax.axis_index(axis_name) * m_local
     gids = jnp.where(ids >= 0, ids + offset, -1)
     all_logits = jax.lax.all_gather(logits, axis_name, axis=1)  # [B, TP, k]
@@ -107,17 +97,19 @@ def sharded_lss_forward(q: jax.Array, index: LSSIndex,
 def make_sharded_predict(mesh: jax.sharding.Mesh, model_axis: str,
                          cfg: LSSConfig, m_local: int, k: int,
                          batch_axis: str | None = None,
-                         with_aux: bool = False):
+                         with_aux: bool = False,
+                         impl: str | None = None):
     """Wrap the sharded predictor in shard_map for the given mesh.
 
     Expects stacked per-shard pytrees: index leaves with a leading [TP] dim
     sharded over ``model_axis``; q sharded over ``batch_axis`` (or
     replicated).  Returns a function (q, stacked_index, w_local_stack|None)
     -> (logits [B,k], ids [B,k]) — plus sample size [B] if ``with_aux``.
+    ``impl`` pins the registry kernel impl for the shard-local retrieval.
     """
     qspec = P(batch_axis) if batch_axis else P()
     body = partial(sharded_lss_forward if with_aux else sharded_lss_predict,
-                   k=k, axis_name=model_axis, m_local=m_local)
+                   k=k, axis_name=model_axis, m_local=m_local, impl=impl)
 
     def unstacked_body(q, index_stack, w_stack):
         index = jax.tree.map(lambda x: x[0], index_stack)

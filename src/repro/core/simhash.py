@@ -23,6 +23,7 @@ __all__ = [
     "augment_neurons",
     "augment_queries",
     "init_hyperplanes",
+    "unit",
     "hash_bits",
     "soft_codes",
     "pack_bits",
@@ -48,13 +49,17 @@ def init_hyperplanes(key: jax.Array, d_aug: int, k_bits: int, n_tables: int,
     return jax.random.normal(key, (d_aug, k_bits * n_tables), dtype)
 
 
-def _unit(x: jax.Array) -> jax.Array:
+def unit(x: jax.Array) -> jax.Array:
     """L2-normalize the hashed vector.  ``sign(theta^T x)`` is invariant to
     positive scaling of x, so hard buckets are unchanged — but the tanh
     relaxation would saturate at ``|theta^T x| ~ ||x|| ~ sqrt(d)`` and kill
-    IUL gradients.  Normalizing is therefore part of the hash definition."""
+    IUL gradients.  Normalizing is therefore part of the hash definition
+    (the fused lss_topk kernel replicates it bit-for-bit)."""
     n = jnp.linalg.norm(x.astype(jnp.float32), axis=-1, keepdims=True)
     return (x.astype(jnp.float32) / jnp.maximum(n, 1e-12))
+
+
+_unit = unit   # historical private name
 
 
 def hash_bits(x: jax.Array, theta: jax.Array) -> jax.Array:

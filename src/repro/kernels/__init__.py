@@ -1,9 +1,15 @@
 """Pallas TPU kernels (validated in interpret mode on CPU).
 
 Each kernel ships as <name>/{kernel.py, ops.py, ref.py}: the pallas_call
-with explicit BlockSpec tiling, the jit'd public wrapper with impl
-dispatch, and the pure-jnp oracle.
+with explicit BlockSpec tiling, the public wrapper, and the pure-jnp
+oracle.  Implementations register on the dispatch registry
+(``repro.kernels.registry``): selection is automatic by backend (pallas
+on TPU, ref elsewhere), overridable per call (``impl=``), per process
+(``registry.set_default_impl`` / ``use_impl``), or via the
+``REPRO_KERNEL_IMPL`` environment variable.
 """
+from repro.kernels import registry
 from repro.kernels.simhash_codes import simhash_codes
 from repro.kernels.bucket_logits import bucket_logits
-__all__ = ["simhash_codes", "bucket_logits"]
+from repro.kernels.lss_topk import lss_topk
+__all__ = ["registry", "simhash_codes", "bucket_logits", "lss_topk"]

@@ -29,10 +29,11 @@ def _kernel(slab_ids_ref, q_ref, w_ref, out_ref):
     del slab_ids_ref  # consumed by the index_map only
     q = q_ref[...].astype(jnp.float32)               # [1, d]
     w = w_ref[0].astype(jnp.float32)                 # [P, d]
-    logits = jax.lax.dot_general(
-        q, w, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)          # [1, P]
-    out_ref[...] = logits[:, None, :]
+    # q @ w.T (not dot_general over (1,1)): XLA lowers this to the same
+    # gemm as the ref einsum, so interpret mode is bit-identical to the
+    # jnp oracle on CPU.
+    logits = jnp.matmul(q, w.T, preferred_element_type=jnp.float32)
+    out_ref[...] = logits[:, None, :]                # [1, 1, P]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -1,31 +1,51 @@
-"""Public op: bucket-major sparse WOL logits with impl dispatch + padding."""
+"""Public op: bucket-major sparse WOL logits, dispatched through the
+kernel registry."""
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.bucket_logits.kernel import bucket_logits_pallas
 from repro.kernels.bucket_logits.ref import bucket_logits_ref
+from repro.kernels.registry import kernel_op
+
+bucket_logits_op = kernel_op("bucket_logits")
+bucket_logits_op.register_impl("ref", bucket_logits_ref)
+
+
+def _pallas_impl(q: jax.Array, w_slabs: jax.Array, slab_ids: jax.Array,
+                 *, interpret: bool) -> jax.Array:
+    bsz, d = q.shape
+    n_slabs, cap, _ = w_slabs.shape
+    if not interpret:
+        # Lane padding is a TPU tiling requirement only; interpret mode
+        # runs unpadded so the fp32 dot sees the ref's exact contraction
+        # length — bit-identical logits on CPU.
+        pad_d = (-d) % 128
+        pad_p = (-cap) % 128
+        if pad_d:
+            q = jnp.pad(q, ((0, 0), (0, pad_d)))
+            w_slabs = jnp.pad(w_slabs, ((0, 0), (0, 0), (0, pad_d)))
+        if pad_p:
+            w_slabs = jnp.pad(w_slabs, ((0, 0), (0, pad_p), (0, 0)))
+    out = bucket_logits_pallas(q, w_slabs, slab_ids, interpret=interpret)
+    return out[:, :, :cap]
+
+
+bucket_logits_op.register_impl(
+    "pallas", functools.partial(_pallas_impl, interpret=False))
+bucket_logits_op.register_impl(
+    "pallas_interpret", functools.partial(_pallas_impl, interpret=True))
 
 
 def bucket_logits(q: jax.Array, w_slabs: jax.Array, slab_ids: jax.Array,
-                  *, impl: str = "ref") -> jax.Array:
+                  *, impl: str | None = None) -> jax.Array:
     """``[B,d] x [S,P,d] x [B,L] -> [B,L,P]`` fp32 sparse logits.
 
-    impl: ``ref`` | ``pallas`` | ``pallas_interpret``.
+    impl: ``ref`` | ``pallas`` | ``pallas_interpret`` | None (registry
+    auto-selection — see ``repro.kernels.registry``).
     """
-    if impl == "ref":
-        return bucket_logits_ref(q, w_slabs, slab_ids)
-    bsz, d = q.shape
-    n_slabs, cap, _ = w_slabs.shape
-    pad_d = (-d) % 128
-    pad_p = (-cap) % 128
-    if pad_d:
-        q = jnp.pad(q, ((0, 0), (0, pad_d)))
-        w_slabs = jnp.pad(w_slabs, ((0, 0), (0, 0), (0, pad_d)))
-    if pad_p:
-        w_slabs = jnp.pad(w_slabs, ((0, 0), (0, pad_p), (0, 0)))
-    out = bucket_logits_pallas(q, w_slabs, slab_ids,
-                               interpret=(impl == "pallas_interpret"))
-    return out[:, :, :cap]
+    return bucket_logits_op(q, w_slabs, slab_ids, impl=impl)

@@ -1,0 +1,2 @@
+from repro.kernels.lss_topk.ops import lss_topk
+__all__ = ["lss_topk"]

@@ -1,0 +1,175 @@
+"""Fused Pallas TPU kernel: the whole LSS serving pipeline in one pass.
+
+Per query, in a single ``pallas_call`` grid step:
+
+    simhash code (hash matmul + sign + bit-pack)
+      -> data-dependent slab DMA (bucket-major weights stay in HBM;
+         only the L hit slabs ever reach VMEM)
+      -> slab logits on the MXU
+      -> cross-table dedup mask
+      -> first-occurrence top-k
+
+The slab index depends on the hash computed INSIDE the kernel, so the
+canonical scalar-prefetch trick (``bucket_logits``) cannot express it:
+instead ``w_slabs``/``table_ids`` are bound with ``memory_space=ANY`` and
+fetched with ``pltpu.make_async_copy`` at a runtime-computed index — the
+same manual-DMA pattern as paged attention.  Nothing wider than one
+``[P, d]`` slab is ever materialised, which is the point of LSS: the full
+head streams ``m*d`` weights per batch, this kernel streams ``L*P*d`` per
+query with no HBM round-trips for the intermediate codes or logits.
+
+Bit-exactness contract (interpret mode, CPU): every fp32 reduction is
+expressed so XLA lowers it to the same gemm the jnp oracle uses —
+``q @ w.T`` for slab logits (NOT ``dot_general`` over ``((1,),(1,))``,
+which takes a different Eigen path), row-blocked hash matmul, and a
+power-of-two bit-pack matmul that is exact in fp32.  ``ops.py`` skips
+lane padding in interpret mode so contraction lengths match the ref.
+
+VMEM budget: theta ``[d, KL]`` + one ``[P, d]`` slab + the ``[C, C]``
+dedup compare (C = L*P).  C beyond ~2k needs a sorted dedup instead of
+the quadratic mask; sized fine for the paper's 0.2-6% sample regimes.
+
+Top-k is k passes of masked max with first-occurrence argmin-of-index,
+which reproduces ``jax.lax.top_k``'s stable lower-index-first
+tie-breaking exactly (k is small: 1-10 in every serving config).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30   # matches repro.core.lss.NEG_INF (kept import-free)
+
+
+def _make_kernel(k_bits: int, n_tables: int, top_k: int, cap: int):
+    n_buckets = 2 ** k_bits
+
+    def kernel(q_ref, theta_ref, pack_ref, tids_hbm, w_hbm,
+               top_l_ref, top_i_ref, sample_ref, cand_ref,
+               w_vmem, ids_vmem, sem_w, sem_i):
+        # ---- stage 1: simhash code ------------------------------------
+        q = q_ref[...].astype(jnp.float32)                    # [1, d]
+        # same normalization as core.simhash.unit (hash definition)
+        norm = jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True))
+        qn = q / jnp.maximum(norm, 1e-12)
+        scores = jnp.matmul(qn, theta_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)  # [1, KL]
+        bits = (scores > 0).astype(jnp.float32)
+        packed = jnp.matmul(bits, pack_ref[...],
+                            preferred_element_type=jnp.float32)  # [1, L]
+        buckets = packed.astype(jnp.int32)
+
+        # ---- stage 2: slab DMA + MXU logits, one hit slab per table ---
+        logit_rows = []
+        id_rows = []
+        for t in range(n_tables):                 # static unroll over L
+            slab = t * n_buckets + buckets[0, t]
+            cp_w = pltpu.make_async_copy(w_hbm.at[slab], w_vmem, sem_w)
+            cp_i = pltpu.make_async_copy(tids_hbm.at[slab], ids_vmem, sem_i)
+            cp_w.start()
+            cp_i.start()
+            cp_w.wait()
+            cp_i.wait()
+            w = w_vmem[...].astype(jnp.float32)               # [P, d]
+            logit_rows.append(
+                jnp.matmul(q, w.T, preferred_element_type=jnp.float32))
+            id_rows.append(ids_vmem[...].reshape(1, cap))
+        logits = jnp.concatenate(logit_rows, axis=1)          # [1, C]
+        cand = jnp.concatenate(id_rows, axis=1)               # [1, C]
+        cand_ref[...] = cand
+
+        # ---- stage 3: first-occurrence dedup mask ---------------------
+        c = cand.shape[1]
+        eq = cand.T == cand                                   # [C, C]
+        row = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+        n_earlier = jnp.sum((eq & (col < row)).astype(jnp.int32),
+                            axis=1, keepdims=True)            # [C, 1]
+        valid = ((n_earlier == 0) & (cand.T >= 0)).T          # [1, C]
+        masked = jnp.where(valid, logits, NEG_INF)
+        sample_ref[0, 0] = jnp.sum(valid.astype(jnp.int32))
+
+        # ---- stage 4: top-k (stable, lower index wins ties) -----------
+        pos = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)
+        work = masked
+        for i in range(top_k):                    # static unroll over k
+            best = jnp.max(work, axis=1, keepdims=True)       # [1, 1]
+            first = jnp.min(jnp.where(work == best, pos, c),
+                            axis=1, keepdims=True)            # [1, 1]
+            sel = pos == first                                # [1, C]
+            cid = jnp.sum(jnp.where(sel, cand, 0), axis=1,
+                          keepdims=True)                      # [1, 1]
+            top_l_ref[0, i] = best[0, 0]
+            top_i_ref[0, i] = jnp.where(best[0, 0] > NEG_INF / 2,
+                                        cid[0, 0], -1)
+            work = jnp.where(sel, NEG_INF, work)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("k_bits", "n_tables", "top_k",
+                                             "interpret"))
+def lss_topk_pallas(q_aug: jax.Array, theta: jax.Array, tids_flat: jax.Array,
+                    w_flat: jax.Array, *, k_bits: int, n_tables: int,
+                    top_k: int, interpret: bool = False
+                    ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused retrieve->score->top-k.
+
+    Args:
+      q_aug:     ``[B, d]`` augmented queries (``ops.py`` pads d on TPU).
+      theta:     ``[d, K*L]`` hyperplanes.
+      tids_flat: int32 ``[S, P]`` flattened bucket-major ids (S = L*2^K).
+      w_flat:    ``[S, P, d]`` flattened bucket-major slabs.
+
+    Returns:
+      (top_logits [B,k], top_ids [B,k], sample [B,1], cand_ids [B, L*P]).
+    """
+    bsz, d = q_aug.shape
+    n_slabs, cap, dw = w_flat.shape
+    assert d == dw, (d, dw)
+    assert n_slabs == n_tables * 2 ** k_bits, (n_slabs, n_tables, k_bits)
+    kl = k_bits * n_tables
+    assert theta.shape == (d, kl), (theta.shape, d, kl)
+    n_cand = n_tables * cap
+    assert top_k <= n_cand, (top_k, n_cand)
+
+    # constant pack matrix: pack[t*K + j, t] = 2^j (exact in fp32)
+    eye = jnp.eye(n_tables, dtype=jnp.float32)
+    weights = 2.0 ** jnp.arange(k_bits, dtype=jnp.float32)
+    pack = (eye[:, None, :] * weights[None, :, None]).reshape(kl, n_tables)
+
+    return pl.pallas_call(
+        _make_kernel(k_bits, n_tables, top_k, cap),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b: (b, 0)),
+            pl.BlockSpec((d, kl), lambda b: (0, 0)),
+            pl.BlockSpec((kl, n_tables), lambda b: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),     # ids stay in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),     # slabs stay in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, top_k), lambda b: (b, 0)),
+            pl.BlockSpec((1, top_k), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, n_cand), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, n_cand), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((cap, d), w_flat.dtype),
+            pltpu.VMEM((cap,), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(q_aug, theta, pack, tids_flat, w_flat)

@@ -1,0 +1,75 @@
+"""Public op: fused LSS retrieve->score->top-k, dispatched through the
+kernel registry.
+
+This is the serving hot path: ``core.lss.lss_forward`` routes every
+bucket-major forward through this op, so whichever impl the registry
+resolves (ref on CPU, pallas on TPU, pallas_interpret under test) is the
+one that actually serves traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lss_topk.kernel import lss_topk_pallas
+from repro.kernels.lss_topk.ref import lss_topk_ref
+from repro.kernels.registry import kernel_op
+
+lss_topk_op = kernel_op("lss_topk")
+lss_topk_op.register_impl("ref", lss_topk_ref)
+
+
+def _pallas_impl(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
+                 w_bucketed: jax.Array, *, top_k: int, interpret: bool
+                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    n_tables, n_buckets, cap = table_ids.shape
+    k_bits = n_buckets.bit_length() - 1
+    assert 2 ** k_bits == n_buckets, n_buckets
+    bsz, d = q_aug.shape
+    tids = table_ids.reshape(n_tables * n_buckets, cap)
+    w_flat = w_bucketed.reshape(n_tables * n_buckets, cap, d)
+    pad_p = 0
+    if not interpret:
+        # TPU lane alignment; interpret mode runs unpadded so the fp32
+        # reductions are bit-identical to the jnp oracle (see kernel.py).
+        pad_d = (-d) % 128
+        pad_p = (-cap) % 128
+        if pad_d:
+            q_aug = jnp.pad(q_aug, ((0, 0), (0, pad_d)))
+            theta = jnp.pad(theta, ((0, pad_d), (0, 0)))
+            w_flat = jnp.pad(w_flat, ((0, 0), (0, 0), (0, pad_d)))
+        if pad_p:
+            w_flat = jnp.pad(w_flat, ((0, 0), (0, pad_p), (0, 0)))
+            # padded capacity slots must read as empty, not as neuron 0
+            tids = jnp.pad(tids, ((0, 0), (0, pad_p)), constant_values=-1)
+    top_logits, top_ids, sample, cand = lss_topk_pallas(
+        q_aug, theta, tids, w_flat, k_bits=k_bits, n_tables=n_tables,
+        top_k=top_k, interpret=interpret)
+    if pad_p:
+        cand = cand.reshape(bsz, n_tables, -1)[:, :, :cap]
+        cand = cand.reshape(bsz, n_tables * cap)
+    return top_logits, top_ids, sample[:, 0], cand
+
+
+lss_topk_op.register_impl(
+    "pallas", functools.partial(_pallas_impl, interpret=False))
+lss_topk_op.register_impl(
+    "pallas_interpret", functools.partial(_pallas_impl, interpret=True))
+
+
+def lss_topk(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
+             w_bucketed: jax.Array, *, top_k: int, impl: str | None = None
+             ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused Algorithm-2 forward over a bucket-major index.
+
+    ``[B,d] x [d,KL] x [L,2^K,P] x [L,2^K,P,d] ->``
+    ``(top_logits [B,k], top_ids [B,k], sample_size [B], cand_ids [B,L*P])``
+
+    impl: ``ref`` | ``pallas`` | ``pallas_interpret`` | None (registry
+    auto-selection — see ``repro.kernels.registry``).
+    """
+    return lss_topk_op(q_aug, theta, table_ids, w_bucketed, top_k=top_k,
+                       impl=impl)

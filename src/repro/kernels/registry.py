@@ -1,0 +1,171 @@
+"""Kernel dispatch registry: named ops with ref / pallas / pallas_interpret
+implementations and automatic backend selection.
+
+Every kernel package registers its implementations on a :class:`KernelOp`
+(``kernel_op(name)`` is get-or-create, so registration order never
+matters).  Callers go through the op object — ``op(*args, impl=None)`` —
+and the registry picks the implementation:
+
+  1. an explicit ``impl=`` argument at the call site (must exist, else
+     ``KeyError``),
+  2. a process-wide override set with :func:`set_default_impl` (or the
+     :func:`use_impl` context manager),
+  3. the ``REPRO_KERNEL_IMPL`` environment variable,
+  4. backend auto-selection: ``pallas`` on TPU, ``ref`` elsewhere
+     (falling back to ``pallas_interpret`` for ops that ship no jnp ref).
+
+Overrides from (2)/(3) that an op does not implement fall through to the
+backend default instead of erroring, so ``REPRO_KERNEL_IMPL=pallas`` on a
+TPU host is safe even if some op is ref-only.
+
+Dispatches are recorded at trace time (ops are typically called inside
+``jax.jit``, whose Python body runs once per compilation), so tests and
+tooling can assert which implementation actually served a path via
+:func:`dispatch_log` / :func:`last_dispatch`.
+"""
+
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from typing import Callable
+
+import jax
+
+__all__ = [
+    "IMPLS", "ENV_VAR", "KernelOp", "kernel_op", "get_op", "list_ops",
+    "resolve_impl", "set_default_impl", "use_impl", "dispatch_log",
+    "dispatch_counts", "last_dispatch", "reset_dispatch_log",
+]
+
+IMPLS = ("ref", "pallas", "pallas_interpret")
+ENV_VAR = "REPRO_KERNEL_IMPL"
+
+_ops: dict[str, "KernelOp"] = {}
+_default_impl: str | None = None
+_log: list[tuple[str, str]] = []
+
+
+class KernelOp:
+    """One named op and its registered implementations."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.impls: dict[str, Callable] = {}
+
+    def impl(self, impl_name: str) -> Callable:
+        """Decorator: register ``fn`` as the ``impl_name`` implementation."""
+        def deco(fn: Callable) -> Callable:
+            self.register_impl(impl_name, fn)
+            return fn
+        return deco
+
+    def register_impl(self, impl_name: str, fn: Callable) -> None:
+        if impl_name not in IMPLS:
+            raise ValueError(
+                f"impl must be one of {IMPLS}, got {impl_name!r}")
+        self.impls[impl_name] = fn
+
+    def __call__(self, *args, impl: str | None = None, **kwargs):
+        choice = resolve_impl(self.name, impl)
+        _log.append((self.name, choice))
+        return self.impls[choice](*args, **kwargs)
+
+    def __repr__(self) -> str:
+        return f"KernelOp({self.name!r}, impls={sorted(self.impls)})"
+
+
+def kernel_op(name: str) -> KernelOp:
+    """Get-or-create the op named ``name``."""
+    if name not in _ops:
+        _ops[name] = KernelOp(name)
+    return _ops[name]
+
+
+def get_op(name: str) -> KernelOp:
+    if name not in _ops:
+        raise KeyError(f"unknown kernel op {name!r}; "
+                       f"registered: {sorted(_ops)}")
+    return _ops[name]
+
+
+def list_ops() -> list[str]:
+    return sorted(_ops)
+
+
+def set_default_impl(impl: str | None) -> None:
+    """Process-wide impl override (``None`` clears it)."""
+    global _default_impl
+    if impl is not None and impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS} or None, got {impl!r}")
+    _default_impl = impl
+
+
+@contextmanager
+def use_impl(impl: str | None):
+    """Scoped :func:`set_default_impl`."""
+    global _default_impl
+    prev = _default_impl
+    set_default_impl(impl)
+    try:
+        yield
+    finally:
+        _default_impl = prev
+
+
+def resolve_impl(op_name: str, requested: str | None = None) -> str:
+    """Resolve which implementation a call to ``op_name`` should use."""
+    op = get_op(op_name)
+    if requested is not None:
+        if requested not in IMPLS:
+            raise ValueError(
+                f"impl must be one of {IMPLS}, got {requested!r}")
+        if requested not in op.impls:
+            raise KeyError(
+                f"op {op_name!r} has no {requested!r} impl "
+                f"(has: {sorted(op.impls)})")
+        return requested
+    for choice in (_default_impl, os.environ.get(ENV_VAR) or None):
+        if choice is not None:
+            if choice not in IMPLS:
+                raise ValueError(
+                    f"${ENV_VAR} must be one of {IMPLS}, got {choice!r}")
+            if choice in op.impls:
+                return choice
+    if jax.default_backend() == "tpu" and "pallas" in op.impls:
+        return "pallas"
+    if "ref" in op.impls:
+        return "ref"
+    if "pallas_interpret" in op.impls:
+        return "pallas_interpret"
+    raise KeyError(f"op {op_name!r} has no registered impls")
+
+
+# ------------------------------------------------------ dispatch records --
+
+def dispatch_log() -> tuple[tuple[str, str], ...]:
+    """All ``(op_name, impl)`` dispatches since the last reset, in order.
+
+    Recorded at trace time: a jitted caller contributes one entry per
+    compilation, not per device invocation.
+    """
+    return tuple(_log)
+
+
+def dispatch_counts() -> dict[tuple[str, str], int]:
+    counts: dict[tuple[str, str], int] = {}
+    for entry in _log:
+        counts[entry] = counts.get(entry, 0) + 1
+    return counts
+
+
+def last_dispatch(op_name: str) -> str | None:
+    """The impl most recently dispatched for ``op_name`` (None if never)."""
+    for name, impl in reversed(_log):
+        if name == op_name:
+            return impl
+    return None
+
+
+def reset_dispatch_log() -> None:
+    _log.clear()

@@ -1,12 +1,24 @@
-"""Public op: simhash bucket codes with impl dispatch + padding."""
+"""Public op: simhash bucket codes, dispatched through the kernel registry."""
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.registry import kernel_op
 from repro.kernels.simhash_codes.kernel import simhash_codes_pallas
 from repro.kernels.simhash_codes.ref import simhash_codes_ref
+
+simhash_codes_op = kernel_op("simhash_codes")
+
+
+@simhash_codes_op.impl("ref")
+def _ref_impl(x: jax.Array, theta: jax.Array, k_bits: int, n_tables: int,
+              *, block_b: int = 0) -> jax.Array:
+    del block_b   # a pallas tiling knob; the jnp oracle has no blocks
+    return simhash_codes_ref(x, theta, k_bits, n_tables)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -19,21 +31,36 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def _pallas_impl(x: jax.Array, theta: jax.Array, k_bits: int, n_tables: int,
+                 *, block_b: int, interpret: bool) -> jax.Array:
+    bsz, d = x.shape
+    xp = _pad_to(x, 0, block_b)
+    tp = theta
+    if not interpret:
+        # Lane padding is a TPU tiling requirement only.  Interpret mode
+        # runs the kernel body unpadded so the fp32 reductions see exactly
+        # the ref's contraction length — bit-identical codes on CPU.
+        xp = _pad_to(xp, 1, 128)
+        tp = _pad_to(theta, 0, 128)
+    out = simhash_codes_pallas(xp, tp, k_bits=k_bits, n_tables=n_tables,
+                               block_b=block_b, interpret=interpret)
+    return out[:bsz]
+
+
+simhash_codes_op.register_impl(
+    "pallas", functools.partial(_pallas_impl, interpret=False))
+simhash_codes_op.register_impl(
+    "pallas_interpret", functools.partial(_pallas_impl, interpret=True))
+
+
 def simhash_codes(x: jax.Array, theta: jax.Array, k_bits: int,
-                  n_tables: int, *, impl: str = "ref",
+                  n_tables: int, *, impl: str | None = None,
                   block_b: int = 256) -> jax.Array:
     """``[B, d] x [d, K*L] -> int32 bucket ids [B, L]``.
 
-    impl: ``ref`` (pure jnp — used by the dry-run on any backend),
-    ``pallas`` (TPU target), ``pallas_interpret`` (kernel body on CPU,
-    used by tests).
+    impl: ``ref`` | ``pallas`` | ``pallas_interpret`` | None (registry
+    auto-selection: pallas on TPU, ref elsewhere, overridable globally or
+    via ``$REPRO_KERNEL_IMPL`` — see ``repro.kernels.registry``).
     """
-    if impl == "ref":
-        return simhash_codes_ref(x, theta, k_bits, n_tables)
-    bsz, d = x.shape
-    xp = _pad_to(_pad_to(x, 1, 128), 0, block_b)
-    tp = _pad_to(theta, 0, 128)
-    out = simhash_codes_pallas(
-        xp, tp, k_bits=k_bits, n_tables=n_tables, block_b=block_b,
-        interpret=(impl == "pallas_interpret"))
-    return out[:bsz]
+    return simhash_codes_op(x, theta, k_bits, n_tables, impl=impl,
+                            block_b=block_b)

@@ -17,6 +17,10 @@ def main() -> None:
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--head", choices=("full", "lss", "lss-sharded"),
                     default="lss")
+    ap.add_argument("--impl", choices=("ref", "pallas", "pallas_interpret"),
+                    default=None,
+                    help="pin the kernel-registry impl for the LSS head "
+                         "(default: auto — pallas on TPU, ref elsewhere)")
     ap.add_argument("--no-lss", action="store_true",
                     help="legacy alias for --head full")
     args = ap.parse_args()
@@ -50,7 +54,7 @@ def main() -> None:
 
     lss_cfg = LSSConfig(k_bits=6, n_tables=1, iul_epochs=4,
                         iul_inner_steps=8, iul_lr=0.02)
-    dec = LMDecoder(state.params, cfg, lss_cfg)
+    dec = LMDecoder(state.params, cfg, lss_cfg, impl=args.impl)
     if head != "full":
         dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:128]))
     prompt = jnp.asarray(toks[500:500 + args.batch, :16])

@@ -37,6 +37,7 @@ import numpy as np
 from repro.core import simhash
 from repro.core.iul import fit_lss
 from repro.core.lss import LSSConfig, LSSIndex, build_index
+from repro.kernels import registry
 from repro.serve.batcher import DEFAULT_BUCKETS, MicroBatcher
 from repro.serve.heads import (HEAD_KINDS, HeadOutput, make_full_head,
                                make_lss_head, make_sharded_lss_head,
@@ -89,6 +90,9 @@ class Engine:
     ``embed_fn(batch) -> [B, d]`` maps a request batch to query
     embeddings; pass None when requests already ARE embeddings (the LM
     decode path).  ``w [m, d]``, ``b [m]`` are the WOL parameters.
+    ``impl`` pins the kernel-registry implementation the LSS heads serve
+    with (``ref`` | ``pallas`` | ``pallas_interpret``); None lets the
+    registry auto-select by backend (pallas on TPU, ref elsewhere).
     """
 
     def __init__(self, embed_fn: Callable | None, w: jax.Array,
@@ -97,9 +101,14 @@ class Engine:
                  top_k: int = 5, head: str = "lss",
                  buckets=DEFAULT_BUCKETS,
                  mesh: jax.sharding.Mesh | None = None,
-                 model_axis: str = "model"):
+                 model_axis: str = "model",
+                 impl: str | None = None):
         if head not in HEAD_KINDS:
             raise ValueError(f"head must be one of {HEAD_KINDS}, got {head}")
+        if impl is not None and impl not in registry.IMPLS:
+            raise ValueError(
+                f"impl must be one of {registry.IMPLS} or None, got {impl}")
+        self.impl = impl
         self.embed_fn = embed_fn
         self.w = w.astype(jnp.float32)
         self.b = (jnp.zeros((w.shape[0],), jnp.float32) if b is None
@@ -184,7 +193,8 @@ class Engine:
             if kind == "lss":
                 w_aug = None if self.index.w_bucketed is not None \
                     else self._w_aug
-                head = make_lss_head(self.index, w_aug, self.top_k)
+                head = make_lss_head(self.index, w_aug, self.top_k,
+                                     impl=self.impl)
             else:
                 mesh = self._get_mesh()
                 tp = mesh.shape[self.model_axis]
@@ -195,7 +205,8 @@ class Engine:
                 stack, w_stack, m_local = self._sharded
                 head = make_sharded_lss_head(stack, w_stack, mesh,
                                              self.lss_cfg, m_local,
-                                             self.top_k, self.model_axis)
+                                             self.top_k, self.model_axis,
+                                             impl=self.impl)
         self._heads[kind] = head
         return head
 
@@ -411,7 +422,8 @@ class WOLServer:
 class LMDecoder:
     """KV-cache decode loop; the per-token head is the Engine's."""
 
-    def __init__(self, params: dict, cfg, lss_cfg: LSSConfig | None = None):
+    def __init__(self, params: dict, cfg, lss_cfg: LSSConfig | None = None,
+                 impl: str | None = None):
         from repro.models import transformer as T
         self.T = T
         self.params = params
@@ -420,7 +432,7 @@ class LMDecoder:
         self._decode = jax.jit(T.decode_step, static_argnames="cfg")
         self.engine = Engine(None, self.head_weights().astype(jnp.float32),
                              None, lss_cfg or LSSConfig(), top_k=1,
-                             head="full")
+                             head="full", impl=impl)
 
     @property
     def index(self):

@@ -21,8 +21,9 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.lss import LSSConfig, LSSIndex, lss_forward
+from repro.core.lss import NEG_INF, LSSConfig, LSSIndex, lss_forward
 from repro.core.sharded import build_local_index, make_sharded_predict
+from repro.core.tables import LSSTables
 
 __all__ = ["HeadOutput", "HEAD_KINDS", "make_full_head", "make_lss_head",
            "make_sharded_lss_head", "shard_index"]
@@ -53,16 +54,35 @@ def make_full_head(w: jax.Array, b: jax.Array, top_k: int
     return head
 
 
-def make_lss_head(index: LSSIndex, w_aug: jax.Array | None, top_k: int
+def make_lss_head(index: LSSIndex, w_aug: jax.Array | None, top_k: int,
+                  impl: str | None = None
                   ) -> Callable[[jax.Array], HeadOutput]:
-    """Algorithm 2 over one fitted index (single-device)."""
+    """Algorithm 2 over one fitted index (single-device).
+
+    ``impl`` pins the kernel-registry implementation serving the path
+    (``ref`` | ``pallas`` | ``pallas_interpret``; None = backend auto).
+    """
 
     def head(q: jax.Array) -> HeadOutput:
-        out = lss_forward(q.astype(jnp.float32), index, w_aug, top_k)
+        out = lss_forward(q.astype(jnp.float32), index, w_aug, top_k,
+                          impl=impl)
         return HeadOutput(out.top_logits, out.top_ids, out.sample_size,
                           out.cand_ids)
 
     return head
+
+
+def _mask_index_tail(index: LSSIndex, n_valid: int) -> LSSIndex:
+    """Remove local row ids >= ``n_valid`` (vocab padding) from a shard's
+    tables: their slots become -1 and their slab rows zero, so padded
+    neurons are simply never retrieved."""
+    t = index.tables
+    ids = jnp.where(t.table_ids < n_valid, t.table_ids, -1)
+    tables = LSSTables(ids, t.n_dropped, t.k_bits, t.n_tables, t.capacity)
+    wb = index.w_bucketed
+    if wb is not None:
+        wb = jnp.where((ids >= 0)[..., None], wb, jnp.zeros_like(wb))
+    return LSSIndex(index.theta, tables, wb)
 
 
 def shard_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig,
@@ -70,15 +90,32 @@ def shard_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig,
     """Split the WOL rows into ``n_shards`` contiguous vocab shards, build
     one local index per shard, and stack the leaves ([TP, ...]).
 
+    When ``m % n_shards != 0`` the rows are padded up to the next multiple
+    and the padded ids are masked out of the final shard's tables
+    (:func:`_mask_index_tail`), so a padded neuron can never be retrieved
+    and arbitrary vocab sizes shard without changing any real query's
+    result.  The pad rows carry a NEG_INF bias column purely as a
+    sentinel for humans inspecting ``w_stack`` dumps — queries are
+    augmented with 0, so a bias never reaches a logit; the table masking
+    is what excludes padding, not the sentinel.
+
     Returns (stacked_index, stacked_w_aug or None, m_local).
     """
     m = w_aug.shape[0]
-    if m % n_shards:
-        raise ValueError(f"m={m} not divisible by n_shards={n_shards}")
-    m_local = m // n_shards
-    locals_ = [build_local_index(w_aug[i * m_local:(i + 1) * m_local],
-                                 theta, cfg)
-               for i in range(n_shards)]
+    m_pad = -(-m // n_shards) * n_shards
+    if m_pad != m:
+        pad_rows = jnp.zeros((m_pad - m, w_aug.shape[-1]), w_aug.dtype)
+        pad_rows = pad_rows.at[:, -1].set(NEG_INF)   # sentinel bias column
+        w_aug = jnp.concatenate([w_aug, pad_rows], axis=0)
+    m_local = m_pad // n_shards
+    locals_ = []
+    for i in range(n_shards):
+        idx = build_local_index(w_aug[i * m_local:(i + 1) * m_local],
+                                theta, cfg)
+        n_valid = min(max(m - i * m_local, 0), m_local)
+        if n_valid < m_local:
+            idx = _mask_index_tail(idx, n_valid)
+        locals_.append(idx)
     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
     w_stack = None
     if not cfg.use_bucket_major:
@@ -88,7 +125,8 @@ def shard_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig,
 
 def make_sharded_lss_head(index_stack, w_stack, mesh, cfg: LSSConfig,
                           m_local: int, top_k: int,
-                          model_axis: str = "model"
+                          model_axis: str = "model",
+                          impl: str | None = None
                           ) -> Callable[[jax.Array], HeadOutput]:
     """Vocab-sharded Algorithm 2 (sample size psum'd across shards).
 
@@ -97,7 +135,7 @@ def make_sharded_lss_head(index_stack, w_stack, mesh, cfg: LSSConfig,
     the top-k set.
     """
     fwd = make_sharded_predict(mesh, model_axis, cfg, m_local, top_k,
-                               with_aux=True)
+                               with_aux=True, impl=impl)
 
     def head(q: jax.Array) -> HeadOutput:
         logits, ids, sample = fwd(q.astype(jnp.float32), index_stack,

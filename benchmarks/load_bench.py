@@ -1,0 +1,202 @@
+"""Open-loop load harness for the async serving runtime.
+
+Drives an :class:`AsyncRuntime` with Poisson arrivals at configurable
+offered QPS (open loop: the generator never waits for results, exactly
+the "heavy traffic from millions of users" regime — queueing delay is
+visible instead of hidden by a closed loop), sweeping heads
+(full | lss | lss-sharded) and kernel impls, and writes the
+``BENCH_load.json`` artifact consumed by CI.
+
+Each (head, impl, qps) point reports:
+
+  * offered vs achieved request rate,
+  * queue-wait-INCLUSIVE latency p50/p95/p99 (what a client sees),
+  * shed counts (queue-full and deadline) and mean batch occupancy,
+  * the synchronous baseline — a blocking ``submit``/``flush`` loop over
+    the same requests on the same engine and bucket ladder (one request
+    in flight at a time: the semantics the synchronous Engine offers an
+    online caller) — and the async/sync throughput ratio.
+
+Run:  PYTHONPATH=src python -m benchmarks.load_bench --qps 200,2000
+Env:  BENCH_FAST=1 shrinks sizes (default); BENCH_LOAD_OUT / BENCH_OUT_DIR
+      override the artifact path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lss import LSSConfig
+from repro.serve import AsyncRuntime, Engine
+from repro.serve.runtime import submit_open_loop
+
+D_MODEL = 32
+TOP_K = 10
+TARGET_SAMPLE = 512            # aim ~512 candidates per query
+
+
+def build_engine(m: int, impl: str | None, buckets: tuple[int, ...]
+                 ) -> Engine:
+    """SimHash-initialised engine on a synthetic WOL (retrieval speed is
+    learning-independent; see benchmarks/serve_bench.py)."""
+    k_bits = max(4, math.ceil(math.log2(max(2 * m / TARGET_SAMPLE, 2))))
+    cfg = LSSConfig(k_bits=k_bits, n_tables=2, use_bucket_major=True)
+    w = jax.random.normal(jax.random.PRNGKey(0), (m, D_MODEL), jnp.float32)
+    eng = Engine(None, w, None, cfg, top_k=TOP_K, buckets=buckets,
+                 impl=impl)
+    eng.fit_random(jax.random.PRNGKey(2))
+    return eng
+
+
+def warm(eng: Engine, head: str) -> None:
+    """Compile every (head, bucket) step up front so the measured segment
+    contains zero traces."""
+    for b in eng.batcher.buckets:
+        eng.rank(np.zeros((b, D_MODEL), np.float32), head=head,
+                 record=False)
+
+
+def run_async_point(eng: Engine, head: str, xs: np.ndarray, qps: float,
+                    seed: int, *, policy: str, max_queue: int,
+                    deadline_s: float | None) -> dict:
+    """One open-loop segment: Poisson arrivals at ``qps`` (``qps <= 0`` =
+    burst: every request arrives at t=0), drain, stats."""
+    rt = AsyncRuntime(eng, head=head, max_queue=max_queue, policy=policy,
+                      default_deadline_s=deadline_s)
+    futs, arrivals = submit_open_loop(rt, xs, qps, seed=seed)
+    rt.drain(timeout=120.0)
+    s = rt.stats()
+    rt.close()
+    n_ok = sum(f.exception() is None for f in futs)
+    assert n_ok == s.n_completed, (n_ok, s.n_completed)
+    return {
+        "n": xs.shape[0],
+        "qps_offered": (None if qps <= 0
+                        else round(xs.shape[0] / arrivals[-1], 1)),
+        "achieved_rps": round(s.throughput_rps, 1),
+        "p50_ms": round(s.latency_p50_ms, 3),
+        "p95_ms": round(s.latency_p95_ms, 3),
+        "p99_ms": round(s.latency_p99_ms, 3),
+        "device_ms_per_batch": round(s.device_ms_per_batch, 3),
+        "shed_queue": s.n_shed_queue,
+        "shed_deadline": s.n_shed_deadline,
+        "n_batches": s.n_batches,
+        "occupancy": round(s.avg_batch_occupancy, 3),
+    }
+
+
+def run_sync_baseline(eng: Engine, head: str, xs: np.ndarray) -> float:
+    """Blocking submit->flush per request (no cross-request batching):
+    the throughput ceiling of the synchronous library interface."""
+    t0 = time.perf_counter()
+    for i in range(xs.shape[0]):
+        eng.submit(xs[i])
+        eng.flush(head=head)
+    return xs.shape[0] / (time.perf_counter() - t0)
+
+
+def bench_load(*, m: int, n_requests: int, qps_list: list[float],
+               heads: list[str], impls: list[str | None],
+               buckets: tuple[int, ...], policy: str, max_queue: int,
+               deadline_ms: float | None) -> dict:
+    deadline_s = None if deadline_ms is None else deadline_ms / 1e3
+    rng = np.random.default_rng(1)
+    xs = rng.standard_normal((n_requests, D_MODEL)).astype(np.float32)
+    rows = []
+    for impl in impls:
+        eng = build_engine(m, impl, buckets)
+        for head in heads:
+            warm(eng, head)
+            sync_rps = run_sync_baseline(eng, head, xs)
+            for qps in qps_list:
+                row = run_async_point(
+                    eng, head, xs, qps, seed=7, policy=policy,
+                    max_queue=max_queue, deadline_s=deadline_s)
+                row.update({
+                    "head": head, "impl": impl or "auto", "m": m,
+                    "d": D_MODEL, "qps": qps, "policy": policy,
+                    "max_queue": max_queue, "deadline_ms": deadline_ms,
+                    "sync_rps": round(sync_rps, 1),
+                    "speedup_vs_sync": round(row["achieved_rps"]
+                                             / sync_rps, 2),
+                })
+                rows.append(row)
+    return {
+        "bench": "load",
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "buckets": list(buckets),
+        "rows": rows,
+    }
+
+
+def write_artifact(record: dict, path: str | None = None) -> str:
+    """Precedence: explicit path > $BENCH_LOAD_OUT > $BENCH_OUT_DIR/
+    BENCH_load.json > ./BENCH_load.json."""
+    path = (path or os.environ.get("BENCH_LOAD_OUT")
+            or os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
+                            "BENCH_load.json"))
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return path
+
+
+def _csv_floats(s: str) -> list[float]:
+    return [float(x) for x in s.split(",") if x]
+
+
+def main(argv: list[str] | None = None) -> dict:
+    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--qps", type=_csv_floats,
+                    default=[200.0, 0.0] if fast
+                    else [100.0, 500.0, 2000.0, 0.0],
+                    help="comma-separated offered QPS sweep; 0 = burst "
+                         "(every request arrives at t=0, saturation point)")
+    ap.add_argument("--requests", type=int, default=256 if fast else 2048)
+    ap.add_argument("--m", type=int, default=20_000 if fast else 100_000)
+    ap.add_argument("--heads", default="full,lss,lss-sharded",
+                    help="comma-separated head kinds")
+    ap.add_argument("--impls", default="ref",
+                    help="comma-separated kernel impls (ref|pallas|"
+                         "pallas_interpret|auto)")
+    ap.add_argument("--buckets", type=lambda s: tuple(
+        int(x) for x in s.split(",")),
+        default=(1, 4, 16) if fast else (1, 2, 4, 8, 16, 32))
+    ap.add_argument("--policy", choices=("block", "shed"), default="shed")
+    ap.add_argument("--max-queue", type=int, default=4096)
+    ap.add_argument("--deadline-ms", type=float, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    rec = bench_load(
+        m=args.m, n_requests=args.requests, qps_list=args.qps,
+        heads=[h for h in args.heads.split(",") if h],
+        impls=[None if i == "auto" else i
+               for i in args.impls.split(",") if i],
+        buckets=args.buckets, policy=args.policy,
+        max_queue=args.max_queue, deadline_ms=args.deadline_ms)
+    path = write_artifact(rec, args.out)
+    print(f"wrote {path}")
+    for r in rec["rows"]:
+        qps = "  burst" if r["qps"] <= 0 else f"{r['qps']:>7.0f}"
+        print(f"  {r['head']:<11} {r['impl']:<6} qps={qps} "
+              f"achieved={r['achieved_rps']:>8.1f} rps  "
+              f"p50={r['p50_ms']:>7.2f} p95={r['p95_ms']:>7.2f} "
+              f"p99={r['p99_ms']:>7.2f} ms  occ={r['occupancy']:.2f}  "
+              f"shed={r['shed_queue']}+{r['shed_deadline']}  "
+              f"sync={r['sync_rps']:>8.1f} rps  "
+              f"x{r['speedup_vs_sync']:.2f}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

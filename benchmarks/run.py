@@ -99,6 +99,30 @@ def bench_serving_rows() -> list[str]:
     ]
 
 
+def bench_load_rows() -> list[str]:
+    """Short open-loop load run through the AsyncRuntime (one paced QPS
+    point + one burst/saturation point); writes BENCH_load.json."""
+    from benchmarks.load_bench import bench_load, write_artifact
+    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    rec = bench_load(
+        m=5_000 if fast else 50_000,
+        n_requests=128 if fast else 1024,
+        qps_list=[200.0, 0.0],
+        heads=["lss"], impls=["ref"],
+        buckets=(1, 4, 16), policy="shed", max_queue=4096,
+        deadline_ms=None)
+    write_artifact(rec)   # honors BENCH_LOAD_OUT / BENCH_OUT_DIR itself
+    return [
+        f"load_{r['head']}_{r['impl']}_"
+        f"{'burst' if r['qps'] <= 0 else 'qps%g' % r['qps']},"
+        f"{r['p50_ms']:.2f},"
+        f"rps={r['achieved_rps']};p99={r['p99_ms']};occ={r['occupancy']};"
+        f"shed={r['shed_queue']}+{r['shed_deadline']};"
+        f"speedup_vs_sync={r['speedup_vs_sync']}"
+        for r in rec["rows"]
+    ]
+
+
 def bench_tables(rows: list[str]) -> None:
     from benchmarks.paper_tables import (fig2_collision_curves,
                                          run_setting, table2_kl_sweep)
@@ -148,6 +172,7 @@ def bench_tables(rows: list[str]) -> None:
 def main() -> None:
     rows = []
     rows += bench_serving_rows()
+    rows += bench_load_rows()
     kern_recs, kern_rows = bench_kernels()
     _write_artifact("kernels", {"rows": kern_recs})
     rows += kern_rows

@@ -169,14 +169,19 @@ def fit_lss(key, q_all: jax.Array, labels_all: jax.Array, w: jax.Array,
 
     hist = {"loss": [], "p_collide_pos": [], "p_collide_neg": [],
             "recall": []}
-    index = build_index(w_aug, theta, cfg)
+    # One compiled rebuild reused every epoch: hash all m neurons, build
+    # all L tables (vmapped), and re-bucketize the weight slabs in a
+    # single XLA program instead of re-dispatching the whole op chain
+    # eagerly per epoch — the dominant fit_lss cost at m >= 1M on CPU.
+    rebuild = jax.jit(lambda w_aug, theta: build_index(w_aug, theta, cfg))
+    index = rebuild(w_aug, theta)
     best_index, best_rec = index, -1.0
     epoch_fn = jax.jit(iul_train_epoch, static_argnames=("cfg",))
     for ep in range(cfg.iul_epochs):
         key, ke = jax.random.split(key)
         theta, opt_state, (loss, cp, cn) = epoch_fn(
             theta, opt_state, q_aug, labels_all, w_aug, index, t1, t2, cfg, ke)
-        index = build_index(w_aug, theta, cfg)     # rebuild (Alg. 1 line 15)
+        index = rebuild(w_aug, theta)              # rebuild (Alg. 1 line 15)
         cand, _ = retrieve(q_aug[: min(1024, q_aug.shape[0])], index)
         rec = float(label_recall(cand, labels_all[: cand.shape[0]]))
         # model selection: IUL's mining distribution shifts every rebuild,

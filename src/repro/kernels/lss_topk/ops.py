@@ -10,6 +10,7 @@ one that actually serves traffic.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,25 @@ from repro.kernels.registry import kernel_op
 
 lss_topk_op = kernel_op("lss_topk")
 lss_topk_op.register_impl("ref", lss_topk_ref)
+
+# Past this candidate count the O(C^2) in-kernel dedup (a [C, C] compare
+# in fp32-adjacent int space) stops fitting comfortably in VMEM alongside
+# the [P, d] slabs; the ROADMAP follow-up is a sorted/bitonic dedup.
+DEDUP_COMFORT_LIMIT = 2048
+
+
+@functools.lru_cache(maxsize=None)
+def _warn_large_candidate_count(n_tables: int, capacity: int) -> None:
+    """One-time (per L x P shape) heads-up that the dedup is the scaling
+    wall, emitted at trace time from the dispatching call site."""
+    c = n_tables * capacity
+    warnings.warn(
+        f"lss_topk: candidate count C = L*P = {n_tables}*{capacity} = {c} "
+        f"exceeds ~{DEDUP_COMFORT_LIMIT}; the fused kernel's O(C^2) "
+        f"duplicate-mask no longer fits comfortably in VMEM at this size "
+        f"and will dominate the pass. Reduce table capacity / k_bits, or "
+        f"see the ROADMAP item on switching to a sorted (bitonic) dedup.",
+        stacklevel=3)
 
 
 def _pallas_impl(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
@@ -71,5 +91,8 @@ def lss_topk(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
     impl: ``ref`` | ``pallas`` | ``pallas_interpret`` | None (registry
     auto-selection — see ``repro.kernels.registry``).
     """
+    n_tables, _, capacity = table_ids.shape
+    if n_tables * capacity > DEDUP_COMFORT_LIMIT:
+        _warn_large_candidate_count(n_tables, capacity)
     return lss_topk_op(q_aug, theta, table_ids, w_bucketed, top_k=top_k,
                        impl=impl)

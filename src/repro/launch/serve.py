@@ -1,8 +1,12 @@
 """Serving launcher: load (or train briefly) an LM, fit the LSS head,
-decode batched requests through the unified serving engine.
+then either decode batched requests through the unified serving engine
+(``--runtime sync``, the default) or serve open-loop scoring traffic
+through the async runtime (``--runtime async``: Poisson arrivals at
+``--qps``, optional ``--deadline-ms`` load shedding).
 
     python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-        --batch 16 --steps 32 [--head full|lss|lss-sharded]
+        --batch 16 --steps 32 [--head full|lss|lss-sharded] \
+        [--runtime async --qps 500 --deadline-ms 50]
 """
 
 import argparse
@@ -23,6 +27,15 @@ def main() -> None:
                          "(default: auto — pallas on TPU, ref elsewhere)")
     ap.add_argument("--no-lss", action="store_true",
                     help="legacy alias for --head full")
+    ap.add_argument("--runtime", choices=("sync", "async"), default="sync",
+                    help="sync: blocking batched decode; async: open-loop "
+                         "next-token scoring through the AsyncRuntime")
+    ap.add_argument("--qps", type=float, default=500.0,
+                    help="offered Poisson QPS for --runtime async "
+                         "(0 = burst: all requests arrive at once)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for --runtime async; "
+                         "already-late requests are shed, not executed")
     args = ap.parse_args()
     head = "full" if args.no_lss else args.head
 
@@ -58,9 +71,53 @@ def main() -> None:
     if head != "full":
         dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:128]))
     prompt = jnp.asarray(toks[500:500 + args.batch, :16])
+
+    if args.runtime == "async":
+        serve_async(dec, prompt, head, args)
+        return
+
     out = dec.generate(prompt, steps=args.steps, head=head)
     print(f"decoded {out.shape} tokens; head={head}")
     print(out[:2])
+    print(f"engine compiles (head, bucket): {dec.engine.compile_counts}")
+
+
+def serve_async(dec, prompt, head: str, args) -> None:
+    """Open-loop next-token scoring: prefill once, then submit each
+    sequence's final hidden state as an independent rank request through
+    the AsyncRuntime at the offered QPS."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.serve.runtime import AsyncRuntime, submit_open_loop
+
+    hidden, _ = dec.T.prefill(dec.params, prompt, dec.cfg,
+                              max_len=prompt.shape[1])
+    h = np.asarray(hidden[:, -1].astype(jnp.float32))        # [B, d]
+    reqs = np.tile(h, (max(1, args.steps), 1))               # B*steps reqs
+    # compile every ladder bucket the run could coalesce into (any group
+    # size <= the backlog's max chunk), so the measured segment reports
+    # serving latency, not trace time — a cold 1-row bucket otherwise
+    # costs a >1s trace and deadline-sheds the whole backlog behind it
+    batcher = dec.engine.batcher
+    b_max = batcher.bucket_for(min(reqs.shape[0], batcher.max_bucket))
+    for b in [b for b in batcher.buckets if b <= b_max]:
+        dec.engine.rank(np.zeros((b, reqs.shape[1]), np.float32),
+                        head=head, record=False)
+    deadline_s = (None if args.deadline_ms is None
+                  else args.deadline_ms / 1e3)
+    with AsyncRuntime(dec.engine, head=head, policy="shed",
+                      default_deadline_s=deadline_s) as rt:
+        futs, _ = submit_open_loop(rt, reqs, args.qps, seed=0)
+        rt.drain(timeout=300.0)
+        s = rt.stats()
+    ok = sum(f.exception() is None for f in futs)
+    print(f"async runtime: head={head} qps={args.qps} "
+          f"{ok}/{len(futs)} served")
+    print(f"  throughput={s.throughput_rps:,.0f} rps  "
+          f"p50={s.latency_p50_ms:.2f} p95={s.latency_p95_ms:.2f} "
+          f"p99={s.latency_p99_ms:.2f} ms (incl. queue wait)")
+    print(f"  batches={s.n_batches} occupancy={s.avg_batch_occupancy:.2f} "
+          f"shed: queue={s.n_shed_queue} deadline={s.n_shed_deadline}")
     print(f"engine compiles (head, bucket): {dec.engine.compile_counts}")
 
 

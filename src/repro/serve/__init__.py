@@ -1,9 +1,13 @@
-"""Serving subpackage: unified batched engine + pluggable WOL heads.
+"""Serving subpackage: unified batched engine + pluggable WOL heads +
+the async serving runtime.
 
   * ``engine``  — :class:`Engine` (submit/flush/metrics), plus the legacy
     ``WOLServer`` / ``LMDecoder`` facades.
   * ``heads``   — the full | lss | lss-sharded head protocol.
   * ``batcher`` — bucketed continuous micro-batching (pure shape logic).
+  * ``runtime`` — :class:`AsyncRuntime`: thread-safe admission queue with
+    per-request futures, deadline/queue-depth load shedding, and a
+    dispatcher that overlaps host-side padding with device execution.
 """
 
 from repro.serve.batcher import DEFAULT_BUCKETS, Chunk, MicroBatcher
@@ -12,10 +16,17 @@ from repro.serve.engine import (Engine, LMDecoder, RankResult, ServeMetrics,
 from repro.serve.heads import (HEAD_KINDS, HeadOutput, make_full_head,
                                make_lss_head, make_sharded_lss_head,
                                shard_index)
+from repro.serve.runtime import (AdmissionQueue, AsyncRuntime,
+                                 DeadlineExceededError, QueueFullError,
+                                 RankFuture, RuntimeClosedError,
+                                 RuntimeStats, ShedError)
 
 __all__ = [
     "DEFAULT_BUCKETS", "Chunk", "MicroBatcher",
     "Engine", "LMDecoder", "RankResult", "ServeMetrics", "WOLServer",
     "HEAD_KINDS", "HeadOutput", "make_full_head", "make_lss_head",
     "make_sharded_lss_head", "shard_index",
+    "AsyncRuntime", "RuntimeStats", "RankFuture", "AdmissionQueue",
+    "ShedError", "QueueFullError", "DeadlineExceededError",
+    "RuntimeClosedError",
 ]

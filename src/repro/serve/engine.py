@@ -27,6 +27,7 @@ Request flow::
 from __future__ import annotations
 
 import math
+import threading
 import time
 from typing import Any, Callable, NamedTuple
 
@@ -93,6 +94,13 @@ class Engine:
     ``impl`` pins the kernel-registry implementation the LSS heads serve
     with (``ref`` | ``pallas`` | ``pallas_interpret``); None lets the
     registry auto-select by backend (pallas on TPU, ref elsewhere).
+
+    Thread safety: every mutation of engine state — the pending request
+    queue, finished results, the metrics window, and the jitted step
+    cache — happens under ``self.lock`` (an RLock), so one Engine can be
+    shared by the AsyncRuntime's worker threads and any number of user
+    threads without racing ``_pending``/metrics state.  Device execution
+    of an already-built step is jax's concern and needs no lock.
     """
 
     def __init__(self, embed_fn: Callable | None, w: jax.Array,
@@ -128,6 +136,7 @@ class Engine:
         self._queue: list[_Pending] = []
         self._results: list[RankResult] = []
         self._next_rid = 0
+        self.lock = threading.RLock()
         self.reset_metrics()
 
     @property
@@ -165,12 +174,13 @@ class Engine:
         self._set_index(build_index(self._w_aug, theta, self.lss_cfg))
 
     def _set_index(self, index: LSSIndex) -> None:
-        self.index = index
-        self._sharded = None
-        self._heads.pop("lss", None)
-        self._heads.pop("lss-sharded", None)
-        for k in [k for k in self._steps if k[0] != "full"]:
-            del self._steps[k]
+        with self.lock:
+            self.index = index
+            self._sharded = None
+            self._heads.pop("lss", None)
+            self._heads.pop("lss-sharded", None)
+            for k in [k for k in self._steps if k[0] != "full"]:
+                del self._steps[k]
 
     # ------------------------------------------------------ head lookup --
     def _get_mesh(self):
@@ -215,18 +225,28 @@ class Engine:
         """One jitted step per (head, bucket): compile count is observable
         because the Python body runs exactly once per trace."""
         key = (kind, bucket)
-        if key not in self._steps:
-            head = self._head(kind)
-            embed = self.embed_fn
+        # Lock-free hot path: a GIL-atomic dict read, so the runtime's
+        # dispatcher never stalls behind a user thread's flush() (which
+        # holds the lock across device execution).  Refitting while
+        # serving can hand one in-flight chunk the pre-refit step, which
+        # is inherent to concurrent refit and no worse than the locked
+        # path (the fetch could equally precede the refit).
+        step = self._steps.get(key)
+        if step is not None:
+            return step
+        with self.lock:
+            if key not in self._steps:
+                head = self._head(kind)
+                embed = self.embed_fn
 
-            def raw_step(x):
-                self.compile_counts[key] = \
-                    self.compile_counts.get(key, 0) + 1
-                q = embed(x) if embed is not None else x
-                return head(q)
+                def raw_step(x):
+                    self.compile_counts[key] = \
+                        self.compile_counts.get(key, 0) + 1
+                    q = embed(x) if embed is not None else x
+                    return head(q)
 
-            self._steps[key] = jax.jit(raw_step)
-        return self._steps[key]
+                self._steps[key] = jax.jit(raw_step)
+            return self._steps[key]
 
     def _pad_to_bucket(self, x, bucket: int):
         """Device-side row padding (no host round-trip for jax inputs)."""
@@ -274,22 +294,24 @@ class Engine:
     def submit(self, x, labels=None) -> int:
         """Enqueue one example (leaves WITHOUT the batch dim).  Returns a
         request id; auto-flushes once a full max bucket is waiting."""
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queue.append(_Pending(rid, x, _as_label_row(labels),
-                                    time.perf_counter()))
-        if len(self._queue) >= self.batcher.max_bucket:
-            self._flush_ready()
-        return rid
+        with self.lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._queue.append(_Pending(rid, x, _as_label_row(labels),
+                                        time.perf_counter()))
+            if len(self._queue) >= self.batcher.max_bucket:
+                self._flush_ready()
+            return rid
 
     def submit_batch(self, xb, labels=None) -> list[int]:
         """Enqueue every row of a batched pytree."""
         xb_np = jax.tree.map(np.asarray, xb)     # one device->host copy
         n = jax.tree.leaves(xb_np)[0].shape[0]
         lab = None if labels is None else np.asarray(labels)
-        return [self.submit(jax.tree.map(lambda l: l[i], xb_np),
-                            None if lab is None else lab[i])
-                for i in range(n)]
+        with self.lock:                          # rids stay contiguous
+            return [self.submit(jax.tree.map(lambda l: l[i], xb_np),
+                                None if lab is None else lab[i])
+                    for i in range(n)]
 
     def _flush_ready(self) -> None:
         while len(self._queue) >= self.batcher.max_bucket:
@@ -300,14 +322,15 @@ class Engine:
     def flush(self, head: str | None = None) -> list[RankResult]:
         """Drain the queue through bucketed steps; return all finished
         results (including auto-flushed ones) in submit order."""
-        while self._queue:
-            take = min(len(self._queue), self.batcher.max_bucket)
-            group = self._queue[:take]
-            del self._queue[:take]
-            self._results.extend(self._run_group(group, head))
-        out = sorted(self._results, key=lambda r: r.rid)
-        self._results = []
-        return out
+        with self.lock:
+            while self._queue:
+                take = min(len(self._queue), self.batcher.max_bucket)
+                group = self._queue[:take]
+                del self._queue[:take]
+                self._results.extend(self._run_group(group, head))
+            out = sorted(self._results, key=lambda r: r.rid)
+            self._results = []
+            return out
 
     def _run_group(self, group: list[_Pending],
                    head: str | None = None) -> list[RankResult]:
@@ -345,15 +368,21 @@ class Engine:
     def reset_metrics(self) -> None:
         """Start a fresh metrics window.  Pending request results are NOT
         metrics and survive (they belong to the next ``flush``)."""
-        self._n = 0
-        self._wall = 0.0
-        self._lat: list[float] = []
-        self._sample_sum = 0.0
-        self._recall_hit = 0
-        self._recall_tot = 0
+        with self.lock:
+            self._n = 0
+            self._wall = 0.0
+            self._lat: list[float] = []
+            self._sample_sum = 0.0
+            self._recall_hit = 0
+            self._recall_tot = 0
 
     def _record(self, out: HeadOutput, n: int, wall: float,
                 lats: list[float], labels) -> None:
+        with self.lock:
+            self._record_locked(out, n, wall, lats, labels)
+
+    def _record_locked(self, out: HeadOutput, n: int, wall: float,
+                       lats: list[float], labels) -> None:
         self._n += n
         self._wall += wall
         self._lat.extend(lats)
@@ -369,6 +398,10 @@ class Engine:
             self._recall_tot += int(jnp.sum(valid))
 
     def metrics(self) -> ServeMetrics:
+        with self.lock:
+            return self._metrics_locked()
+
+    def _metrics_locked(self) -> ServeMetrics:
         lat_ms = np.asarray(self._lat, np.float64) * 1e3
         p50, p95, p99 = (np.percentile(lat_ms, (50, 95, 99))
                          if lat_ms.size else (math.nan,) * 3)

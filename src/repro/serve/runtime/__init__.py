@@ -1,0 +1,22 @@
+"""Async serving runtime: admission queue + futures + overlapped
+host/device pipeline over a (thread-safe) :class:`~repro.serve.Engine`.
+
+  * ``future``  — :class:`RankFuture` and the shed-exception hierarchy.
+  * ``queue``   — :class:`AdmissionQueue` (bounded, block | shed).
+  * ``runtime`` — :class:`AsyncRuntime` (dispatcher + completion threads,
+    deadline shedding, drain/close, :class:`RuntimeStats`).
+"""
+
+from repro.serve.runtime.future import (DeadlineExceededError, QueueFullError,
+                                        RankFuture, RuntimeClosedError,
+                                        ShedError)
+from repro.serve.runtime.queue import POLICIES, AdmissionQueue
+from repro.serve.runtime.runtime import (AsyncRuntime, RuntimeStats,
+                                         submit_open_loop)
+
+__all__ = [
+    "AsyncRuntime", "RuntimeStats", "RankFuture",
+    "AdmissionQueue", "POLICIES", "submit_open_loop",
+    "ShedError", "QueueFullError", "DeadlineExceededError",
+    "RuntimeClosedError",
+]

@@ -1,0 +1,473 @@
+"""AsyncRuntime: the thread/queue front-end over a synchronous Engine.
+
+The Engine is a *library* — ``submit``/``flush`` block the caller, so
+host-side batching, padding, and device execution serialize.  The
+runtime turns it into a *service*:
+
+::
+
+    producers --submit()--> AdmissionQueue --take(<=max_bucket)--+
+      (futures back)            (block|shed, deadlines)          |
+                                                        dispatcher thread
+                                                 stack+pad chunk k+1 (host)
+                                                 dispatch chunk k   (device)
+                                                           |
+                                              bounded completion queue
+                                                           |
+                                                   completion thread
+                                            block_until_ready -> resolve
+                                            futures, record metrics
+
+Two properties fall out of the structure:
+
+  * **Pipelining** — jax dispatch is asynchronous, so the dispatcher
+    hands a padded chunk to the device and immediately starts stacking/
+    padding the next one while the device executes; the completion
+    thread is the only place that blocks on device results.  The
+    completion queue is bounded (``pipeline_depth``), which is the
+    backpressure that stops the dispatcher racing unboundedly ahead.
+  * **Determinism** — chunks go through the SAME jitted (head, bucket)
+    steps as ``Engine.flush`` and every head op is row-parallel, so a
+    request's result is bit-identical to the synchronous path no matter
+    how traffic was coalesced (asserted in tests/test_async_runtime.py).
+
+Admission control: bounded queue depth with ``block`` | ``shed``
+policies, per-request deadlines (already-late work is shed at dispatch
+time, not executed), graceful ``drain()``/``close()``.  ``stats()``
+reports queue depth, shed counts, batch occupancy, and latency
+percentiles that INCLUDE queue wait — the number a client actually
+experiences, not just device wall time.
+"""
+
+from __future__ import annotations
+
+import math
+import queue as _queue
+import threading
+import time
+from typing import Any, NamedTuple
+
+import jax
+import numpy as np
+
+from repro.serve.batcher import MicroBatcher
+from repro.serve.engine import Engine, RankResult
+from repro.serve.runtime.future import (DeadlineExceededError, QueueFullError,
+                                        RankFuture, RuntimeClosedError)
+from repro.serve.runtime.queue import POLICIES, AdmissionQueue
+
+__all__ = ["AsyncRuntime", "RuntimeStats", "submit_open_loop"]
+
+_SENTINEL = object()
+
+
+class RuntimeStats(NamedTuple):
+    """Point-in-time snapshot of the runtime's serving behaviour."""
+
+    n_submitted: int             # futures handed out (incl. shed)
+    n_completed: int             # resolved with a RankResult
+    n_shed_queue: int            # refused at admission (queue full)
+    n_shed_deadline: int         # dropped at dispatch (already late)
+    queue_depth: int             # waiting right now
+    n_batches: int               # device chunks dispatched
+    avg_batch_occupancy: float   # mean fill fraction of dispatched buckets
+    latency_p50_ms: float        # submit -> resolve, queue wait INCLUDED
+    latency_p95_ms: float
+    latency_p99_ms: float
+    device_ms_per_batch: float   # mean non-overlapping device wall/chunk
+    wall_s: float                # first submit -> last completion
+    throughput_rps: float        # n_completed / wall_s
+
+
+def submit_open_loop(runtime: "AsyncRuntime", xs, qps: float, *,
+                     seed: int = 0, labels=None
+                     ) -> tuple[list[RankFuture], np.ndarray]:
+    """Open-loop load generation: submit ``xs[i]`` at Poisson arrival
+    times for offered rate ``qps`` (``qps <= 0`` = burst, everything at
+    t=0) and never wait for results — queueing delay stays visible
+    instead of being hidden by a closed loop.  Returns (futures,
+    arrival offsets in seconds).  Shared by the load harness, the
+    launcher's ``--runtime async`` mode, and the serving example."""
+    rng = np.random.default_rng(seed)
+    n = len(xs)
+    arrivals = (np.zeros(n) if qps <= 0
+                else np.cumsum(rng.exponential(1.0 / qps, n)))
+    t0 = time.perf_counter()
+    futs = []
+    for i in range(n):
+        dt = (t0 + arrivals[i]) - time.perf_counter()
+        if dt > 0:
+            time.sleep(dt)
+        futs.append(runtime.submit(
+            xs[i], None if labels is None else labels[i]))
+    return futs, arrivals
+
+
+class _Work(NamedTuple):
+    future: RankFuture
+    x: Any                       # request pytree (no batch dim, numpy)
+    labels: np.ndarray | None
+
+
+class AsyncRuntime:
+    """Admission queue + futures + overlapped host/device pipeline.
+
+    Args:
+      engine: the (thread-safe) Engine to serve through.  The runtime
+        shares its jitted (head, bucket) step cache and metrics window.
+      head: head kind override; None uses ``engine.default_head``.
+      max_queue: admission queue depth bound.
+      policy: ``block`` | ``shed`` when the queue is full (see
+        ``runtime.queue``).
+      default_deadline_s: per-request deadline applied when ``submit``
+        does not pass one; None = no deadline.
+      batch_window_s: how long the dispatcher lingers for more arrivals
+        after the first, when a max bucket has not filled.  0 dispatches
+        whatever is waiting immediately (lowest latency); a small window
+        (~1-5 ms) trades p50 for occupancy at low QPS.
+      pipeline_depth: max device chunks in flight past the dispatcher.
+      start: spawn the worker threads now; ``start=False`` lets tests
+        and callers stage a backlog first (``start()`` later).
+    """
+
+    def __init__(self, engine: Engine, *, head: str | None = None,
+                 max_queue: int = 1024, policy: str = "block",
+                 default_deadline_s: float | None = None,
+                 batch_window_s: float = 0.0, pipeline_depth: int = 2,
+                 start: bool = True):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, "
+                             f"got {policy!r}")
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        self.engine = engine
+        self.head = head or engine.default_head
+        self.policy = policy
+        self.default_deadline_s = default_deadline_s
+        self.batch_window_s = batch_window_s
+        self._q = AdmissionQueue(max_queue, policy)
+        self._done_q: _queue.Queue = _queue.Queue(maxsize=pipeline_depth)
+        self._stop = threading.Event()
+        self._closed = False
+        self._started = False
+        self._threads: list[threading.Thread] = []
+        self._worker_exc: BaseException | None = None
+        # stats (guarded by _mu; _drained signals pending == 0)
+        self._mu = threading.Lock()
+        self._drained = threading.Condition(self._mu)
+        self._next_rid = 0
+        self._n_submitted = 0
+        self._n_admitted = 0
+        self._n_completed = 0
+        self._n_shed_queue = 0
+        self._n_shed_deadline = 0
+        self._n_failed = 0
+        self._n_batches = 0
+        self._occupancy_sum = 0.0
+        self._lat_s: list[float] = []
+        self._device_s: list[float] = []
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> "AsyncRuntime":
+        if self._started:
+            return self
+        self._started = True
+        self._threads = [
+            threading.Thread(target=self._dispatch_loop,
+                             name="repro-runtime-dispatch", daemon=True),
+            threading.Thread(target=self._completion_loop,
+                             name="repro-runtime-complete", daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def __enter__(self) -> "AsyncRuntime":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -------------------------------------------------------------- pending
+    def _pending(self) -> int:
+        return (self._n_admitted - self._n_completed
+                - self._n_shed_deadline - self._n_failed)
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Block until every admitted request has been resolved."""
+        if not self._started:
+            with self._mu:
+                if self._pending() == 0:
+                    return
+            raise RuntimeError(
+                "drain() on a never-started runtime with an admitted "
+                "backlog: no worker will ever resolve it — call start()")
+        if self._started:
+            with self._drained:
+                if not self._drained.wait_for(
+                        lambda: self._pending() == 0
+                        or self._worker_exc is not None,
+                        timeout=timeout):
+                    raise TimeoutError(
+                        f"drain: {self._pending()} requests still pending "
+                        f"after {timeout}s")
+        if self._worker_exc is not None:
+            raise RuntimeError("runtime worker died") from self._worker_exc
+
+    def close(self, timeout: float | None = None) -> None:
+        """Graceful shutdown: stop admitting, drain in-flight work, stop
+        the worker threads.  A drain timeout still stops the runtime —
+        the TimeoutError propagates, but the workers are shut down and
+        whatever was still queued is failed with
+        :class:`RuntimeClosedError` (never-started runtimes included)."""
+        with self._mu:
+            if self._closed:
+                return
+            self._closed = True                 # submit() now refuses
+        try:
+            if self._started and self._worker_exc is None:
+                self.drain(timeout)
+        finally:
+            self._stop.set()
+            for w in self._q.close():           # undrained leftovers
+                self._fail(w.future, RuntimeClosedError("runtime closed"))
+            for t in self._threads:
+                t.join(timeout=5.0)
+
+    # --------------------------------------------------------------- submit
+    def submit(self, x, labels=None, *, deadline_s: float | None = None,
+               timeout: float | None = None) -> RankFuture:
+        """Admit one request (leaves WITHOUT the batch dim); returns its
+        future.  A full queue blocks (``block``) or fails the future with
+        :class:`QueueFullError` (``shed``); ``deadline_s`` is relative to
+        now and already-late work is shed at dispatch time."""
+        t_sub = time.perf_counter()
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        deadline = None if deadline_s is None else t_sub + deadline_s
+        with self._mu:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._n_submitted += 1
+            if self._t_first is None:
+                self._t_first = t_sub
+        fut = RankFuture(rid, t_sub, deadline)
+        if self._closed:
+            fut.set_exception(RuntimeClosedError("runtime closed"))
+            with self._mu:
+                self._n_shed_queue += 1
+            return fut
+        work = _Work(fut, jax.tree.map(np.asarray, x),
+                     None if labels is None
+                     else np.atleast_1d(np.asarray(labels, np.int32)))
+        # count the admission BEFORE the put: once the work is in the
+        # queue it can complete (and notify drain()) at any moment, and
+        # drain() must never observe completed > admitted
+        with self._mu:
+            self._n_admitted += 1
+        if not self._q.put(work, timeout=timeout):
+            with self._drained:
+                self._n_admitted -= 1
+                self._n_shed_queue += 1
+                self._drained.notify_all()
+            # a put can also fail because close() raced us and shut the
+            # queue — report that as closed, not as transient overload
+            # (callers reasonably retry on QueueFullError)
+            fut.set_exception(
+                RuntimeClosedError("runtime closed") if self._closed
+                else QueueFullError(
+                    f"queue full (depth bound {self._q.maxsize}, "
+                    f"policy {self.policy})"))
+        return fut
+
+    def submit_batch(self, xb, labels=None, **kw) -> list[RankFuture]:
+        """Admit every row of a batched pytree."""
+        xb = jax.tree.map(np.asarray, xb)
+        n = jax.tree.leaves(xb)[0].shape[0]
+        lab = None if labels is None else np.asarray(labels)
+        return [self.submit(jax.tree.map(lambda leaf: leaf[i], xb),
+                            None if lab is None else lab[i], **kw)
+                for i in range(n)]
+
+    # ------------------------------------------------------------ dispatcher
+    def _dispatch_loop(self) -> None:
+        try:
+            batcher = self.engine.batcher
+            while not (self._stop.is_set() and len(self._q) == 0):
+                works = self._q.take(batcher.max_bucket, timeout=0.05)
+                if (works and len(works) < batcher.max_bucket
+                        and self.batch_window_s > 0):
+                    works += self._q.take(batcher.max_bucket - len(works),
+                                          timeout=self.batch_window_s)
+                if not works:
+                    continue
+                live = self._shed_late(works)
+                if not live:
+                    continue
+                try:
+                    # host side: stack rows and pad to the bucket in
+                    # numpy — this is the work that overlaps the device
+                    # executing the PREVIOUS chunk (whose dispatch below
+                    # did not block).
+                    bucket = batcher.bucket_for(len(live))
+                    x = jax.tree.map(lambda *rows: np.stack(rows),
+                                     *[w.x for w in live])
+                    padded = MicroBatcher.pad_rows(x, bucket)
+                    step = self.engine._step(self.head, bucket)
+                    t0 = time.perf_counter()
+                    out = step(padded)          # async dispatch, no block
+                except Exception as e:
+                    # chunk-local failure (malformed request, trace
+                    # error): fail THIS chunk's futures, keep serving —
+                    # one bad request must not take down the front-end
+                    for w in live:
+                        self._fail(w.future, e)
+                    continue
+                self._put_done((live, out, bucket, t0))
+        except BaseException as e:              # fail loudly, not silently
+            self._abort(e)
+        finally:
+            try:
+                self._done_q.put(_SENTINEL, timeout=5.0)
+            except _queue.Full:                 # completion thread dead
+                pass
+
+    def _fail_chunk(self, item) -> None:
+        for w in item[0]:
+            self._fail(w.future, RuntimeError("runtime worker died"))
+
+    def _put_done(self, item) -> None:
+        """Hand a dispatched chunk to the completion thread; if the
+        completion thread died, fail the chunk's futures instead of
+        blocking forever (or stranding the chunk in the queue)."""
+        while self._worker_exc is None:
+            try:
+                self._done_q.put(item, timeout=0.1)
+                break
+            except _queue.Full:
+                if self._stop.is_set():
+                    self._fail_chunk(item)
+                    return
+        # _abort sets _worker_exc BEFORE draining _done_q, so if the
+        # completion thread died around our put, one of the two drains
+        # (abort's, or this reclaim) is guaranteed to see the chunk
+        if self._worker_exc is not None:
+            while True:
+                try:
+                    extra = self._done_q.get_nowait()
+                except _queue.Empty:
+                    return
+                if extra is not _SENTINEL:
+                    self._fail_chunk(extra)
+
+    def _shed_late(self, works: list[_Work]) -> list[_Work]:
+        now = time.perf_counter()
+        live = []
+        for w in works:
+            if w.future.deadline is not None and now > w.future.deadline:
+                self._fail(w.future, DeadlineExceededError(
+                    f"request {w.future.rid} exceeded its deadline by "
+                    f"{(now - w.future.deadline) * 1e3:.1f} ms in queue"),
+                    kind="deadline")
+            else:
+                live.append(w)
+        return live
+
+    # ------------------------------------------------------------ completion
+    def _completion_loop(self) -> None:
+        try:
+            while True:
+                item = self._done_q.get()
+                if item is _SENTINEL:
+                    break
+                works, out, bucket, t0 = item
+                jax.block_until_ready(out.logits)
+                t1 = time.perf_counter()
+                # chunks overlap under pipelining (chunk k+1 is dispatched
+                # while k executes), so attribute each chunk only the wall
+                # PAST the previous chunk's completion — the summed walls
+                # then add up to pipeline busy time instead of ~2x it
+                prev = self._t_last
+                wall = t1 - (t0 if prev is None else max(t0, prev))
+                n = len(works)
+                logits = np.asarray(out.logits)[:n]
+                ids = np.asarray(out.ids)[:n]
+                lats = [t1 - w.future.t_submit for w in works]
+                labels = Engine._stack_labels([w.labels for w in works])
+                self.engine._record(out, n, wall, lats, labels)
+                for i, w in enumerate(works):
+                    w.future.set_result(
+                        RankResult(w.future.rid, logits[i], ids[i]))
+                with self._drained:
+                    self._n_completed += n
+                    self._n_batches += 1
+                    self._occupancy_sum += n / bucket
+                    self._lat_s.extend(lats)
+                    self._device_s.append(wall)
+                    self._t_last = t1
+                    self._drained.notify_all()
+        except BaseException as e:
+            self._abort(e)
+
+    # ---------------------------------------------------------------- misc
+    def _fail(self, fut: RankFuture, exc: BaseException,
+              kind: str = "closed") -> None:
+        if not fut.done():
+            fut.set_exception(exc)
+        with self._drained:
+            if kind == "deadline":
+                self._n_shed_deadline += 1
+            else:
+                self._n_failed += 1
+            self._drained.notify_all()
+
+    def _abort(self, exc: BaseException) -> None:
+        """A worker died: record the error, fail everything still queued,
+        and wake drain() so callers see the failure instead of hanging."""
+        self._stop.set()
+        with self._mu:
+            if self._worker_exc is None:
+                self._worker_exc = exc
+        for w in self._q.close():
+            self._fail(w.future, RuntimeError("runtime worker died"))
+        while True:                     # unjam a blocked dispatcher put
+            try:
+                item = self._done_q.get_nowait()
+            except _queue.Empty:
+                break
+            if item is not _SENTINEL:
+                for w in item[0]:
+                    self._fail(w.future, RuntimeError("runtime worker died"))
+        with self._drained:
+            self._drained.notify_all()
+
+    def stats(self) -> RuntimeStats:
+        with self._mu:
+            lat_ms = np.asarray(self._lat_s, np.float64) * 1e3
+            p50, p95, p99 = (np.percentile(lat_ms, (50, 95, 99))
+                             if lat_ms.size else (math.nan,) * 3)
+            wall = ((self._t_last - self._t_first)
+                    if self._t_first is not None and self._t_last is not None
+                    else 0.0)
+            return RuntimeStats(
+                n_submitted=self._n_submitted,
+                n_completed=self._n_completed,
+                n_shed_queue=self._n_shed_queue,
+                n_shed_deadline=self._n_shed_deadline,
+                queue_depth=len(self._q),
+                n_batches=self._n_batches,
+                avg_batch_occupancy=(self._occupancy_sum
+                                     / max(self._n_batches, 1)),
+                latency_p50_ms=float(p50),
+                latency_p95_ms=float(p95),
+                latency_p99_ms=float(p99),
+                device_ms_per_batch=(float(np.mean(self._device_s)) * 1e3
+                                     if self._device_s else math.nan),
+                wall_s=wall,
+                throughput_rps=(self._n_completed / wall if wall > 0
+                                else 0.0),
+            )

@@ -1,0 +1,331 @@
+"""Async serving runtime: admission queue policies, futures, deadline and
+queue-depth shedding, drain/close semantics, multi-threaded bit-identity
+against the synchronous Engine.flush path, and Engine thread safety."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.lss import LSSConfig
+from repro.serve import (AdmissionQueue, AsyncRuntime,
+                         DeadlineExceededError, Engine, QueueFullError,
+                         RuntimeClosedError)
+
+
+def _engine(m=512, d=32, k_bits=4, n_tables=2, top_k=5, buckets=(8,)):
+    w = jax.random.normal(jax.random.PRNGKey(0), (m, d))
+    eng = Engine(None, w, None,
+                 LSSConfig(k_bits=k_bits, n_tables=n_tables),
+                 top_k=top_k, head="lss", buckets=buckets)
+    eng.fit_random(jax.random.PRNGKey(1))
+    return eng
+
+
+# -------------------------------------------------------- admission queue --
+
+def test_admission_queue_fifo_and_take():
+    q = AdmissionQueue(maxsize=8)
+    for i in range(5):
+        assert q.put(i)
+    assert q.take(3) == [0, 1, 2]
+    assert q.take(10) == [3, 4]
+    assert q.take(1, timeout=0.01) == []         # empty -> timeout
+
+
+def test_admission_queue_shed_policy():
+    q = AdmissionQueue(maxsize=2, policy="shed")
+    assert q.put("a") and q.put("b")
+    assert not q.put("c")                        # full -> shed immediately
+    assert q.take(10) == ["a", "b"]
+    assert q.put("c")                            # space again
+
+
+def test_admission_queue_block_policy_timeout_and_wakeup():
+    q = AdmissionQueue(maxsize=1, policy="block")
+    assert q.put("a")
+    assert not q.put("b", timeout=0.05)          # blocked, then timed out
+    admitted = []
+    t = threading.Thread(target=lambda: admitted.append(q.put("c")))
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()                          # still blocked
+    assert q.take(1) == ["a"]                    # frees a slot
+    t.join(timeout=2.0)
+    assert admitted == [True]
+    assert q.take(1) == ["c"]
+
+
+def test_admission_queue_close_returns_leftovers_and_refuses():
+    q = AdmissionQueue(maxsize=8)
+    q.put(1), q.put(2)
+    assert q.close() == [1, 2]
+    assert not q.put(3)
+    assert q.take(1, timeout=5.0) == []          # returns instantly, closed
+
+
+def test_admission_queue_validation():
+    with pytest.raises(ValueError):
+        AdmissionQueue(maxsize=0)
+    with pytest.raises(ValueError):
+        AdmissionQueue(policy="drop-oldest")
+
+
+# ------------------------------------------------- bit-identity with flush --
+
+def test_multithreaded_submit_bit_identical_to_flush():
+    """N producer threads race submissions; every request's async result
+    must equal, bit for bit, what a single synchronous flush produced for
+    the same request.  A single-bucket ladder pins every chunk to one
+    jitted program, and every head op is row-parallel, so grouping cannot
+    change a row's result."""
+    eng = _engine(buckets=(8,))
+    n_threads, per_thread = 4, 16
+    rng = np.random.default_rng(3)
+    xs = rng.standard_normal((n_threads * per_thread, 32)).astype(np.float32)
+
+    for x in xs:                                  # synchronous reference
+        eng.submit(x)
+    sync = eng.flush()                            # rid == row index
+
+    rt = AsyncRuntime(eng, max_queue=1024, policy="block")
+    futs: dict[int, object] = {}
+    barrier = threading.Barrier(n_threads)
+
+    def producer(t):
+        barrier.wait()                            # maximise interleaving
+        for i in range(t * per_thread, (t + 1) * per_thread):
+            futs[i] = rt.submit(xs[i])            # dict write: GIL-atomic
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    rt.drain(timeout=60.0)
+    s = rt.stats()
+    rt.close()
+
+    assert s.n_completed == len(xs) and s.n_shed_queue == 0
+    for i in range(len(xs)):
+        r = futs[i].result(timeout=5.0)
+        np.testing.assert_array_equal(r.ids, sync[i].ids)
+        np.testing.assert_array_equal(r.logits, sync[i].logits)
+
+
+def test_paused_runtime_matches_flush_grouping_exactly():
+    """start=False stages the whole backlog first, so the dispatcher
+    coalesces identically to flush (max-bucket chunks in arrival order)
+    even on a multi-bucket ladder."""
+    eng = _engine(buckets=(1, 2, 4, 8))
+    rng = np.random.default_rng(4)
+    xs = rng.standard_normal((19, 32)).astype(np.float32)
+    for x in xs:
+        eng.submit(x)
+    sync = eng.flush()
+
+    rt = AsyncRuntime(eng, max_queue=64, start=False)
+    futs = [rt.submit(x) for x in xs]
+    rt.start()
+    rt.drain(timeout=60.0)
+    rt.close()
+    for i, f in enumerate(futs):
+        r = f.result(timeout=5.0)
+        np.testing.assert_array_equal(r.ids, sync[i].ids)
+        np.testing.assert_array_equal(r.logits, sync[i].logits)
+
+
+# ------------------------------------------------------- admission control --
+
+def test_deadline_shed():
+    eng = _engine()
+    rt = AsyncRuntime(eng, start=False)
+    futs = [rt.submit(np.zeros(32, np.float32), deadline_s=0.01)
+            for _ in range(5)]
+    time.sleep(0.05)                              # all five are now late
+    rt.start()
+    rt.drain(timeout=30.0)
+    s = rt.stats()
+    rt.close()
+    assert s.n_shed_deadline == 5 and s.n_completed == 0
+    for f in futs:
+        with pytest.raises(DeadlineExceededError):
+            f.result(timeout=5.0)
+
+
+def test_deadline_met_when_on_time():
+    eng = _engine()
+    with AsyncRuntime(eng, default_deadline_s=30.0) as rt:
+        f = rt.submit(np.zeros(32, np.float32))
+        assert f.result(timeout=30.0).ids.shape == (5,)
+        assert rt.stats().n_shed_deadline == 0
+
+
+def test_bounded_queue_shed_policy():
+    eng = _engine()
+    rt = AsyncRuntime(eng, max_queue=2, policy="shed", start=False)
+    futs = [rt.submit(np.zeros(32, np.float32)) for _ in range(5)]
+    shed = [f for f in futs if f.done()]
+    assert len(shed) == 3                         # queue bound of 2 held
+    for f in shed:
+        with pytest.raises(QueueFullError):
+            f.result()
+    assert rt.stats().n_shed_queue == 3
+    rt.start()
+    rt.drain(timeout=30.0)
+    assert rt.stats().n_completed == 2
+    rt.close()
+
+
+def test_block_policy_backpressure():
+    eng = _engine()
+    rt = AsyncRuntime(eng, max_queue=1, policy="block", start=False)
+    rt.submit(np.zeros(32, np.float32))           # fills the queue
+    blocked_fut = []
+    t = threading.Thread(target=lambda: blocked_fut.append(
+        rt.submit(np.ones(32, np.float32))))
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()                           # producer is blocked
+    rt.start()                                    # dispatcher frees space
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+    rt.drain(timeout=30.0)
+    assert blocked_fut[0].result(timeout=5.0) is not None
+    assert rt.stats().n_completed == 2
+    rt.close()
+
+
+def test_block_policy_submit_timeout_sheds():
+    eng = _engine()
+    rt = AsyncRuntime(eng, max_queue=1, policy="block", start=False)
+    rt.submit(np.zeros(32, np.float32))
+    f = rt.submit(np.zeros(32, np.float32), timeout=0.02)
+    with pytest.raises(QueueFullError):
+        f.result()
+    assert rt.stats().n_shed_queue == 1
+    rt.close()
+
+
+def test_malformed_request_fails_its_chunk_only():
+    """A request the head cannot trace (wrong feature dim) fails ITS
+    futures; the runtime keeps serving everyone else instead of dying."""
+    eng = _engine(buckets=(8,))
+    with AsyncRuntime(eng) as rt:
+        bad = rt.submit(np.zeros(33, np.float32))     # d=33 != 32
+        assert bad.exception(timeout=30.0) is not None
+        good = rt.submit(np.zeros(32, np.float32))
+        assert good.result(timeout=30.0).ids.shape == (5,)
+        s = rt.stats()
+    assert s.n_completed == 1 and s.n_submitted == 2
+
+
+# ----------------------------------------------------------- drain / close --
+
+def test_drain_on_close_completes_all_inflight():
+    eng = _engine(buckets=(1, 2, 4, 8))
+    rt = AsyncRuntime(eng, max_queue=256)
+    futs = [rt.submit(np.full(32, i, np.float32)) for i in range(30)]
+    rt.close()                                    # graceful: drains first
+    assert all(f.done() for f in futs)
+    assert all(f.exception() is None for f in futs)
+    assert rt.stats().n_completed == 30
+    with pytest.raises(RuntimeClosedError):       # closed for business
+        rt.submit(np.zeros(32, np.float32)).result()
+
+
+def test_close_never_started_fails_pending():
+    eng = _engine()
+    rt = AsyncRuntime(eng, start=False)
+    futs = [rt.submit(np.zeros(32, np.float32)) for _ in range(3)]
+    rt.close()
+    for f in futs:
+        with pytest.raises(RuntimeClosedError):
+            f.result(timeout=1.0)
+
+
+def test_close_timeout_still_stops_runtime():
+    """A drain timeout inside close() must still shut the workers down
+    and fail the undrained backlog — not leave a zombie runtime that a
+    second close() silently ignores."""
+    eng = _engine(buckets=(8,))
+    rt = AsyncRuntime(eng, max_queue=4096)
+    futs = [rt.submit(np.zeros(32, np.float32)) for _ in range(512)]
+    with pytest.raises(TimeoutError):
+        rt.close(timeout=1e-4)                    # cannot drain in 0.1ms
+    for t in rt._threads:
+        t.join(timeout=10.0)
+    assert not any(t.is_alive() for t in rt._threads)
+    # every future resolves: completed, or failed with RuntimeClosedError
+    for f in futs:
+        exc = f.exception(timeout=10.0)
+        assert exc is None or isinstance(exc, RuntimeClosedError)
+    assert any(isinstance(f.exception(0), RuntimeClosedError)
+               for f in futs), "want some undrained requests failed"
+    rt.close()                                    # now a no-op
+
+
+def test_close_is_idempotent_and_context_manager():
+    eng = _engine()
+    with AsyncRuntime(eng) as rt:
+        rt.submit(np.zeros(32, np.float32)).result(timeout=30.0)
+    rt.close()                                    # second close: no-op
+
+
+# ------------------------------------------------------------------ stats --
+
+def test_stats_latency_occupancy_and_engine_metrics():
+    eng = _engine(buckets=(8,))
+    eng.reset_metrics()
+    labels = np.arange(16, dtype=np.int32)
+    with AsyncRuntime(eng, start=False) as rt:
+        futs = [rt.submit(np.zeros(32, np.float32) + i, labels=labels[i])
+                for i in range(16)]
+        rt.start()
+        rt.drain(timeout=60.0)
+        s = rt.stats()
+    assert all(f.result(5.0) is not None for f in futs)
+    assert s.n_submitted == s.n_completed == 16
+    assert s.n_batches == 2 and s.avg_batch_occupancy == 1.0
+    assert s.latency_p50_ms > 0
+    assert s.latency_p50_ms <= s.latency_p95_ms <= s.latency_p99_ms
+    assert s.wall_s > 0 and s.throughput_rps > 0
+    # queue-wait-inclusive client latency >= pure device wall per batch
+    assert s.latency_p99_ms >= s.device_ms_per_batch / 2
+    # the runtime records into the engine's metrics window too
+    m = eng.metrics()
+    assert m.n_requests == 16
+    assert 0.0 <= m.label_recall <= 1.0
+
+
+# -------------------------------------------------- engine thread safety --
+
+def test_engine_submit_is_thread_safe():
+    """Racing Engine.submit from many threads must lose no requests and
+    assign unique rids (the pre-lock engine raced ``_pending``)."""
+    eng = _engine(buckets=(1, 2, 4, 8))
+    n_threads, per_thread = 8, 25
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((n_threads * per_thread, 32)).astype(np.float32)
+    rids: list[int] = []
+    barrier = threading.Barrier(n_threads)
+
+    def producer(t):
+        got = []
+        barrier.wait()
+        for i in range(t * per_thread, (t + 1) * per_thread):
+            got.append(eng.submit(xs[i]))
+        rids.extend(got)                          # one append per thread
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+    res = eng.flush()
+    assert len(rids) == len(set(rids)) == n_threads * per_thread
+    assert sorted(r.rid for r in res) == sorted(rids)

@@ -84,3 +84,29 @@ def test_bucket_logits_matches_full_index_pipeline():
     mask = np.asarray(cand) >= 0
     np.testing.assert_allclose(np.asarray(want)[mask],
                                np.asarray(got)[mask], rtol=1e-4, atol=1e-4)
+
+
+def test_lss_topk_warns_once_past_dedup_comfort_limit():
+    """C = L*P > ~2k: the O(C^2) in-kernel dedup stops fitting in VMEM;
+    the dispatching wrapper must say so exactly once per shape."""
+    import warnings
+
+    from repro.kernels.lss_topk import ops
+
+    d_aug, cap = 8, 2560                        # C = 1 * 2560 > 2048
+    q = jnp.zeros((1, d_aug))
+    theta = jnp.ones((d_aug, 1))                # K=1 bit, L=1 table
+    tids = jnp.full((1, 2, cap), -1, jnp.int32)
+    wb = jnp.zeros((1, 2, cap, d_aug))
+    ops._warn_large_candidate_count.cache_clear()
+    with pytest.warns(UserWarning, match=r"C = L\*P = 1\*2560"):
+        ops.lss_topk(q, theta, tids, wb, top_k=3, impl="ref")
+    with warnings.catch_warnings():             # second call: silent
+        warnings.simplefilter("error")
+        ops.lss_topk(q, theta, tids, wb, top_k=3, impl="ref")
+    # under the comfort limit: never warns
+    small = jnp.full((1, 2, 64), -1, jnp.int32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ops.lss_topk(q, theta, small, jnp.zeros((1, 2, 64, d_aug)),
+                     top_k=3, impl="ref")

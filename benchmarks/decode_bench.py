@@ -1,0 +1,242 @@
+"""Open-loop decode load harness for the streaming-decode runtime.
+
+Drives decode SESSIONS (not single rank requests) through an
+:class:`AsyncRuntime` + :class:`DecodeScheduler`: Poisson session
+arrivals at a configurable rate (``qps <= 0`` = burst — every session
+arrives at t=0, the saturation point), sweeping the number of concurrent
+streams (pool slots), and writes the ``BENCH_decode.json`` artifact
+consumed by CI.
+
+Each (head, streams, qps) point reports:
+
+  * aggregate tokens/sec across all in-flight streams,
+  * time-to-first-token p50/p95 (queue wait INCLUDED) and inter-token
+    latency p50/p95 — the two numbers a streaming client experiences,
+  * decode-slot occupancy and the split shed counts (queue-capacity vs
+    deadline),
+  * the blocking baseline — sequential per-prompt ``LMDecoder.generate``
+    on a single-slot decoder (the semantics of the pre-streaming decode
+    loop: one prompt runs to completion before the next starts) — and
+    the streaming/blocking tokens-per-sec ratio.
+
+The artifact also records whether burst tokens/sec improved
+monotonically from 1 stream to the max — the "continuous batching pays
+off" acceptance signal.
+
+Run:  PYTHONPATH=src python -m benchmarks.decode_bench --streams 1,2,4,8
+Env:  BENCH_FAST=1 shrinks sizes (default); BENCH_DECODE_OUT /
+      BENCH_OUT_DIR override the artifact path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lss import LSSConfig
+from repro.models.transformer import TransformerConfig
+from repro.serve import AsyncRuntime, LMDecoder
+from repro.serve.runtime import submit_decode_open_loop
+
+PROMPT_LEN = 8
+
+
+def tiny_lm_cfg(vocab: int) -> TransformerConfig:
+    return TransformerConfig(
+        name="decode-bench", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, head_dim=16, d_ff=64, vocab=vocab,
+        dtype=jnp.float32, kv_chunk=32)
+
+
+def build_decoder(params, cfg, streams: int, max_len: int,
+                  impl: str | None) -> LMDecoder:
+    """SimHash-initialised LSS head over the LM's WOL (retrieval speed is
+    learning-independent; see benchmarks/serve_bench.py)."""
+    dec = LMDecoder(params, cfg,
+                    LSSConfig(k_bits=5, n_tables=2, use_bucket_major=True),
+                    impl=impl, max_streams=streams, max_len=max_len)
+    dec.engine.fit_random(jax.random.PRNGKey(2))
+    return dec
+
+
+def warm(dec: LMDecoder, head: str, steps: int) -> None:
+    """Trace the prefill/join path, the bucket-1 first-token step, and
+    the fused decode step before the measured segment."""
+    prompt = jnp.zeros((1, PROMPT_LEN), jnp.int32)
+    dec.generate(prompt, steps=min(2, steps), head=head)
+
+
+def run_streaming_point(dec: LMDecoder, head: str, prompts, qps: float,
+                        max_new_tokens: int, *, max_queue: int,
+                        deadline_s: float | None) -> dict:
+    sched = dec.scheduler(head=head)
+    sched.reset_stats()               # warmup traffic must not count
+    rt = AsyncRuntime(dec.engine, head=head, max_queue=max_queue,
+                      policy="shed", default_deadline_s=deadline_s,
+                      scheduler=sched)
+    try:
+        streams, arrivals = submit_decode_open_loop(
+            rt, prompts, qps, max_new_tokens=max_new_tokens, seed=7)
+        rt.drain(timeout=600.0)
+        s = rt.stats()
+    finally:
+        # a drain timeout must not leak a live dispatcher still ticking
+        # the shared scheduler into the next point
+        rt.close(timeout=30.0)
+    n_ok = sum(st.exception(timeout=1.0) is None for st in streams)
+    return {
+        "n_sessions": len(prompts),
+        "qps_offered": (None if qps <= 0
+                        else round(len(prompts) / arrivals[-1], 1)),
+        "n_ok": n_ok,
+        "tokens": s.n_decode_tokens,
+        "tokens_per_s": round(s.decode_tokens_per_s, 1),
+        "ttft_p50_ms": round(s.ttft_p50_ms, 3),
+        "ttft_p95_ms": round(s.ttft_p95_ms, 3),
+        "itl_p50_ms": round(s.itl_p50_ms, 3),
+        "itl_p95_ms": round(s.itl_p95_ms, 3),
+        "occupancy": round(s.decode_slot_occupancy, 3),
+        "shed_queue": s.n_shed_queue,
+        "shed_deadline": s.n_shed_deadline,
+    }
+
+
+def run_blocking_baseline(dec1: LMDecoder, head: str, prompts,
+                          max_new_tokens: int) -> float:
+    """Sequential per-prompt generate on a 1-slot decoder: the blocking
+    decode loop's aggregate tokens/sec over the same session set."""
+    t0 = time.perf_counter()
+    n_tok = 0
+    for p in prompts:
+        out = dec1.generate(jnp.asarray(p)[None, :], steps=max_new_tokens,
+                            head=head)
+        n_tok += int(out.shape[0] * out.shape[1])
+    return n_tok / (time.perf_counter() - t0)
+
+
+def bench_decode(*, vocab: int, n_sessions: int, streams_list: list[int],
+                 qps_list: list[float], heads: list[str],
+                 max_new_tokens: int, impl: str | None,
+                 max_queue: int, deadline_ms: float | None) -> dict:
+    deadline_s = None if deadline_ms is None else deadline_ms / 1e3
+    cfg = tiny_lm_cfg(vocab)
+    params_key = jax.random.PRNGKey(0)
+    from repro.models import transformer as T
+    params = T.init_params(params_key, cfg)
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, vocab, (n_sessions, PROMPT_LEN)).astype(np.int32)
+    max_len = PROMPT_LEN + max_new_tokens
+
+    rows = []
+    baselines: dict[str, float] = {}
+    dec1 = build_decoder(params, cfg, 1, max_len, impl)
+    for head in heads:
+        warm(dec1, head, max_new_tokens)
+        baselines[head] = run_blocking_baseline(dec1, head, prompts,
+                                                max_new_tokens)
+    for streams in streams_list:
+        dec = build_decoder(params, cfg, streams, max_len, impl)
+        for head in heads:
+            warm(dec, head, max_new_tokens)
+            for qps in qps_list:
+                row = run_streaming_point(
+                    dec, head, prompts, qps, max_new_tokens,
+                    max_queue=max_queue, deadline_s=deadline_s)
+                row.update({
+                    "head": head, "impl": impl or "auto",
+                    "streams": streams, "qps": qps, "vocab": vocab,
+                    "prompt_len": PROMPT_LEN,
+                    "max_new_tokens": max_new_tokens,
+                    "blocking_tok_s": round(baselines[head], 1),
+                    "speedup_vs_blocking": round(
+                        row["tokens_per_s"] / baselines[head], 2),
+                })
+                rows.append(row)
+    # acceptance signal: burst tokens/sec improves monotonically in the
+    # number of concurrent streams (per head); None = no burst data
+    monotonic = {}
+    for head in heads:
+        burst = sorted((r["streams"], r["tokens_per_s"]) for r in rows
+                       if r["head"] == head and r["qps"] <= 0)
+        monotonic[head] = (None if not burst else
+                           bool(all(b[1] >= a[1]
+                                    for a, b in zip(burst, burst[1:]))))
+    return {
+        "bench": "decode",
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "streams": streams_list,
+        "monotonic_tokens_per_s": monotonic,
+        "rows": rows,
+    }
+
+
+def write_artifact(record: dict, path: str | None = None) -> str:
+    """Precedence: explicit path > $BENCH_DECODE_OUT > $BENCH_OUT_DIR/
+    BENCH_decode.json > ./BENCH_decode.json."""
+    path = (path or os.environ.get("BENCH_DECODE_OUT")
+            or os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
+                            "BENCH_decode.json"))
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return path
+
+
+def _csv_ints(s: str) -> list[int]:
+    return [int(x) for x in s.split(",") if x]
+
+
+def _csv_floats(s: str) -> list[float]:
+    return [float(x) for x in s.split(",") if x]
+
+
+def main(argv: list[str] | None = None) -> dict:
+    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--streams", type=_csv_ints,
+                    default=[1, 2, 4] if fast else [1, 2, 4, 8, 16],
+                    help="comma-separated concurrent-stream (slot) sweep")
+    ap.add_argument("--sessions", type=int, default=8 if fast else 32)
+    ap.add_argument("--steps", type=int, default=8 if fast else 32,
+                    help="max_new_tokens per session")
+    ap.add_argument("--qps", type=_csv_floats, default=[0.0],
+                    help="offered SESSION arrival rates; 0 = burst")
+    ap.add_argument("--heads", default="lss",
+                    help="comma-separated head kinds (full,lss)")
+    ap.add_argument("--vocab", type=int, default=2048 if fast else 16384)
+    ap.add_argument("--impl", default=None,
+                    choices=(None, "ref", "pallas", "pallas_interpret"))
+    ap.add_argument("--max-queue", type=int, default=4096)
+    ap.add_argument("--deadline-ms", type=float, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    rec = bench_decode(
+        vocab=args.vocab, n_sessions=args.sessions,
+        streams_list=args.streams, qps_list=args.qps,
+        heads=[h for h in args.heads.split(",") if h],
+        max_new_tokens=args.steps, impl=args.impl,
+        max_queue=args.max_queue, deadline_ms=args.deadline_ms)
+    path = write_artifact(rec, args.out)
+    print(f"wrote {path}")
+    print(f"monotonic tokens/s vs streams: {rec['monotonic_tokens_per_s']}")
+    for r in rec["rows"]:
+        qps = "  burst" if r["qps"] <= 0 else f"{r['qps']:>7.1f}"
+        print(f"  {r['head']:<5} streams={r['streams']:>3} qps={qps} "
+              f"tok/s={r['tokens_per_s']:>8.1f}  "
+              f"ttft p50={r['ttft_p50_ms']:>8.2f} p95={r['ttft_p95_ms']:>8.2f} ms  "
+              f"itl p50={r['itl_p50_ms']:>6.2f} ms  occ={r['occupancy']:.2f}  "
+              f"shed={r['shed_queue']}+{r['shed_deadline']}  "
+              f"blocking={r['blocking_tok_s']:>8.1f} tok/s  "
+              f"x{r['speedup_vs_blocking']:.2f}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -3,9 +3,10 @@ artifact) + one section per paper table/figure + the kernel microbench +
 the roofline table from the dry-run artifacts.
 
 Every section now writes a ``BENCH_<name>.json`` artifact next to the
-existing ``BENCH_serve.json`` (table1, table2, fig2, kernels, roofline),
-so CI can upload machine-readable results even when a section partially
-fails — failures are recorded in the artifact instead of lost in stdout.
+existing ``BENCH_serve.json`` (load, decode, table1, table2, fig2,
+kernels, roofline), so CI can upload machine-readable results even when
+a section partially fails — failures are recorded in the artifact
+instead of lost in stdout.
 
 Prints ``name,us_per_call,derived`` CSV rows (one per method x dataset).
 Env: BENCH_FAST=0 for the full pass (fast is the default); BENCH_SKIP_TABLES=1
@@ -123,6 +124,31 @@ def bench_load_rows() -> list[str]:
     ]
 
 
+def bench_decode_rows() -> list[str]:
+    """Short streaming-decode load run (burst session arrivals, stream
+    sweep, blocking per-prompt generate baseline); writes
+    BENCH_decode.json."""
+    from benchmarks.decode_bench import bench_decode, write_artifact
+    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    rec = bench_decode(
+        vocab=2048 if fast else 8192,
+        n_sessions=8 if fast else 32,
+        streams_list=[1, 2, 4] if fast else [1, 2, 4, 8],
+        qps_list=[0.0], heads=["lss"],
+        max_new_tokens=8 if fast else 32,
+        impl="ref", max_queue=4096, deadline_ms=None)
+    write_artifact(rec)   # honors BENCH_DECODE_OUT / BENCH_OUT_DIR itself
+    return [
+        f"decode_{r['head']}_s{r['streams']}_"
+        f"{'burst' if r['qps'] <= 0 else 'qps%g' % r['qps']},"
+        f"{r['ttft_p50_ms']:.2f},"
+        f"tok_s={r['tokens_per_s']};itl_p50={r['itl_p50_ms']};"
+        f"occ={r['occupancy']};shed={r['shed_queue']}+{r['shed_deadline']};"
+        f"speedup_vs_blocking={r['speedup_vs_blocking']}"
+        for r in rec["rows"]
+    ]
+
+
 def bench_tables(rows: list[str]) -> None:
     from benchmarks.paper_tables import (fig2_collision_curves,
                                          run_setting, table2_kl_sweep)
@@ -173,6 +199,7 @@ def main() -> None:
     rows = []
     rows += bench_serving_rows()
     rows += bench_load_rows()
+    rows += bench_decode_rows()
     kern_recs, kern_rows = bench_kernels()
     _write_artifact("kernels", {"rows": kern_recs})
     rows += kern_rows

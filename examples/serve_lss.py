@@ -7,7 +7,11 @@
    pass.
 2. Decode path — a small decoder-only LM served through ``LMDecoder``
    (same Engine underneath): exact vs LSS head, tokens/s and agreement.
-3. Async path — the same Engine behind an ``AsyncRuntime``: open-loop
+3. Streaming decode — the same decoder behind the AsyncRuntime's decode
+   request kind: sessions join/leave a fixed slot pool mid-flight,
+   tokens resolve through per-token ``TokenStream`` futures, and the
+   interleaved tokens are bit-identical to blocking ``generate``.
+4. Async path — the same Engine behind an ``AsyncRuntime``: open-loop
    Poisson traffic with per-request futures, then a burst segment, and
    an exact-equality check against the synchronous ``flush`` path.
 
@@ -67,7 +71,7 @@ def score_path() -> None:
           f"{sorted({k[1] for k in eng.compile_counts})}")
 
 
-def decode_path() -> None:
+def decode_path():
     print("== decode path: LMDecoder on the same Engine ==")
     cfg = reduced_model_cfg("qwen2-0.5b")._replace(vocab=2048)
     toks = lm_dataset(5, 200_000, cfg.vocab, 33)
@@ -83,7 +87,8 @@ def decode_path() -> None:
 
     dec = LMDecoder(state.params, cfg,
                     LSSConfig(k_bits=6, n_tables=1, iul_epochs=4,
-                              iul_inner_steps=8, iul_lr=0.02))
+                              iul_inner_steps=8, iul_lr=0.02),
+                    max_streams=16)      # one slot per prompt row below
     print("  fitting LSS index on the LM head...")
     dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:256]),
                 verbose=True)
@@ -101,6 +106,39 @@ def decode_path() -> None:
         outs[head] = out
     agree = float(jnp.mean(outs["lss"] == outs["full"]))
     print(f"  top-1 agreement LSS vs full: {agree:.3f}")
+    return dec, toks
+
+
+def streaming_decode_path(dec, toks) -> None:
+    print("== streaming decode: sessions + TokenStream futures ==")
+    from repro.serve import AsyncRuntime
+    from repro.serve.runtime import submit_decode_open_loop
+
+    prompts = np.asarray(toks[2000:2012, :16], np.int32)
+    steps = 24
+    # blocking reference: one generate call per prompt (same fused step)
+    blocking = [np.asarray(dec.generate(jnp.asarray(p)[None, :],
+                                        steps=steps, head="lss"))[0]
+                for p in prompts]
+    sched = dec.scheduler(head="lss")
+    sched.reset_stats()
+    with AsyncRuntime(dec.engine, head="lss", policy="shed",
+                      scheduler=sched) as rt:
+        streams, _ = submit_decode_open_loop(rt, list(prompts), 50.0,
+                                             max_new_tokens=steps, seed=0)
+        first = list(streams[0])        # iterate tokens as they resolve
+        rt.drain(timeout=300.0)
+        s = rt.stats()
+    exact = all(np.array_equal(st.result(), blocking[i])
+                for i, st in enumerate(streams))
+    print(f"  {s.n_decode_done} sessions, {s.n_decode_tokens} tokens at "
+          f"{s.decode_tokens_per_s:,.0f} tok/s "
+          f"(slots={dec.max_streams}, occupancy "
+          f"{s.decode_slot_occupancy:.2f})")
+    print(f"  ttft p50={s.ttft_p50_ms:.1f} ms  "
+          f"itl p50={s.itl_p50_ms:.2f} ms  "
+          f"first stream: {len(first)} tokens streamed live")
+    print(f"  interleaved == blocking generate: {exact}")
 
 
 def async_path() -> None:
@@ -138,7 +176,8 @@ def async_path() -> None:
 
 def main() -> None:
     score_path()
-    decode_path()
+    dec, toks = decode_path()
+    streaming_decode_path(dec, toks)
     async_path()
 
 

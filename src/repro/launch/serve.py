@@ -1,12 +1,19 @@
 """Serving launcher: load (or train briefly) an LM, fit the LSS head,
-then either decode batched requests through the unified serving engine
-(``--runtime sync``, the default) or serve open-loop scoring traffic
-through the async runtime (``--runtime async``: Poisson arrivals at
-``--qps``, optional ``--deadline-ms`` load shedding).
+then serve one of three modes:
+
+  * ``--mode generate`` (default) — blocking batched decode through the
+    unified serving engine (``--runtime async`` instead serves open-loop
+    next-token SCORING traffic: Poisson arrivals at ``--qps``, optional
+    ``--deadline-ms`` load shedding).
+  * ``--mode decode --streams N`` — streaming decode through the
+    AsyncRuntime: open-loop Poisson SESSION arrivals at ``--qps``
+    sessions/s (0 = burst), N concurrent streams interleaved in one
+    fused decode step, per-token TokenStream futures, TTFT/ITL stats.
 
     python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 16 --steps 32 [--head full|lss|lss-sharded] \
-        [--runtime async --qps 500 --deadline-ms 50]
+        [--runtime async --qps 500 --deadline-ms 50] \
+        [--mode decode --streams 8 --sessions 32 --qps 0]
 """
 
 import argparse
@@ -27,15 +34,26 @@ def main() -> None:
                          "(default: auto — pallas on TPU, ref elsewhere)")
     ap.add_argument("--no-lss", action="store_true",
                     help="legacy alias for --head full")
+    ap.add_argument("--mode", choices=("generate", "decode"),
+                    default="generate",
+                    help="generate: blocking batched decode (or scoring "
+                         "with --runtime async); decode: streaming "
+                         "sessions through the AsyncRuntime")
     ap.add_argument("--runtime", choices=("sync", "async"), default="sync",
                     help="sync: blocking batched decode; async: open-loop "
                          "next-token scoring through the AsyncRuntime")
+    ap.add_argument("--streams", type=int, default=8,
+                    help="concurrent decode streams (KV-pool slots) for "
+                         "--mode decode")
+    ap.add_argument("--sessions", type=int, default=None,
+                    help="decode sessions to submit (default: --batch)")
     ap.add_argument("--qps", type=float, default=500.0,
-                    help="offered Poisson QPS for --runtime async "
-                         "(0 = burst: all requests arrive at once)")
+                    help="offered Poisson rate: requests/s for --runtime "
+                         "async, sessions/s for --mode decode "
+                         "(0 = burst: everything arrives at once)")
     ap.add_argument("--deadline-ms", type=float, default=None,
-                    help="per-request deadline for --runtime async; "
-                         "already-late requests are shed, not executed")
+                    help="per-request (or per-session) deadline; "
+                         "already-late work is shed, not executed")
     args = ap.parse_args()
     head = "full" if args.no_lss else args.head
 
@@ -67,11 +85,20 @@ def main() -> None:
 
     lss_cfg = LSSConfig(k_bits=6, n_tables=1, iul_epochs=4,
                         iul_inner_steps=8, iul_lr=0.02)
-    dec = LMDecoder(state.params, cfg, lss_cfg, impl=args.impl)
+    # decode mode: --streams slots; generate mode: one slot per prompt
+    # row so the batch decodes in a single wave, like the pre-streaming
+    # loop.  Pool width covers the warm call's 2-step floor.
+    n_slots = args.streams if args.mode == "decode" else args.batch
+    dec = LMDecoder(state.params, cfg, lss_cfg, impl=args.impl,
+                    max_streams=n_slots,
+                    max_len=16 + max(args.steps, 2))
     if head != "full":
         dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:128]))
     prompt = jnp.asarray(toks[500:500 + args.batch, :16])
 
+    if args.mode == "decode":
+        serve_decode(dec, toks, head, args)
+        return
     if args.runtime == "async":
         serve_async(dec, prompt, head, args)
         return
@@ -80,6 +107,47 @@ def main() -> None:
     print(f"decoded {out.shape} tokens; head={head}")
     print(out[:2])
     print(f"engine compiles (head, bucket): {dec.engine.compile_counts}")
+
+
+def serve_decode(dec, toks, head: str, args) -> None:
+    """Streaming decode: open-loop decode SESSIONS through the
+    AsyncRuntime at --qps sessions/s, --streams concurrent slots."""
+    import numpy as np
+    from repro.serve import AsyncRuntime
+    from repro.serve.runtime import submit_decode_open_loop
+
+    n_sessions = (args.sessions if args.sessions is not None
+                  else args.batch)
+    prompts = np.asarray(toks[500:500 + n_sessions, :16], np.int32)
+    # warm every compile the run needs (prefill, bucket-1 first-token
+    # step, fused decode step — steps >= 2, or the fused step never
+    # dispatches), THEN fetch the scheduler: the warm call must not
+    # outgrow and replace the pool the runtime is about to own (the
+    # decoder's max_len already covers the 2-step floor)
+    dec.generate(prompts[:1], steps=2, head=head)
+    sched = dec.scheduler(head=head, min_len=16 + args.steps)
+    sched.reset_stats()
+    deadline_s = (None if args.deadline_ms is None
+                  else args.deadline_ms / 1e3)
+    with AsyncRuntime(dec.engine, head=head, policy="shed",
+                      default_deadline_s=deadline_s,
+                      scheduler=sched) as rt:
+        streams, _ = submit_decode_open_loop(
+            rt, list(prompts), args.qps, max_new_tokens=args.steps, seed=0)
+        rt.drain(timeout=600.0)
+        s = rt.stats()
+    ok = sum(st.exception(timeout=1.0) is None for st in streams)
+    print(f"streaming decode: head={head} streams={args.streams} "
+          f"qps={args.qps} {ok}/{len(streams)} sessions served, "
+          f"{s.n_decode_tokens} tokens")
+    print(f"  {s.decode_tokens_per_s:,.0f} tok/s  "
+          f"ttft p50={s.ttft_p50_ms:.2f} p95={s.ttft_p95_ms:.2f} "
+          f"p99={s.ttft_p99_ms:.2f} ms (incl. queue wait)")
+    print(f"  itl p50={s.itl_p50_ms:.2f} p95={s.itl_p95_ms:.2f} "
+          f"p99={s.itl_p99_ms:.2f} ms  "
+          f"slot occupancy={s.decode_slot_occupancy:.2f}")
+    print(f"  shed: queue={s.n_shed_queue} deadline={s.n_shed_deadline}")
+    print(f"engine compiles (head, shape): {dec.engine.compile_counts}")
 
 
 def serve_async(dec, prompt, head: str, args) -> None:

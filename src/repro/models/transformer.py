@@ -11,6 +11,9 @@ Entry points:
   * ``decode_step(params, token, cache, cfg)`` — one token; returns the
     final-norm hidden state so the serving engine can apply either the
     full vocab head or the LSS head (the paper's technique).
+  * ``decode_step_pooled(params, token, k, v, lengths, cfg)`` — one token
+    per POOL SLOT with per-row cache lengths (continuous batching; see
+    ``repro.serve.decode``).
   * ``param_specs(cfg)`` / ``cache_specs(cfg, policy)`` — PartitionSpecs.
 """
 
@@ -254,8 +257,14 @@ def _attn_block(x, lp, cfg: TransformerConfig, positions, mode,
 
 
 def _write_cache(cache: jax.Array, kv: jax.Array, pos: jax.Array) -> jax.Array:
-    """Write the [B, 1, KV, H] step into cache[:, pos] (traced pos)."""
-    onehot = (jnp.arange(cache.shape[1]) == pos)[None, :, None, None]
+    """Write the [B, 1, KV, H] step into cache[:, pos] (traced pos, scalar
+    or [B] for per-row write positions under continuous batching)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        onehot = (jnp.arange(cache.shape[1]) == pos)[None, :, None, None]
+    else:
+        onehot = (jnp.arange(cache.shape[1])[None, :]
+                  == pos[:, None])[:, :, None, None]
     return jnp.where(onehot, kv.astype(cache.dtype), cache)
 
 
@@ -396,24 +405,21 @@ def prefill(params: dict, tokens: jax.Array, cfg: TransformerConfig,
                            jnp.asarray(tokens.shape[1], jnp.int32))
 
 
-def decode_step(params: dict, token: jax.Array, cache: KVCache,
-                cfg: TransformerConfig) -> tuple[jax.Array, KVCache]:
-    """One decode step. token [B] int32 -> (hidden [B, D], new cache).
-
-    The caller applies the head: ``logits_head`` for exact serving or the
-    LSS index (repro.core) for sub-linear WOL serving.
-    """
-    b = token.shape[0]
+def _decode_layers(params: dict, token: jax.Array, k: jax.Array,
+                   v: jax.Array, positions: jax.Array, kv_len,
+                   cfg: TransformerConfig
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared one-token layer loop.  token [B], k/v [L, B, S, KV, H],
+    positions [B, 1], kv_len scalar or [B] -> (hidden [B, D], k_new,
+    v_new).  Every op is row-parallel over B."""
     x = params["embed"][token[:, None]].astype(cfg.dtype)   # [B, 1, D]
-    kv_len = cache.length + 1
-    positions = jnp.full((b, 1), cache.length, jnp.int32)
 
     if cfg.layers_impl == "unroll":
         ks, vs = [], []
         for i in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[i], params["layers"])
             x, (k_i, v_i), _ = _layer(x, lp, cfg, positions, "decode",
-                                      (cache.k[i], cache.v[i]), kv_len)
+                                      (k[i], v[i]), kv_len)
             ks.append(k_i)
             vs.append(v_i)
         k_new, v_new = jnp.stack(ks), jnp.stack(vs)
@@ -425,7 +431,42 @@ def decode_step(params: dict, token: jax.Array, cache: KVCache,
                                      (kc, vc), kv_len)
             return h, new_cache
 
-        x, (k_new, v_new) = jax.lax.scan(
-            body, x, (params["layers"], cache.k, cache.v))
-    hidden = L.rms_norm(x[:, 0], params["final_norm"])
+        x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], k, v))
+    return L.rms_norm(x[:, 0], params["final_norm"]), k_new, v_new
+
+
+def decode_step(params: dict, token: jax.Array, cache: KVCache,
+                cfg: TransformerConfig) -> tuple[jax.Array, KVCache]:
+    """One decode step. token [B] int32 -> (hidden [B, D], new cache).
+
+    The caller applies the head: ``logits_head`` for exact serving or the
+    LSS index (repro.core) for sub-linear WOL serving.
+    """
+    b = token.shape[0]
+    kv_len = cache.length + 1
+    positions = jnp.full((b, 1), cache.length, jnp.int32)
+    hidden, k_new, v_new = _decode_layers(params, token, cache.k, cache.v,
+                                          positions, kv_len, cfg)
     return hidden, KVCache(k_new, v_new, kv_len)
+
+
+def decode_step_pooled(params: dict, token: jax.Array, k: jax.Array,
+                       v: jax.Array, lengths: jax.Array,
+                       cfg: TransformerConfig
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step over a slot pool with PER-ROW cache lengths.
+
+    The continuous-batching counterpart of :func:`decode_step`: rows are
+    independent streams at different depths, so each row reads its own
+    valid prefix and writes its new KV at its own position.  token [B]
+    int32, k/v [L, B, S_max, KV, H] slabs, lengths [B] int32 (current
+    valid prefix per slot) -> (hidden [B, D], k_new, v_new).
+
+    Row ``i`` computes exactly what :func:`decode_step` computes for a
+    batch-1 cache of the same width ``S_max`` — every op is row-parallel —
+    which is what makes interleaved decode token-exact with a blocking
+    per-stream loop (asserted in tests/test_decode_stream.py).
+    """
+    return _decode_layers(params, token, k, v,
+                          lengths[:, None].astype(jnp.int32),  # positions
+                          lengths + 1, cfg)

@@ -8,9 +8,15 @@ the async serving runtime.
   * ``runtime`` — :class:`AsyncRuntime`: thread-safe admission queue with
     per-request futures, deadline/queue-depth load shedding, and a
     dispatcher that overlaps host-side padding with device execution.
+  * ``decode``  — continuous-batching streaming decode:
+    :class:`DecodeScheduler` over a slot-based :class:`KVCachePool`,
+    per-token :class:`TokenStream` futures, token-exact with the
+    blocking ``LMDecoder.generate`` path (which is now a facade over it).
 """
 
 from repro.serve.batcher import DEFAULT_BUCKETS, Chunk, MicroBatcher
+from repro.serve.decode import (DecodeScheduler, DecodeSession, DecodeStats,
+                                KVCachePool, TokenStream)
 from repro.serve.engine import (Engine, LMDecoder, RankResult, ServeMetrics,
                                 WOLServer)
 from repro.serve.heads import (HEAD_KINDS, HeadOutput, make_full_head,
@@ -19,7 +25,8 @@ from repro.serve.heads import (HEAD_KINDS, HeadOutput, make_full_head,
 from repro.serve.runtime import (AdmissionQueue, AsyncRuntime,
                                  DeadlineExceededError, QueueFullError,
                                  RankFuture, RuntimeClosedError,
-                                 RuntimeStats, ShedError)
+                                 RuntimeStats, ShedError,
+                                 submit_decode_open_loop, submit_open_loop)
 
 __all__ = [
     "DEFAULT_BUCKETS", "Chunk", "MicroBatcher",
@@ -28,5 +35,7 @@ __all__ = [
     "make_sharded_lss_head", "shard_index",
     "AsyncRuntime", "RuntimeStats", "RankFuture", "AdmissionQueue",
     "ShedError", "QueueFullError", "DeadlineExceededError",
-    "RuntimeClosedError",
+    "RuntimeClosedError", "submit_open_loop", "submit_decode_open_loop",
+    "DecodeScheduler", "DecodeSession", "DecodeStats", "KVCachePool",
+    "TokenStream",
 ]

@@ -1,0 +1,26 @@
+"""Continuous-batching streaming decode.
+
+  * ``sessions``  — :class:`DecodeSession` (one generation request) and
+    :class:`TokenStream` (write-many per-token future with TTFT /
+    inter-token timing).
+  * ``kv_pool``   — :class:`KVCachePool`: fixed ``[L, max_streams,
+    max_len, KV, H]`` cache slabs; sessions join a free slot after
+    prefill and leave on EOS / token budget, so batch composition
+    changes with zero recompiles.
+  * ``scheduler`` — :class:`DecodeScheduler`: one fused
+    ``decode_step_pooled -> Engine head`` program per step over all
+    slots, software-pipelined one step deep, token-exact with the
+    blocking per-stream loop.
+
+Hangs behind :class:`repro.serve.AsyncRuntime` via ``submit_decode``
+(admission queue, block|shed, deadlines) or runs standalone via
+``DecodeScheduler.submit`` / ``run``.
+"""
+
+from repro.serve.decode.kv_pool import KVCachePool
+from repro.serve.decode.scheduler import DecodeScheduler, DecodeStats
+from repro.serve.decode.sessions import (FINISH_REASONS, DecodeSession,
+                                         TokenStream)
+
+__all__ = ["KVCachePool", "DecodeScheduler", "DecodeStats",
+           "DecodeSession", "TokenStream", "FINISH_REASONS"]

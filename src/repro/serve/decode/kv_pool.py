@@ -1,0 +1,112 @@
+"""Slot-based KV-cache pool for continuous-batching decode.
+
+One pool owns fixed-shape cache slabs ``[n_layers, max_streams, max_len,
+n_kv_heads, head_dim]``.  Sessions JOIN a free slot after prefill (their
+prefill KV is scattered into the slot's rows and the slot's length set to
+the prompt length) and LEAVE on EOS / token budget, so the batch
+composition changes continuously while every device program keeps the
+same static shape — the property that makes "sessions come and go" cost
+zero recompiles.
+
+Slot state is split across the device/host boundary deliberately:
+
+  * the slabs (``k``/``v``) live on device and flow functionally through
+    the scheduler's fused step (step k+1 consumes step k's output slabs,
+    so a join scatter issued after step k's dispatch can never race it);
+  * per-slot lengths live on the HOST (`numpy`) — they are scheduler
+    control state, read every step to build the [max_streams] lengths
+    operand, and mutating them must not synchronize with the device.
+
+A freed slot is simply abandoned in place: parked rows keep decoding
+garbage at a frozen length (row-parallel math — they cannot disturb live
+rows) and the next join's prefill scatter overwrites everything the new
+session can see (positions >= its length are masked by attention).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["KVCachePool"]
+
+
+@jax.jit
+def _scatter_prefill(k, v, k_new, v_new, slot):
+    """Write [L, 1, S, KV, H] prefill slabs into pool slot ``slot``.
+
+    ``slot`` is a traced scalar so one compilation serves every slot (a
+    python-int index would specialize and retrace per slot); jax caches
+    one program per prompt length S.
+    """
+    start = (0, slot, 0, 0, 0)
+    return (jax.lax.dynamic_update_slice(k, k_new.astype(k.dtype), start),
+            jax.lax.dynamic_update_slice(v, v_new.astype(v.dtype), start))
+
+
+class KVCachePool:
+    """Fixed ``[L, max_streams, max_len, KV, H]`` cache slabs + slot
+    accounting."""
+
+    def __init__(self, cfg, max_streams: int, max_len: int, dtype=None):
+        if max_streams < 1:
+            raise ValueError(f"max_streams must be >= 1, got {max_streams}")
+        if max_len < 2:
+            raise ValueError(f"max_len must be >= 2, got {max_len}")
+        self.cfg = cfg
+        self.max_streams = int(max_streams)
+        self.max_len = int(max_len)
+        dt = dtype or cfg.dtype
+        shape = (cfg.n_layers, max_streams, max_len,
+                 cfg.n_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, dt)
+        self.v = jnp.zeros(shape, dt)
+        self.lengths = np.zeros((max_streams,), np.int32)   # host mirror
+        self._free = list(range(max_streams - 1, -1, -1))   # pop() -> slot 0
+
+    # ------------------------------------------------------ slot account --
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.max_streams - len(self._free)
+
+    def alloc(self) -> int | None:
+        """Claim a free slot (None when the pool is full)."""
+        return self._free.pop() if self._free else None
+
+    def free(self, slot: int) -> None:
+        assert 0 <= slot < self.max_streams and slot not in self._free, slot
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    # ------------------------------------------------------- device side --
+    def join(self, slot: int, k_new: jax.Array, v_new: jax.Array,
+             length: int) -> None:
+        """Scatter a session's [L, 1, S, KV, H] prefill into ``slot`` and
+        set its valid length.  Issued AFTER the current step's dispatch,
+        so data flow (the scatter consumes that step's output slabs)
+        orders it behind any stale in-flight write to this slot."""
+        assert length <= self.max_len, (length, self.max_len)
+        self.k, self.v = _scatter_prefill(self.k, self.v, k_new, v_new,
+                                          jnp.int32(slot))
+        self.lengths[slot] = length
+
+    def advance(self, slots) -> None:
+        """The fused step wrote one KV per listed slot: bump lengths."""
+        for s in slots:
+            self.lengths[s] += 1
+
+    def lengths_device(self) -> jax.Array:
+        """Snapshot the host lengths as the step's [max_streams] operand.
+
+        MUST copy: on CPU ``jnp.asarray(numpy)`` can alias the numpy
+        buffer zero-copy, and ``advance``/``free`` mutate ``lengths``
+        while the previous step is still in flight — the alias made the
+        step read torn lengths (observed as nondeterministically
+        duplicated tokens).  The copy freezes the snapshot.
+        """
+        return jnp.asarray(self.lengths.copy())

@@ -1,0 +1,440 @@
+"""Continuous-batching decode scheduler.
+
+The blocking ``LMDecoder.generate`` loop ran ONE prompt group to
+completion before touching the next — the WOL head (where the paper's
+LSS win lives) saw exactly one query batch per token step, and every new
+prompt paid the whole loop again.  The scheduler inverts that: sessions
+JOIN a slot in a fixed-shape KV pool after prefill and LEAVE on EOS or
+token budget, and every step runs ONE fused program over all
+``max_streams`` slots::
+
+    decode_step_pooled (per-row cache lengths)
+        -> Engine head (full | lss | lss-sharded, kernel-registry
+           dispatched)                                  [one jax.jit]
+        -> next-token feedback  (tokens stay ON DEVICE)
+
+Because the step shape never changes, the program compiles once per
+(head, pool) no matter how sessions come and go — the Engine caches it
+in the same jitted-step table as the score-path buckets (see
+``Engine.decode_logits``), so trace counts stay observable.
+
+Overlap: the scheduler is software-pipelined one step deep.  ``tick()``
+dispatches step k (async jax dispatch; the next-token output feeds the
+next step device-to-device, so the chain never waits on the host) and
+THEN materializes step k-1's tokens, resolves the per-token streams, and
+retires finished sessions.  The host-side gather/scatter for step k+1
+(joins, length bumps, stream resolution) thus runs while the device
+executes step k.  The one-step lag means a session discovered finished
+at step k-1 still occupied its row during step k — that wasted row is
+discarded, never emitted, and row-parallelism keeps it from perturbing
+live rows.
+
+Token-exactness: row i of the fused step computes exactly what a
+single-stream run computes at the same pool shape, so interleaved decode
+is bit-identical to sequential ``LMDecoder.generate`` calls on the same
+decoder (asserted in tests/test_decode_stream.py, full AND lss heads).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import threading
+import time
+from collections import deque
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.decode.kv_pool import KVCachePool
+from repro.serve.decode.sessions import DecodeSession, TokenStream
+from repro.serve.runtime.future import DeadlineExceededError
+
+__all__ = ["DecodeScheduler", "DecodeStats"]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len"))
+def _prefill_jit(params, prompt, cfg, max_len):
+    """Jitted prefill, shared across schedulers (cached per cfg + prompt
+    length).  Eager prefill measured ~500 ms/session on CPU for a tiny
+    2-layer model — pure op-dispatch overhead that would dwarf every
+    decode step; one compile per prompt length removes it."""
+    from repro.models import transformer as T
+    return T.prefill(params, prompt, cfg, max_len=max_len)
+
+
+@jax.jit
+def _set_tok(tok, slot, t):
+    return tok.at[slot].set(t)
+
+
+class DecodeStats(NamedTuple):
+    """Point-in-time snapshot of the scheduler's serving behaviour."""
+
+    n_sessions: int              # sessions handed to the scheduler
+    n_finished: int              # completed (eos | max_tokens)
+    n_shed_deadline: int         # shed while waiting for a slot
+    n_tokens: int                # tokens emitted across all streams
+    n_steps: int                 # fused decode steps dispatched
+    slot_occupancy: float        # mean active/max_streams per step
+    ttft_p50_ms: float           # submit -> first token (queue incl.)
+    ttft_p95_ms: float
+    ttft_p99_ms: float
+    itl_p50_ms: float            # inter-token gap
+    itl_p95_ms: float
+    itl_p99_ms: float
+    tokens_per_s: float          # n_tokens / (first submit -> last token)
+    wall_s: float
+
+
+class _Inflight(NamedTuple):
+    ho: object                   # HeadOutput of the dispatched step
+    snapshot: list               # [(slot, session)] active at dispatch
+    t0: float
+
+
+def _pcts(xs: list[float]) -> tuple[float, float, float]:
+    arr = np.asarray(xs, np.float64) * 1e3
+    if not arr.size:
+        return (math.nan,) * 3
+    p = np.percentile(arr, (50, 95, 99))
+    return float(p[0]), float(p[1]), float(p[2])
+
+
+class DecodeScheduler:
+    """Session-based streaming decode over one Engine head.
+
+    Args:
+      engine: the serving Engine; supplies the head (ranked through the
+        kernel registry) and caches the fused step + compile counts.
+      params, cfg: the LM whose ``decode_step_pooled`` feeds the head.
+      max_streams: pool slots == rows of the fused step (a compile
+        shape).
+      max_len: pool cache width; every session needs
+        ``len(prompt) + max_new_tokens <= max_len``.
+      head: head kind for ALL sessions of this scheduler (one fused
+        program serves one head; build one scheduler per head kind).
+
+    Threading: ``submit``/``add_session`` may be called from any thread;
+    ``tick``/``run`` must be driven by ONE thread at a time (the
+    AsyncRuntime's dispatcher, or the caller for standalone use).
+    """
+
+    def __init__(self, engine, params: dict, cfg, *, max_streams: int = 8,
+                 max_len: int = 256, head: str | None = None):
+        self.engine = engine
+        self.params = params
+        self.cfg = cfg
+        self.head = head or engine.default_head
+        self.pool = KVCachePool(cfg, max_streams, max_len)
+        self.max_streams = int(max_streams)
+        self.max_len = int(max_len)
+        self.tok = jnp.zeros((max_streams,), jnp.int32)
+        self.sessions: list[DecodeSession | None] = [None] * max_streams
+        self._pending: deque[DecodeSession] = deque()
+        self._inflight: _Inflight | None = None
+        # names the fused step's compile shape in the engine's jitted-step
+        # table; qualified by the model name so two schedulers over the
+        # SAME engine with different model configs cannot collide on one
+        # cached program
+        self._tag = f"decode[{max_streams}x{max_len}]@{cfg.name}"
+        self._lock = threading.Lock()
+        # serializes tick(): a blocking generate() may drive the same
+        # scheduler an AsyncRuntime dispatcher is ticking — two ticks
+        # interleaving would tear pool/slot state, one at a time is safe
+        self._tick_lock = threading.Lock()
+        self._next_sid = 0
+        # hook for the AsyncRuntime: called (session, reason) whenever a
+        # session reaches a terminal state, from the tick thread
+        self.on_session_done: Callable | None = None
+        # stats (guarded by _lock)
+        self._n_sessions = 0
+        self._n_finished = 0
+        self._n_shed_deadline = 0
+        self._n_tokens = 0
+        self._n_steps = 0
+        self._occupancy_sum = 0.0
+        self._ttft_s: list[float] = []
+        self._itl_s: list[float] = []
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+
+    # --------------------------------------------------------------- admit --
+    def make_session(self, prompt, max_new_tokens: int, *,
+                     eos_id: int | None = None,
+                     t_submit: float | None = None,
+                     deadline: float | None = None) -> DecodeSession:
+        """Build (and validate) a session WITHOUT enqueueing it — the
+        AsyncRuntime admits through its AdmissionQueue first.  Sessions
+        only enter this scheduler's stats on ``add_session`` (actual
+        admission), so runtime-refused sessions never skew the books."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1:
+            raise ValueError(f"prompt must be 1-D, got {prompt.shape}")
+        if prompt.shape[0] + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.shape[0]}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds the pool width {self.max_len}")
+        with self._lock:
+            sid = self._next_sid
+            self._next_sid += 1
+        return DecodeSession(sid, prompt, max_new_tokens, eos_id=eos_id,
+                             t_submit=t_submit, deadline=deadline)
+
+    def add_session(self, session: DecodeSession) -> None:
+        with self._lock:
+            self._n_sessions += 1
+            if self._t_first is None:
+                self._t_first = session.stream.t_submit
+            self._pending.append(session)
+
+    def submit(self, prompt, max_new_tokens: int, *,
+               eos_id: int | None = None,
+               deadline: float | None = None) -> TokenStream:
+        """Standalone entry point: validate, enqueue, return the stream.
+        (Through the AsyncRuntime use ``runtime.submit_decode`` instead —
+        it applies queue-depth admission control.)"""
+        s = self.make_session(prompt, max_new_tokens, eos_id=eos_id,
+                              deadline=deadline)
+        self.add_session(s)
+        return s.stream
+
+    # ---------------------------------------------------------------- state --
+    @property
+    def idle(self) -> bool:
+        with self._lock:
+            pending = bool(self._pending)
+        return (not pending and self._inflight is None
+                and self.pool.n_active == 0)
+
+    # ----------------------------------------------------------------- tick --
+    def tick(self) -> bool:
+        """One scheduler iteration: admit waiting sessions to free slots,
+        dispatch the next fused step, then resolve the PREVIOUS step's
+        tokens (the overlap).  Returns True while there is work.
+
+        Safe to drive from multiple threads (iterations serialize on an
+        internal lock) — e.g. a blocking ``generate()`` call while an
+        AsyncRuntime dispatcher owns the same scheduler.
+        """
+        with self._tick_lock:
+            self._admit()
+            prev, self._inflight = self._inflight, self._dispatch()
+            if prev is not None:
+                self._collect(prev)
+            return prev is not None or self._inflight is not None \
+                or not self.idle
+
+    def run(self, timeout: float | None = None,
+            until: Callable[[], bool] | None = None) -> None:
+        """Drive ``tick`` until every session has resolved — or, with
+        ``until``, until that predicate holds (so a caller waiting on its
+        OWN streams stops ticking once they finish instead of draining
+        sessions other producers still have in flight)."""
+        t_end = None if timeout is None else time.perf_counter() + timeout
+        while not self.idle and not (until is not None and until()):
+            self.tick()
+            if t_end is not None and time.perf_counter() > t_end:
+                raise TimeoutError(
+                    f"scheduler not drained within {timeout}s "
+                    f"({self.pool.n_active} active, "
+                    f"{len(self._pending)} pending)")
+        if until is not None and self.pool.n_active == 0:
+            # an early exit leaves the final (wasted) step in flight; if
+            # no other producer is active, nothing would ever collect it
+            # and the scheduler would read busy forever — one more tick
+            # drains it (dispatching nothing)
+            self.tick()
+
+    # ---------------------------------------------------------------- admit --
+    def _admit(self) -> None:
+        while self.pool.n_free:
+            with self._lock:
+                if not self._pending:
+                    return
+                sess = self._pending.popleft()
+            now = time.perf_counter()
+            if (sess.stream.deadline is not None
+                    and now > sess.stream.deadline):
+                # never executed: the slot-join analogue of the rank
+                # path's shed-at-dispatch
+                sess.finished = True
+                sess.stream.fail(DeadlineExceededError(
+                    f"decode session {sess.sid} exceeded its deadline by "
+                    f"{(now - sess.stream.deadline) * 1e3:.1f} ms waiting "
+                    f"for a slot"))
+                self._done(sess, "shed_deadline")
+                continue
+            slot = self.pool.alloc()
+            # prefill at the session's own prompt length (one compile per
+            # length, shared by every scheduler over this cfg)
+            prompt = jnp.asarray(sess.prompt)[None, :]
+            hidden, cache = _prefill_jit(self.params, prompt, self.cfg,
+                                         prompt.shape[1])
+            self.pool.join(slot, cache.k, cache.v, prompt.shape[1])
+            # first token: the prefill's last hidden state through the
+            # same bucket-1 head step the blocking loop uses
+            ho = self.engine.rank(hidden[:, -1].astype(jnp.float32),
+                                  head=self.head, record=False)
+            tok0 = max(int(np.asarray(ho.ids)[0, 0]), 0)
+            self.tok = _set_tok(self.tok, jnp.int32(slot),
+                                jnp.int32(tok0))
+            sess.slot = slot
+            self.sessions[slot] = sess
+            self._emit(sess, tok0, time.perf_counter())
+
+    # -------------------------------------------------------------- dispatch --
+    @functools.cached_property
+    def _body(self):
+        """The model half of the fused step.  Deliberately closes over
+        ONLY ``cfg`` — the engine caches the jitted step whose closure
+        holds this body, and capturing ``self`` would pin the whole
+        scheduler (and its KV-pool slabs) in the engine's step table
+        past this scheduler's lifetime."""
+        cfg = self.cfg
+
+        def body(params, tok, k, v, lengths):
+            from repro.models import transformer as T
+            return T.decode_step_pooled(params, tok, k, v, lengths, cfg)
+
+        return body
+
+    def _dispatch(self) -> _Inflight | None:
+        active = [i for i, s in enumerate(self.sessions) if s is not None]
+        if not active:
+            return None
+        step = self.engine.decode_logits(self.head, self._tag, self._body)
+        t0 = time.perf_counter()
+        tok_next, ho, k_new, v_new = step(
+            self.params, self.tok, self.pool.k, self.pool.v,
+            self.pool.lengths_device())
+        self.tok = tok_next                      # device-to-device feedback
+        self.pool.k, self.pool.v = k_new, v_new
+        self.pool.advance(active)
+        with self._lock:
+            self._n_steps += 1
+            self._occupancy_sum += len(active) / self.max_streams
+        return _Inflight(ho, [(i, self.sessions[i]) for i in active], t0)
+
+    # --------------------------------------------------------------- collect --
+    def _collect(self, item: _Inflight) -> None:
+        ids = np.asarray(item.ho.ids)            # blocks until step done
+        t1 = time.perf_counter()
+        for slot, sess in item.snapshot:
+            if sess.finished:                    # retired after dispatch:
+                continue                         # a wasted row, not a token
+            self._emit(sess, max(int(ids[slot, 0]), 0), t1)
+
+    def _emit(self, sess: DecodeSession, tok: int, t: float) -> None:
+        sess.stream.append(tok, t)
+        sess.n_emitted += 1
+        with self._lock:
+            self._n_tokens += 1
+            self._t_last = t
+        if sess.eos_id is not None and tok == sess.eos_id:
+            self._finish(sess, "eos")
+        elif sess.n_emitted >= sess.max_new_tokens:
+            self._finish(sess, "max_tokens")
+
+    def _finish(self, sess: DecodeSession, reason: str) -> None:
+        sess.finished = True
+        sess.stream.finish(reason)
+        if sess.slot is not None:
+            self.sessions[sess.slot] = None
+            self.pool.free(sess.slot)
+        with self._lock:
+            ttft = sess.stream.ttft_s()
+            if ttft is not None:
+                self._ttft_s.append(ttft)
+            self._itl_s.extend(sess.stream.inter_token_s().tolist())
+        self._done(sess, reason)
+
+    def _done(self, sess: DecodeSession, reason: str) -> None:
+        with self._lock:
+            if reason == "shed_deadline":
+                self._n_shed_deadline += 1
+            else:
+                self._n_finished += 1
+        cb = self.on_session_done
+        if cb is not None:
+            cb(sess, reason)
+
+    def fail_pending(self, exc: BaseException, *,
+                     only: Callable | None = None) -> list[DecodeSession]:
+        """Fail not-yet-joined sessions (runtime shutdown path).  With
+        ``only``, fail just the sessions that predicate selects — a
+        closing runtime must not kill sessions OTHER producers (e.g. a
+        concurrent blocking generate()) still have queued."""
+        with self._lock:
+            if only is None:
+                left, self._pending = list(self._pending), deque()
+            else:
+                left = [s for s in self._pending if only(s)]
+                self._pending = deque(s for s in self._pending
+                                      if not only(s))
+        for sess in left:
+            sess.finished = True
+            sess.stream.fail(exc)
+        return left
+
+    def fail_all(self, exc: BaseException, *,
+                 only: Callable | None = None) -> list[DecodeSession]:
+        """Fail pending AND in-flight sessions (a ticker died and will
+        never resolve them).  ``only`` scopes the kill to one producer's
+        sessions; any surviving producer's own run() loop keeps ticking
+        the rest, so the in-flight step is dropped only on a full
+        (unfiltered) teardown."""
+        failed = self.fail_pending(exc, only=only)
+        with self._tick_lock:                  # a generate() may be mid-tick
+            if only is None:
+                self._inflight = None
+            for slot, sess in enumerate(self.sessions):
+                if sess is not None and (only is None or only(sess)):
+                    sess.finished = True
+                    sess.stream.fail(exc)
+                    self.sessions[slot] = None
+                    self.pool.free(slot)
+                    failed.append(sess)
+        return failed
+
+    # ----------------------------------------------------------------- stats --
+    def reset_stats(self) -> None:
+        """Start a fresh stats window (counters, percentiles, and the
+        wall-clock span all restart; in-flight sessions keep running).
+        Call between measured segments — warmup traffic otherwise
+        stretches ``wall_s`` and poisons ``tokens_per_s``."""
+        with self._lock:
+            self._n_sessions = 0
+            self._n_finished = 0
+            self._n_shed_deadline = 0
+            self._n_tokens = 0
+            self._n_steps = 0
+            self._occupancy_sum = 0.0
+            self._ttft_s = []
+            self._itl_s = []
+            self._t_first = None
+            self._t_last = None
+
+    def stats(self) -> DecodeStats:
+        with self._lock:
+            ttft = _pcts(self._ttft_s)
+            itl = _pcts(self._itl_s)
+            wall = ((self._t_last - self._t_first)
+                    if self._t_first is not None and self._t_last is not None
+                    else 0.0)
+            return DecodeStats(
+                n_sessions=self._n_sessions,
+                n_finished=self._n_finished,
+                n_shed_deadline=self._n_shed_deadline,
+                n_tokens=self._n_tokens,
+                n_steps=self._n_steps,
+                slot_occupancy=(self._occupancy_sum / self._n_steps
+                                if self._n_steps else 0.0),
+                ttft_p50_ms=ttft[0], ttft_p95_ms=ttft[1],
+                ttft_p99_ms=ttft[2],
+                itl_p50_ms=itl[0], itl_p95_ms=itl[1], itl_p99_ms=itl[2],
+                tokens_per_s=(self._n_tokens / wall if wall > 0 else 0.0),
+                wall_s=wall,
+            )

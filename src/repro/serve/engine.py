@@ -131,8 +131,10 @@ class Engine:
         self._w_aug_cache: jax.Array | None = None
         self._sharded = None          # (index_stack, w_stack, m_local)
         self._heads: dict[str, Callable] = {}
-        self._steps: dict[tuple[str, int], Callable] = {}
-        self.compile_counts: dict[tuple[str, int], int] = {}
+        # jitted steps: (head, bucket) score steps and (head, "decode[...]")
+        # fused decode steps share one cache + compile-count table
+        self._steps: dict[tuple[str, Any], Callable] = {}
+        self.compile_counts: dict[tuple[str, Any], int] = {}
         self._queue: list[_Pending] = []
         self._results: list[RankResult] = []
         self._next_rid = 0
@@ -244,6 +246,43 @@ class Engine:
                         self.compile_counts.get(key, 0) + 1
                     q = embed(x) if embed is not None else x
                     return head(q)
+
+                self._steps[key] = jax.jit(raw_step)
+            return self._steps[key]
+
+    def decode_logits(self, kind: str, tag: str, body: Callable) -> Callable:
+        """The batched decode head entry: one fused jitted program per
+        (head kind, ``tag``) running ``body`` (the model's pooled decode
+        step) straight into this engine's head — registry-dispatched for
+        the LSS kinds, so the WOL ranking inside the token loop is the
+        same kernel path the score buckets use.
+
+        ``body(params, tok, k, v, lengths) -> (hidden [B, d], k_new,
+        v_new)``; the returned step maps the same signature to
+        ``(tok_next [B] int32, HeadOutput, k_new, v_new)`` with the
+        next-token feedback computed IN-program, so a decode loop can
+        chain steps device-to-device without a host round trip.  ``tag``
+        names the compile shape (the scheduler uses "decode[SxW]") and
+        keys the shared jitted-step cache — compile counts land in
+        ``compile_counts[(kind, tag)]`` next to the score buckets, and a
+        refit (``_set_index``) invalidates LSS decode steps exactly like
+        LSS score steps.
+        """
+        key = (kind, tag)
+        step = self._steps.get(key)       # lock-free hot path, like _step
+        if step is not None:
+            return step
+        with self.lock:
+            if key not in self._steps:
+                head = self._head(kind)
+
+                def raw_step(params, tok, k, v, lengths):
+                    self.compile_counts[key] = \
+                        self.compile_counts.get(key, 0) + 1
+                    hidden, k_new, v_new = body(params, tok, k, v, lengths)
+                    ho = head(hidden.astype(jnp.float32))
+                    tok_next = jnp.maximum(ho.ids[:, 0], 0).astype(jnp.int32)
+                    return tok_next, ho, k_new, v_new
 
                 self._steps[key] = jax.jit(raw_step)
             return self._steps[key]
@@ -453,16 +492,35 @@ class WOLServer:
 
 
 class LMDecoder:
-    """KV-cache decode loop; the per-token head is the Engine's."""
+    """Session-based LM decode; the per-token head is the Engine's.
+
+    Since the streaming-decode refactor this is a thin facade over a
+    :class:`repro.serve.decode.DecodeScheduler`: ``generate`` submits one
+    session per prompt row into a fixed-slot scheduler and blocks for the
+    streams, so the blocking API and the AsyncRuntime's streaming path
+    run the SAME fused ``decode_step_pooled -> head`` program — one
+    compile per (head, pool shape) across all ``generate`` calls and all
+    sessions, and blocking results are bit-identical to interleaved ones.
+
+    ``max_streams`` fixes the slot count (the fused step's row shape);
+    ``max_len`` fixes the pool cache width.  Both are compile shapes AND
+    numeric shapes (XLA reductions differ across shapes at the ulp
+    level), so pin them when comparing runs.  ``max_len=None`` sizes the
+    pool lazily from the first ``generate`` call (growing later
+    recompiles).
+    """
 
     def __init__(self, params: dict, cfg, lss_cfg: LSSConfig | None = None,
-                 impl: str | None = None):
+                 impl: str | None = None, *, max_streams: int = 8,
+                 max_len: int | None = None):
         from repro.models import transformer as T
         self.T = T
         self.params = params
         self.cfg = cfg
         self.lss_cfg = lss_cfg
-        self._decode = jax.jit(T.decode_step, static_argnames="cfg")
+        self.max_streams = max_streams
+        self._max_len = max_len
+        self._scheds: dict[str, Any] = {}
         self.engine = Engine(None, self.head_weights().astype(jnp.float32),
                              None, lss_cfg or LSSConfig(), top_k=1,
                              head="full", impl=impl)
@@ -486,22 +544,60 @@ class LMDecoder:
         labels = calib_tokens[:, 1:].reshape(-1, 1)
         return self.engine.fit_from_queries(key, q, labels, verbose=verbose)
 
+    def scheduler(self, head: str | None = None, min_len: int | None = None):
+        """The per-head-kind DecodeScheduler (built lazily, reused across
+        ``generate`` calls and by the AsyncRuntime's decode path).
+
+        A ``min_len`` beyond the current pool width rebuilds the
+        scheduler (a new compile shape) ONLY when the old one is idle
+        and unattached; a scheduler an AsyncRuntime owns (or one with
+        sessions in flight) must not be silently swapped out from under
+        it — that raises instead, so callers size ``max_len`` up front.
+        """
+        from repro.serve.decode import DecodeScheduler
+        kind = head or self.engine.default_head
+        if kind != "full":
+            assert self.engine.index is not None, "fit_lss() first"
+        need = max(min_len or 0, self._max_len or 0)
+        sched = self._scheds.get(kind)
+        if sched is not None and sched.max_len >= need:
+            return sched
+        if sched is not None:
+            if sched.on_session_done is not None or not sched.idle:
+                raise ValueError(
+                    f"head {kind!r} scheduler has pool width "
+                    f"{sched.max_len} < required {need} but is busy or "
+                    f"runtime-attached; construct the LMDecoder with "
+                    f"max_len >= {need} instead of growing it mid-flight")
+            # outgrown and safely replaceable: drop its fused step from
+            # the engine's cache so the old program (and its trace
+            # closure) cannot be pinned or collide with the new shape
+            with self.engine.lock:
+                self.engine._steps.pop((kind, sched._tag), None)
+        self._max_len = (max(need, 64) if self._max_len is None
+                         else max(self._max_len, need))
+        sched = DecodeScheduler(self.engine, self.params, self.cfg,
+                                max_streams=self.max_streams,
+                                max_len=self._max_len, head=kind)
+        self._scheds[kind] = sched
+        return sched
+
     def generate(self, prompt: jax.Array, steps: int, use_lss: bool = False,
                  head: str | None = None) -> jax.Array:
         """Greedy decode.  prompt [B, S] -> tokens [B, steps].
 
-        ``head`` overrides the full/LSS switch (e.g. "lss-sharded")."""
+        ``head`` overrides the full/LSS switch (e.g. "lss-sharded").
+        Rows run as sessions through the slot pool: ``B > max_streams``
+        decodes in waves of ``max_streams`` (construct the decoder with
+        ``max_streams >= B`` for full batch parallelism).  Safe while an
+        AsyncRuntime serves the same scheduler — ticks serialize, and
+        this call returns once ITS streams finish, leaving other
+        producers' sessions in flight."""
         kind = head or ("lss" if use_lss else "full")
-        if kind != "full":
-            assert self.engine.index is not None, "fit_lss() first"
-        hidden, cache = self.T.prefill(self.params, prompt, self.cfg,
-                                       max_len=prompt.shape[1] + steps)
-        outs = []
-        h = hidden[:, -1]
-        for _ in range(steps):
-            ho = self.engine.rank(h.astype(jnp.float32), head=kind,
-                                  record=False)
-            tok = jnp.maximum(ho.ids[:, 0], 0)
-            outs.append(tok)
-            h, cache = self._decode(self.params, tok, cache, self.cfg)
-        return jnp.stack(outs, 1)
+        sched = self.scheduler(head=kind,
+                               min_len=prompt.shape[1] + steps)
+        rows = np.asarray(prompt, np.int32)
+        streams = [sched.submit(rows[i], max_new_tokens=steps)
+                   for i in range(rows.shape[0])]
+        sched.run(until=lambda: all(s.done() for s in streams))
+        return jnp.stack([jnp.asarray(s.result()) for s in streams], 0)

@@ -1,10 +1,13 @@
 """Async serving runtime: admission queue + futures + overlapped
 host/device pipeline over a (thread-safe) :class:`~repro.serve.Engine`.
 
-  * ``future``  — :class:`RankFuture` and the shed-exception hierarchy.
-  * ``queue``   — :class:`AdmissionQueue` (bounded, block | shed).
+  * ``future``  — :class:`RankFuture` and the shed-exception hierarchy
+    (shared with decode's :class:`~repro.serve.decode.TokenStream`).
+  * ``queue``   — :class:`AdmissionQueue` (bounded, block | shed; admits
+    both scoring requests and decode sessions).
   * ``runtime`` — :class:`AsyncRuntime` (dispatcher + completion threads,
-    deadline shedding, drain/close, :class:`RuntimeStats`).
+    deadline shedding, drain/close, :class:`RuntimeStats`; with a
+    ``DecodeScheduler`` attached, ``submit_decode`` streams tokens).
 """
 
 from repro.serve.runtime.future import (DeadlineExceededError, QueueFullError,
@@ -12,11 +15,13 @@ from repro.serve.runtime.future import (DeadlineExceededError, QueueFullError,
                                         ShedError)
 from repro.serve.runtime.queue import POLICIES, AdmissionQueue
 from repro.serve.runtime.runtime import (AsyncRuntime, RuntimeStats,
+                                         submit_decode_open_loop,
                                          submit_open_loop)
 
 __all__ = [
     "AsyncRuntime", "RuntimeStats", "RankFuture",
     "AdmissionQueue", "POLICIES", "submit_open_loop",
+    "submit_decode_open_loop",
     "ShedError", "QueueFullError", "DeadlineExceededError",
     "RuntimeClosedError",
 ]

@@ -1,0 +1,312 @@
+"""Continuous-batching streaming decode: TokenStream semantics, the
+slot-based KV pool, token-exactness of interleaved vs blocking decode
+(full AND lss heads, sessions joining/leaving mid-flight), single-compile
+regression via the kernel-registry dispatch log, and the AsyncRuntime
+decode request kind (admission control, deadlines, mixed traffic)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lss import LSSConfig
+from repro.data.synthetic import lm_dataset
+from repro.kernels import registry
+from repro.models import transformer as T
+from repro.serve import (AsyncRuntime, DeadlineExceededError, KVCachePool,
+                         LMDecoder, QueueFullError, RuntimeClosedError,
+                         TokenStream)
+
+VOCAB = 512
+PROMPT_LEN = 6
+MAX_LEN = 24          # prompt + the longest max_new_tokens any test uses
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = T.TransformerConfig(name="t", n_layers=2, d_model=32, n_heads=2,
+                              n_kv_heads=2, head_dim=16, d_ff=64,
+                              vocab=VOCAB, dtype=jnp.float32, kv_chunk=32)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = np.asarray(lm_dataset(0, 64 * 33, VOCAB, 33))
+    return params, cfg, toks
+
+
+@pytest.fixture(scope="module")
+def decoder(lm):
+    """One decoder (and thus ONE fused step per head) shared by the whole
+    module — itself an implicit single-compile regression."""
+    params, cfg, toks = lm
+    dec = LMDecoder(params, cfg, LSSConfig(k_bits=4, n_tables=2),
+                    max_streams=3, max_len=MAX_LEN)
+    dec.engine.fit_random(jax.random.PRNGKey(1))
+    return dec
+
+
+# ------------------------------------------------------------ TokenStream --
+
+def test_token_stream_append_get_iter_result():
+    st = TokenStream(0)
+    st.append(5), st.append(7)
+    assert len(st) == 2 and st.get(0) == 5 and st.get(1) == 7
+    assert not st.done()
+    st.append(9)
+    st.finish("max_tokens")
+    assert st.done() and st.finish_reason == "max_tokens"
+    assert list(st) == [5, 7, 9]
+    np.testing.assert_array_equal(st.result(), [5, 7, 9])
+    assert st.exception() is None
+    with pytest.raises(IndexError):
+        st.get(3)
+
+
+def test_token_stream_fail_reraises_after_tokens():
+    st = TokenStream(1)
+    st.append(3)
+    st.fail(RuntimeError("boom"))
+    assert st.finish_reason == "error"
+    assert isinstance(st.exception(), RuntimeError)
+    it = iter(st)
+    assert next(it) == 3
+    with pytest.raises(RuntimeError):
+        next(it)
+    with pytest.raises(RuntimeError):
+        st.result()
+
+
+def test_token_stream_timeouts_and_timing():
+    st = TokenStream(2, t_submit=time.perf_counter())
+    with pytest.raises(TimeoutError):
+        st.get(0, timeout=0.01)
+    with pytest.raises(TimeoutError):
+        st.result(timeout=0.01)
+    assert st.ttft_s() is None
+    st.append(1)
+    assert st.ttft_s() >= 0
+    st.append(2)
+    assert st.inter_token_s().shape == (1,)
+
+
+# -------------------------------------------------------------- KV pool --
+
+def test_kv_pool_alloc_free_and_validation(lm):
+    _, cfg, _ = lm
+    pool = KVCachePool(cfg, max_streams=2, max_len=8)
+    assert pool.k.shape == (cfg.n_layers, 2, 8, cfg.n_kv_heads,
+                            cfg.head_dim)
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {0, 1} and pool.alloc() is None
+    assert pool.n_active == 2 and pool.n_free == 0
+    pool.lengths[a] = 5
+    pool.free(a)
+    assert pool.lengths[a] == 0 and pool.n_free == 1
+    assert pool.alloc() == a
+    with pytest.raises(ValueError):
+        KVCachePool(cfg, max_streams=0, max_len=8)
+
+
+# --------------------------------------------- interleaved == blocking --
+
+@pytest.mark.parametrize("head", ["full", "lss"])
+def test_interleaved_exact_vs_sequential_generate(decoder, lm, head):
+    """N greedy sessions with STAGGERED lengths through the scheduler —
+    sessions leave as their budgets run out and queued sessions join the
+    freed slots mid-flight (5 sessions, 3 slots) — must produce
+    bit-identical tokens to one-at-a-time blocking generate calls."""
+    _, _, toks = lm
+    budgets = [3, 6, 9, 4, 12]
+    seq = [np.asarray(decoder.generate(
+        jnp.asarray(toks[i:i + 1, :PROMPT_LEN]), steps=budgets[i],
+        head=head))[0] for i in range(5)]
+
+    sched = decoder.scheduler(head=head)
+    streams = [sched.submit(toks[i, :PROMPT_LEN], max_new_tokens=budgets[i])
+               for i in range(5)]
+    sched.run(timeout=120.0)
+    for i, st in enumerate(streams):
+        assert st.finish_reason == "max_tokens"
+        np.testing.assert_array_equal(st.result(), seq[i],
+                                      err_msg=f"session {i} head {head}")
+    # the fused step shape never changed: exactly one trace, ever
+    assert decoder.engine.compile_counts[(head, "decode[3x24]@t")] == 1
+
+
+def test_eos_stops_stream_early_and_frees_slot(decoder, lm):
+    """Pick an eos that demonstrably occurs mid-sequence, re-run with it
+    set: the stream must stop AT the eos token, report reason 'eos', and
+    the freed slot must be reusable (a queued session completes)."""
+    _, _, toks = lm
+    ref = np.asarray(decoder.generate(
+        jnp.asarray(toks[7:8, :PROMPT_LEN]), steps=10, head="full"))[0]
+    eos = int(ref[4])
+    cut = int(np.argmax(ref == eos)) + 1     # first occurrence, inclusive
+    sched = decoder.scheduler(head="full")
+    # fill all 3 slots + 1 queued: the eos'd session's slot must free
+    streams = [sched.submit(toks[7, :PROMPT_LEN], max_new_tokens=10,
+                            eos_id=eos)]
+    streams += [sched.submit(toks[20 + i, :PROMPT_LEN], max_new_tokens=4)
+                for i in range(3)]
+    sched.run(timeout=120.0)
+    assert streams[0].finish_reason == "eos"
+    np.testing.assert_array_equal(streams[0].result(), ref[:cut])
+    for st in streams[1:]:
+        assert st.finish_reason == "max_tokens" and len(st) == 4
+    assert sched.pool.n_free == sched.max_streams
+
+
+# -------------------------------------------- single-compile regression --
+
+def test_one_compiled_decode_step_across_sessions_and_generate_calls(lm):
+    """The scheduler and every generate() call must share ONE compiled
+    fused decode step per head: after warmup, neither new sessions nor
+    new generate() calls may re-trace — asserted through the kernel
+    registry's trace-time dispatch log (the lss head's ops only record
+    on compilation) AND the engine's compile counters."""
+    params, cfg, toks = lm
+    dec = LMDecoder(params, cfg, LSSConfig(k_bits=4, n_tables=2),
+                    max_streams=2, max_len=16)
+    dec.engine.fit_random(jax.random.PRNGKey(3))
+    dec.generate(jnp.asarray(toks[:1, :PROMPT_LEN]), steps=3,
+                 head="lss")                         # warmup: traces land
+    warm_counts = registry.dispatch_counts()
+    assert any(op == "lss_topk" for op, _ in warm_counts)
+
+    for i in range(3):                               # more generate calls
+        dec.generate(jnp.asarray(toks[i:i + 1, :PROMPT_LEN]), steps=4,
+                     head="lss")
+    sched = dec.scheduler(head="lss")                # + interleaved load
+    streams = [sched.submit(toks[i, :PROMPT_LEN], max_new_tokens=3 + i)
+               for i in range(5)]
+    sched.run(timeout=120.0)
+    assert all(st.finish_reason == "max_tokens" for st in streams)
+
+    assert registry.dispatch_counts() == warm_counts, \
+        "head ops re-traced after warmup"
+    decode_keys = [k for k in dec.engine.compile_counts
+                   if isinstance(k[1], str) and k[1].startswith("decode")]
+    assert decode_keys == [("lss", "decode[2x16]@t")]
+    assert all(v == 1 for v in dec.engine.compile_counts.values()), \
+        dec.engine.compile_counts
+
+
+# ------------------------------------------------- runtime integration --
+
+def test_runtime_decode_matches_blocking_and_streams_tokens(decoder, lm):
+    _, _, toks = lm
+    budgets = [4, 7, 5, 8]
+    seq = [np.asarray(decoder.generate(
+        jnp.asarray(toks[i:i + 1, :PROMPT_LEN]), steps=budgets[i],
+        head="lss"))[0] for i in range(4)]
+    sched = decoder.scheduler(head="lss")
+    sched.reset_stats()
+    with AsyncRuntime(decoder.engine, head="lss", scheduler=sched) as rt:
+        streams = [rt.submit_decode(toks[i, :PROMPT_LEN],
+                                    max_new_tokens=budgets[i])
+                   for i in range(4)]
+        # mixed traffic: rank requests on the same engine while decoding
+        futs = [rt.submit(np.zeros(32, np.float32)) for _ in range(3)]
+        first = list(streams[0])                   # live iteration
+        rt.drain(timeout=120.0)
+        s = rt.stats()
+    assert first == list(seq[0])
+    for i, st in enumerate(streams):
+        np.testing.assert_array_equal(st.result(), seq[i])
+    assert all(f.exception() is None for f in futs)
+    assert s.n_decode_sessions == s.n_decode_done == 4
+    assert s.n_decode_tokens == sum(budgets)
+    assert s.ttft_p50_ms > 0 and s.itl_p50_ms >= 0
+    assert s.ttft_p50_ms <= s.ttft_p95_ms <= s.ttft_p99_ms
+    assert 0 < s.decode_slot_occupancy <= 1.0
+    assert s.decode_tokens_per_s > 0
+    assert s.n_completed == 3                      # the rank side
+
+
+def test_generate_while_runtime_serves_same_scheduler(decoder, lm):
+    """A blocking generate() racing an AsyncRuntime that owns the same
+    scheduler must stay token-exact (ticks serialize) and must not
+    perturb the runtime's session accounting (drain would otherwise
+    return early)."""
+    _, _, toks = lm
+    ref_rt = np.asarray(decoder.generate(
+        jnp.asarray(toks[0:1, :PROMPT_LEN]), steps=10, head="full"))[0]
+    ref_gen = np.asarray(decoder.generate(
+        jnp.asarray(toks[1:2, :PROMPT_LEN]), steps=6, head="full"))[0]
+    sched = decoder.scheduler(head="full")
+    with AsyncRuntime(decoder.engine, scheduler=sched) as rt:
+        st = rt.submit_decode(toks[0, :PROMPT_LEN], max_new_tokens=10)
+        out = decoder.generate(jnp.asarray(toks[1:2, :PROMPT_LEN]),
+                               steps=6, head="full")   # concurrent ticks
+        rt.drain(timeout=120.0)
+        s = rt.stats()
+    np.testing.assert_array_equal(st.result(), ref_rt)
+    np.testing.assert_array_equal(np.asarray(out)[0], ref_gen)
+    assert s.n_decode_sessions == s.n_decode_done == 1
+
+
+def test_runtime_decode_deadline_shed(decoder, lm):
+    _, _, toks = lm
+    sched = decoder.scheduler(head="full")
+    rt = AsyncRuntime(decoder.engine, scheduler=sched, start=False)
+    late = rt.submit_decode(toks[0, :PROMPT_LEN], max_new_tokens=4,
+                            deadline_s=0.01)
+    ok = rt.submit_decode(toks[1, :PROMPT_LEN], max_new_tokens=4)
+    time.sleep(0.05)                               # 'late' is now late
+    rt.start()
+    rt.drain(timeout=120.0)
+    s = rt.stats()
+    rt.close()
+    with pytest.raises(DeadlineExceededError):
+        late.result(timeout=5.0)
+    assert len(ok.result(timeout=5.0)) == 4
+    assert s.n_shed_deadline == 1 and s.n_decode_done == 2
+
+
+def test_runtime_decode_queue_capacity_shed(decoder, lm):
+    _, _, toks = lm
+    sched = decoder.scheduler(head="full")
+    rt = AsyncRuntime(decoder.engine, scheduler=sched, max_queue=2,
+                      policy="shed", start=False)
+    streams = [rt.submit_decode(toks[i, :PROMPT_LEN], max_new_tokens=3)
+               for i in range(5)]
+    shed = [st for st in streams if st.done()]
+    assert len(shed) == 3                          # queue bound of 2 held
+    for st in shed:
+        with pytest.raises(QueueFullError):
+            st.result()
+    assert rt.stats().n_shed_queue == 3
+    rt.start()
+    rt.drain(timeout=120.0)
+    s = rt.stats()
+    assert s.n_decode_sessions == 5 and s.n_decode_done == 2
+    assert sum(st.finish_reason == "max_tokens" for st in streams) == 2
+    rt.close()
+
+
+def test_runtime_close_fails_pending_decode(decoder, lm):
+    _, _, toks = lm
+    sched = decoder.scheduler(head="full")
+    rt = AsyncRuntime(decoder.engine, scheduler=sched, start=False)
+    st = rt.submit_decode(toks[0, :PROMPT_LEN], max_new_tokens=4)
+    rt.close()
+    with pytest.raises(RuntimeClosedError):
+        st.result(timeout=5.0)
+    with pytest.raises(RuntimeClosedError):
+        rt.submit_decode(toks[1, :PROMPT_LEN], max_new_tokens=4) \
+          .result(timeout=5.0)
+
+
+def test_session_validation(decoder, lm):
+    _, _, toks = lm
+    sched = decoder.scheduler(head="full")
+    with pytest.raises(ValueError):                # exceeds pool width
+        sched.submit(toks[0, :PROMPT_LEN], max_new_tokens=MAX_LEN)
+    with pytest.raises(ValueError):                # 2-D prompt
+        sched.submit(toks[:2, :PROMPT_LEN], max_new_tokens=2)
+    with pytest.raises(ValueError):                # empty budget
+        sched.submit(toks[0, :PROMPT_LEN], max_new_tokens=0)
+    rt = AsyncRuntime(decoder.engine, start=False)  # no scheduler attached
+    with pytest.raises(RuntimeError):
+        rt.submit_decode(toks[0, :PROMPT_LEN], max_new_tokens=2)
+    rt.close()

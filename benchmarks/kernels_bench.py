@@ -1,0 +1,165 @@
+"""C-sweep microbench for the ``lss_topk`` ref path's dedup strategies.
+
+Times the FULL fused-op ref path (hash -> slab gather -> dedup -> top-k)
+per dedup strategy across candidate counts C = L*P, so the quadratic /
+bitonic comparison reflects end-to-end us/query, not an isolated mask.
+Records the measured crossover (the smallest swept C where bitonic wins)
+— that number is what ``REPRO_LSS_DEDUP_AUTO_C`` /
+``kernels.lss_topk.dedup.set_dedup_auto_threshold`` should be fed, so
+the registry's auto-switch is data-derived rather than guessed.
+
+Doubles as the CI smoke guard: ``--guard-c 512 --guard-ratio 1.5`` fails
+the run when bitonic regresses past 1.5x quadratic at C = 512, so the
+sorting network can never quietly pessimize the small-C regime the
+quadratic mask owns.
+
+    python -m benchmarks.kernels_bench --cs 512,2048,8192 \
+        --guard-c 512 --guard-ratio 1.5
+
+Writes ``BENCH_kernels.json`` (also embedded by ``benchmarks.run``'s
+kernels section).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+DEDUPS = ("quadratic", "bitonic")
+
+
+def build_case(c: int, d: int = 64, n_tables: int = 2, k_bits: int = 2,
+               seed: int = 0):
+    """Synthetic bucket-major index with C = L*P candidates per query and
+    a heavy cross-table duplicate rate (ids drawn from a pool of C/2)."""
+    assert c % n_tables == 0, (c, n_tables)
+    cap = c // n_tables
+    n_buckets = 2 ** k_bits
+    kt, kw, kq = jax.random.split(jax.random.PRNGKey(seed), 3)
+    table_ids = jax.random.randint(
+        kt, (n_tables, n_buckets, cap), -1, max(c // 2, 2), jnp.int32)
+    w_bucketed = jax.random.normal(kw, (n_tables, n_buckets, cap, d),
+                                   jnp.float32)
+    theta = jax.random.normal(kq, (d, k_bits * n_tables), jnp.float32)
+    return theta, table_ids, w_bucketed
+
+
+def bench_dedup_sweep(cs=(512, 2048, 8192), b: int = 8, d: int = 64,
+                      top_k: int = 5, seed: int = 0, repeats: int = 3
+                      ) -> dict:
+    """Time the ref path per (C, dedup).  Returns
+    ``{"rows": [...], "crossover_c": int | None}``.
+
+    Each point is the BEST of ``repeats`` timed windows — shared CI
+    runners get descheduled mid-loop, and the min is the standard
+    noise-robust microbenchmark statistic (the guard gates CI on these
+    numbers, so one scheduling hiccup must not fail the build)."""
+    from repro.kernels.lss_topk.ops import lss_topk
+
+    rows = []
+    by_c: dict[int, dict[str, float]] = {}
+    q = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, d), jnp.float32)
+    for c in cs:
+        theta, table_ids, w_bucketed = build_case(c, d=d, seed=seed)
+        # fewer timed iters at large C: the quadratic [B, C, C] compare
+        # is exactly the thing being measured as it blows up
+        iters = max(2, min(10, (1 << 21) // (c * b)))
+        by_c[c] = {}
+        for dd in DEDUPS:
+            f = jax.jit(functools.partial(lss_topk, top_k=top_k, impl="ref",
+                                          dedup=dd))
+            jax.block_until_ready(f(q, theta, table_ids, w_bucketed))
+            us = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    jax.block_until_ready(f(q, theta, table_ids, w_bucketed))
+                us = min(us, (time.perf_counter() - t0) / iters / b * 1e6)
+            by_c[c][dd] = us
+            rows.append({"kernel": "lss_topk", "impl": "ref", "dedup": dd,
+                         "c": c, "us_per_query": round(us, 3),
+                         "shape": f"B{b}_d{d}_C{c}",
+                         "iters": iters, "repeats": repeats})
+    crossover = next((c for c in sorted(by_c)
+                      if by_c[c]["bitonic"] < by_c[c]["quadratic"]), None)
+    return {"rows": rows, "crossover_c": crossover}
+
+
+def check_guard(rec: dict, guard_c: int, guard_ratio: float) -> str | None:
+    """None if ok, else a failure message: bitonic must stay within
+    ``guard_ratio`` x quadratic at the small-C guard point."""
+    us = {(r["c"], r["dedup"]): r["us_per_query"] for r in rec["rows"]}
+    quad, bit = us.get((guard_c, "quadratic")), us.get((guard_c, "bitonic"))
+    if quad is None or bit is None:
+        return f"guard C={guard_c} not in sweep"
+    if bit > guard_ratio * quad:
+        return (f"bitonic regresses the small-C regime: {bit:.1f} us/q vs "
+                f"quadratic {quad:.1f} at C={guard_c} "
+                f"(> {guard_ratio}x)")
+    return None
+
+
+def write_artifact(rec: dict, path: str | None = None) -> str:
+    """Write (or MERGE into) ``BENCH_kernels.json``: rows from other
+    kernels already in an existing artifact — e.g. ``benchmarks.run``'s
+    simhash/bucket_logits timings — are preserved, and any stale
+    lss_topk sweep rows are replaced by this run's, so the guard step
+    and the main bench step can both land in one artifact regardless of
+    order."""
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    path = path or os.path.join(out_dir, "BENCH_kernels.json")
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+        kept = [r for r in prev.get("rows", [])
+                if r.get("kernel") != "lss_topk"]
+    except (OSError, ValueError):
+        prev, kept = {}, []
+    rec = {**prev, "bench": "kernels", "backend": jax.default_backend(),
+           **rec, "rows": kept + rec["rows"]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"wrote {path}")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cs", default="512,2048,8192",
+                    help="comma-separated candidate counts to sweep")
+    ap.add_argument("--b", type=int, default=8, help="query batch size")
+    ap.add_argument("--d", type=int, default=64, help="embedding dim")
+    ap.add_argument("--guard-c", type=int, default=None,
+                    help="fail if bitonic exceeds guard-ratio x quadratic "
+                         "at this C")
+    ap.add_argument("--guard-ratio", type=float, default=1.5)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cs = tuple(int(x) for x in args.cs.split(","))
+
+    rec = bench_dedup_sweep(cs=cs, b=args.b, d=args.d)
+    for r in rec["rows"]:
+        print(f"kernel_lss_topk_ref_{r['dedup']}_c{r['c']},"
+              f"{r['us_per_query']:.3f},{r['shape']}")
+    print(f"crossover_c={rec['crossover_c']}")
+    guard = None
+    rec["guard"] = None
+    if args.guard_c is not None:
+        guard = check_guard(rec, args.guard_c, args.guard_ratio)
+        rec["guard"] = {"c": args.guard_c, "ratio": args.guard_ratio,
+                        "failed": guard}
+    write_artifact(rec, args.out)
+    if guard is not None:
+        print(f"GUARD FAILED: {guard}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

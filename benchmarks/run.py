@@ -35,9 +35,11 @@ def _write_artifact(name: str, payload: dict) -> str:
     return path
 
 
-def bench_kernels() -> tuple[list[dict], list[str]]:
+def bench_kernels() -> tuple[dict, list[str]]:
     """Pallas-kernel wrappers vs refs (CPU: interpret-mode correctness
-    pass + ref-path timing; TPU timing is the deploy target)."""
+    pass + ref-path timing; TPU timing is the deploy target), plus the
+    lss_topk dedup-strategy C-sweep with its measured quadratic/bitonic
+    crossover (the data behind the registry's auto-select threshold)."""
     from repro.kernels import bucket_logits, simhash_codes
     recs, rows = [], []
     key = jax.random.PRNGKey(0)
@@ -64,7 +66,24 @@ def bench_kernels() -> tuple[list[dict], list[str]]:
     recs.append({"kernel": "bucket_logits", "impl": "ref",
                  "us_per_query": round(us, 3), "shape": "S1024_P128_d128"})
     rows.append(f"kernel_bucket_logits_ref,{us:.3f},S1024_P128_d128")
-    return recs, rows
+
+    # lss_topk dedup strategy C-sweep (quadratic vs bitonic, ref path).
+    # BENCH_SKIP_DEDUP_SWEEP=1 skips it (CI's dedicated guard step runs
+    # the sweep itself and MERGES into the same artifact, so the main
+    # bench job doesn't pay for — or clobber — a second sweep).
+    if os.environ.get("BENCH_SKIP_DEDUP_SWEEP"):
+        return {"rows": recs, "crossover_c": None}, rows
+    from benchmarks.kernels_bench import bench_dedup_sweep
+    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    sweep = bench_dedup_sweep(cs=(512, 2048, 8192) if fast
+                              else (512, 1024, 2048, 4096, 8192, 16384))
+    recs.extend(sweep["rows"])
+    for r in sweep["rows"]:
+        rows.append(f"kernel_lss_topk_ref_{r['dedup']}_c{r['c']},"
+                    f"{r['us_per_query']:.3f},{r['shape']}")
+    rows.append(f"kernel_lss_topk_dedup_crossover,0,"
+                f"crossover_c={sweep['crossover_c']}")
+    return {"rows": recs, "crossover_c": sweep["crossover_c"]}, rows
 
 
 def roofline_summary() -> tuple[list[dict], list[str]]:
@@ -200,8 +219,8 @@ def main() -> None:
     rows += bench_serving_rows()
     rows += bench_load_rows()
     rows += bench_decode_rows()
-    kern_recs, kern_rows = bench_kernels()
-    _write_artifact("kernels", {"rows": kern_recs})
+    kern_rec, kern_rows = bench_kernels()
+    _write_artifact("kernels", kern_rec)
     rows += kern_rows
     if not os.environ.get("BENCH_SKIP_TABLES"):
         bench_tables(rows)

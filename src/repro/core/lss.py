@@ -16,7 +16,12 @@ pass on TPU, the jnp oracle on CPU); ``retrieve`` and
 ``sparse_logits_bucketed`` route through the ``simhash_codes`` /
 ``bucket_logits`` ops.  Pass ``impl=`` to pin an implementation
 (``ref`` | ``pallas`` | ``pallas_interpret``) or leave ``None`` for
-backend auto-selection.
+backend auto-selection.  ``dedup=`` likewise pins the cross-table dedup
+algorithm (``quadratic`` | ``bitonic``); left ``None``, the registry
+auto-switches to the bitonic sorting network once C = L*P crosses the
+measured crossover, so large candidate counts are a strategy change,
+not a hard wall — a warning fires only past the VMEM budget derived
+from the actual (C, d, P) shape (``kernels.lss_topk.ops``).
 """
 
 from __future__ import annotations
@@ -170,19 +175,22 @@ class LSSForward(NamedTuple):
 
 
 def lss_forward(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
-                top_k: int = 5, *, impl: str | None = None) -> LSSForward:
+                top_k: int = 5, *, impl: str | None = None,
+                dedup: str | None = None) -> LSSForward:
     """Full Algorithm 2 with serving metrics, single retrieval pass.
 
     On a bucket-major index the whole retrieve -> slab logits -> dedup ->
     top-k pipeline is one registry-dispatched ``lss_topk`` op (a single
-    fused Pallas pass on TPU).  ``w_aug`` is only needed for the gather
-    path (``w_bucketed is None``), which keeps the XLA gather lowering.
+    fused Pallas pass on TPU); ``dedup`` pins its cross-table dedup
+    strategy (``quadratic`` | ``bitonic``, None = auto on C).  ``w_aug``
+    is only needed for the gather path (``w_bucketed is None``), which
+    keeps the XLA gather lowering.
     """
     q_aug = simhash.augment_queries(q)
     if index.w_bucketed is not None:
         t = index.tables
         out = lss_topk(q_aug, index.theta, t.table_ids, index.w_bucketed,
-                       top_k=top_k, impl=impl)
+                       top_k=top_k, impl=impl, dedup=dedup)
         return LSSForward(*out)
     cand_ids, _ = retrieve(q_aug, index, impl=impl)
     logits = sparse_logits_gather(q_aug, w_aug, cand_ids)
@@ -195,10 +203,10 @@ def lss_forward(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
 
 
 def lss_predict(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
-                top_k: int = 5, *, impl: str | None = None
-                ) -> tuple[jax.Array, jax.Array]:
+                top_k: int = 5, *, impl: str | None = None,
+                dedup: str | None = None) -> tuple[jax.Array, jax.Array]:
     """(top-k logits, top-k neuron ids) ``[B, k]`` — see ``lss_forward``."""
-    out = lss_forward(q, index, w_aug, top_k, impl=impl)
+    out = lss_forward(q, index, w_aug, top_k, impl=impl, dedup=dedup)
     return out.top_logits, out.top_ids
 
 

@@ -36,7 +36,8 @@ def build_local_index(w_aug_local: jax.Array, theta: jax.Array,
 
 
 def local_topk(q: jax.Array, index: LSSIndex, w_aug_local: jax.Array | None,
-               k: int, with_aux: bool = False, impl: str | None = None):
+               k: int, with_aux: bool = False, impl: str | None = None,
+               dedup: str | None = None):
     """Shard-local Algorithm 2 returning exactly-k (logits, local ids).
 
     Delegates to ``lss_forward`` (registry-dispatched; the fused Pallas
@@ -45,7 +46,7 @@ def local_topk(q: jax.Array, index: LSSIndex, w_aug_local: jax.Array | None,
     global all-gather.  With ``with_aux`` also returns the per-query
     local sample size from the SAME retrieval pass.
     """
-    out = lss_forward(q, index, w_aug_local, k, impl=impl)
+    out = lss_forward(q, index, w_aug_local, k, impl=impl, dedup=dedup)
     if with_aux:
         return out.top_logits, out.top_ids, out.sample_size
     return out.top_logits, out.top_ids
@@ -54,14 +55,14 @@ def local_topk(q: jax.Array, index: LSSIndex, w_aug_local: jax.Array | None,
 def sharded_lss_predict(q: jax.Array, index: LSSIndex,
                         w_aug_local: jax.Array | None, *, k: int,
                         axis_name: str, m_local: int,
-                        impl: str | None = None
+                        impl: str | None = None, dedup: str | None = None
                         ) -> tuple[jax.Array, jax.Array]:
     """Body to run INSIDE shard_map: q replicated, index/w shard-local.
 
     Returns global (top-k logits, top-k GLOBAL neuron ids), replicated.
     """
     logits, ids = local_topk(q, index, w_aug_local, k,
-                             impl=impl)                         # [B, k]
+                             impl=impl, dedup=dedup)            # [B, k]
     offset = jax.lax.axis_index(axis_name) * m_local
     gids = jnp.where(ids >= 0, ids + offset, -1)
     all_logits = jax.lax.all_gather(logits, axis_name, axis=1)  # [B, TP, k]
@@ -76,12 +77,13 @@ def sharded_lss_predict(q: jax.Array, index: LSSIndex,
 def sharded_lss_forward(q: jax.Array, index: LSSIndex,
                         w_aug_local: jax.Array | None, *, k: int,
                         axis_name: str, m_local: int,
-                        impl: str | None = None
+                        impl: str | None = None, dedup: str | None = None
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """``sharded_lss_predict`` + per-query GLOBAL sample size (psum of the
     shard-local unique-candidate counts) from the single retrieval pass."""
     logits, ids, local_sample = local_topk(q, index, w_aug_local, k,
-                                           with_aux=True, impl=impl)
+                                           with_aux=True, impl=impl,
+                                           dedup=dedup)
     offset = jax.lax.axis_index(axis_name) * m_local
     gids = jnp.where(ids >= 0, ids + offset, -1)
     all_logits = jax.lax.all_gather(logits, axis_name, axis=1)  # [B, TP, k]
@@ -98,18 +100,21 @@ def make_sharded_predict(mesh: jax.sharding.Mesh, model_axis: str,
                          cfg: LSSConfig, m_local: int, k: int,
                          batch_axis: str | None = None,
                          with_aux: bool = False,
-                         impl: str | None = None):
+                         impl: str | None = None,
+                         dedup: str | None = None):
     """Wrap the sharded predictor in shard_map for the given mesh.
 
     Expects stacked per-shard pytrees: index leaves with a leading [TP] dim
     sharded over ``model_axis``; q sharded over ``batch_axis`` (or
     replicated).  Returns a function (q, stacked_index, w_local_stack|None)
     -> (logits [B,k], ids [B,k]) — plus sample size [B] if ``with_aux``.
-    ``impl`` pins the registry kernel impl for the shard-local retrieval.
+    ``impl`` pins the registry kernel impl for the shard-local retrieval;
+    ``dedup`` its cross-table dedup strategy (quadratic | bitonic).
     """
     qspec = P(batch_axis) if batch_axis else P()
     body = partial(sharded_lss_forward if with_aux else sharded_lss_predict,
-                   k=k, axis_name=model_axis, m_local=m_local, impl=impl)
+                   k=k, axis_name=model_axis, m_local=m_local, impl=impl,
+                   dedup=dedup)
 
     def unstacked_body(q, index_stack, w_stack):
         index = jax.tree.map(lambda x: x[0], index_stack)

@@ -7,6 +7,12 @@ oracle.  Implementations register on the dispatch registry
 on TPU, ref elsewhere), overridable per call (``impl=``), per process
 (``registry.set_default_impl`` / ``use_impl``), or via the
 ``REPRO_KERNEL_IMPL`` environment variable.
+
+Ops can also expose *strategy* knobs — algorithm choices every impl
+honors, resolved the same way (explicit arg > ``use_strategy`` > env >
+auto-select on shape): ``lss_topk.dedup`` picks the cross-table dedup
+(``quadratic`` below the measured C crossover, ``bitonic`` above; see
+``repro.kernels.lss_topk.dedup``).
 """
 from repro.kernels import registry
 from repro.kernels.simhash_codes import simhash_codes

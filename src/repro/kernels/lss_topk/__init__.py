@@ -1,2 +1,6 @@
-from repro.kernels.lss_topk.ops import lss_topk
-__all__ = ["lss_topk"]
+from repro.kernels.lss_topk.dedup import (dedup_auto_threshold,
+                                          set_dedup_auto_threshold)
+from repro.kernels.lss_topk.ops import (grid_steps, lss_topk,
+                                        lss_topk_vmem_bytes)
+__all__ = ["lss_topk", "grid_steps", "lss_topk_vmem_bytes",
+           "dedup_auto_threshold", "set_dedup_auto_threshold"]

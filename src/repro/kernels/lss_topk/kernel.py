@@ -1,33 +1,54 @@
 """Fused Pallas TPU kernel: the whole LSS serving pipeline in one pass.
 
-Per query, in a single ``pallas_call`` grid step:
+Per grid step — one ``[Bq, d]`` QUERY TILE, not one query:
 
-    simhash code (hash matmul + sign + bit-pack)
-      -> data-dependent slab DMA (bucket-major weights stay in HBM;
-         only the L hit slabs ever reach VMEM)
-      -> slab logits on the MXU
-      -> cross-table dedup mask
+    simhash codes for the tile (hash matmul + sign + bit-pack)
+      -> double-buffered data-dependent slab DMA (bucket-major weights
+         stay in HBM; only hit slabs ever reach VMEM, and table fetch
+         t+1 overlaps the MXU matmul of fetch t)
+      -> slab logits as [Bq, d] @ [d, P] MXU matmuls
+      -> cross-table dedup (quadratic [C, C] mask or bitonic sorting
+         network, per the ``lss_topk.dedup`` strategy)
       -> first-occurrence top-k
 
 The slab index depends on the hash computed INSIDE the kernel, so the
 canonical scalar-prefetch trick (``bucket_logits``) cannot express it:
 instead ``w_slabs``/``table_ids`` are bound with ``memory_space=ANY`` and
 fetched with ``pltpu.make_async_copy`` at a runtime-computed index — the
-same manual-DMA pattern as paged attention.  Nothing wider than one
-``[P, d]`` slab is ever materialised, which is the point of LSS: the full
-head streams ``m*d`` weights per batch, this kernel streams ``L*P*d`` per
+same manual-DMA pattern as paged attention, but through a 2-deep rotating
+scratch (``w_vmem[2, P, d]``) so the fetch for slot ``s^1`` is in flight
+while the matmul consumes slot ``s``.  Nothing wider than two ``[P, d]``
+slabs is ever materialised, which is the point of LSS: the full head
+streams ``m*d`` weights per batch, this kernel streams ``L*P*d`` per
 query with no HBM round-trips for the intermediate codes or logits.
 
-Bit-exactness contract (interpret mode, CPU): every fp32 reduction is
-expressed so XLA lowers it to the same gemm the jnp oracle uses —
-``q @ w.T`` for slab logits (NOT ``dot_general`` over ``((1,),(1,))``,
-which takes a different Eigen path), row-blocked hash matmul, and a
-power-of-two bit-pack matmul that is exact in fp32.  ``ops.py`` skips
-lane padding in interpret mode so contraction lengths match the ref.
+Query blocking (``grid=(ceil(B/Bq),)``) amortises per-step dispatch and
+turns the slab product into an MXU-shaped ``[Bq, d] @ [d, P]`` matmul
+(row b of the product is that query's logits; the other rows ride the
+same MXU pass for free) instead of a degenerate ``[1, d]`` GEMV.  The
+fetch schedule is shared: one double-buffered stream of ``Bq*L`` slab
+copies per tile.
 
-VMEM budget: theta ``[d, KL]`` + one ``[P, d]`` slab + the ``[C, C]``
-dedup compare (C = L*P).  C beyond ~2k needs a sorted dedup instead of
-the quadratic mask; sized fine for the paper's 0.2-6% sample regimes.
+Bit-exactness contract (interpret mode, CPU): every fp32 reduction is
+expressed so XLA lowers it to the same gemm the jnp oracle uses — XLA's
+CPU gemm is row-consistent across leading-dim shapes, so slicing row b
+out of the ``[Bq, d] @ [d, P]`` product is bit-identical to the ref's
+einsum row (exact-equality tested across the C/B/d sweep).  ``ops.py``
+skips lane padding in interpret mode so contraction lengths match the
+ref, and pads B up to the tile multiple with zero rows that are sliced
+off after the call.
+
+Dedup strategies (see ``kernels.lss_topk.dedup``):
+
+* ``quadratic`` — the original per-row ``[C, C]`` compare + original-
+  order top-k.  VMEM cost grows with C^2; right answer below ~2k
+  candidates.
+* ``bitonic`` — sort (id, pos, logit) rows with an O(C log^2 C) network,
+  mark first occurrences with one neighbor compare, then run top-k IN
+  THE SORTED DOMAIN, breaking logit ties by the carried original
+  position.  Because ties break on the same key and the surviving
+  (logit, pos) multiset is identical, the outputs are bit-identical to
+  the quadratic path — tested, not assumed.
 
 Top-k is k passes of masked max with first-occurrence argmin-of-index,
 which reproduces ``jax.lax.top_k``'s stable lower-index-first
@@ -43,88 +64,166 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.lss_topk.dedup import sorted_dedup
+
 NEG_INF = -1e30   # matches repro.core.lss.NEG_INF (kept import-free)
 
+DEFAULT_BLOCK_Q = 8   # MXU-friendly query-tile rows per grid step
 
-def _make_kernel(k_bits: int, n_tables: int, top_k: int, cap: int):
+
+def _topk_quadratic_row(cand_row, logits_row, top_k):
+    """Original-order dedup + top-k for one ``[1, C]`` candidate row.
+    Returns (top_l [1,k], top_i [1,k], sample [1,1]).
+
+    The mask math intentionally restates ``dedup.dedup_mask_quadratic``
+    in strictly 2-D form: the shared helper builds a batched
+    ``[..., C, C]`` compare, and rank-3 intermediates don't lower well
+    in Mosaic — the kernel keeps every array at the ``[C, C]`` /
+    ``[1, C]`` shapes the pre-blocking kernel already compiled."""
+    c = cand_row.shape[1]
+    eq = cand_row.T == cand_row                               # [C, C]
+    row = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    n_earlier = jnp.sum((eq & (col < row)).astype(jnp.int32),
+                        axis=1, keepdims=True)                # [C, 1]
+    valid = ((n_earlier == 0) & (cand_row.T >= 0)).T          # [1, C]
+    work = jnp.where(valid, logits_row, NEG_INF)
+    sample = jnp.sum(valid.astype(jnp.int32)).reshape(1, 1)
+
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)
+    tl, ti = [], []
+    for _ in range(top_k):                    # static unroll over k
+        best = jnp.max(work, axis=1, keepdims=True)           # [1, 1]
+        first = jnp.min(jnp.where(work == best, pos, c),
+                        axis=1, keepdims=True)                # [1, 1]
+        sel = pos == first                                    # [1, C]
+        cid = jnp.sum(jnp.where(sel, cand_row, 0), axis=1,
+                      keepdims=True)                          # [1, 1]
+        tl.append(best)
+        ti.append(jnp.where(best > NEG_INF / 2, cid, -1))
+        work = jnp.where(sel, NEG_INF, work)
+    return (jnp.concatenate(tl, axis=1), jnp.concatenate(ti, axis=1),
+            sample)
+
+
+def _topk_bitonic_tile(cand, logits, top_k):
+    """Sorted-domain dedup + top-k for a whole ``[Bq, C]`` tile.
+    Returns (top_l [Bq,k], top_i [Bq,k], sample [Bq,1])."""
+    sids, spos, slog, first = sorted_dedup(cand, logits)      # [Bq, n]
+    n = sids.shape[-1]
+    sample = jnp.sum(first.astype(jnp.int32), axis=1, keepdims=True)
+    work = jnp.where(first, slog, NEG_INF)
+    tl, ti = [], []
+    for _ in range(top_k):                    # static unroll over k
+        best = jnp.max(work, axis=1, keepdims=True)           # [Bq, 1]
+        # ties break on the carried ORIGINAL position — the exact
+        # lower-index-wins contract of the quadratic path / lax.top_k
+        firstpos = jnp.min(jnp.where(work == best, spos, n),
+                           axis=1, keepdims=True)             # [Bq, 1]
+        sel = spos == firstpos                                # [Bq, n]
+        cid = jnp.sum(jnp.where(sel, sids, 0), axis=1, keepdims=True)
+        tl.append(best)
+        ti.append(jnp.where(best > NEG_INF / 2, cid, -1))
+        work = jnp.where(sel, NEG_INF, work)
+    return (jnp.concatenate(tl, axis=1),
+            jnp.concatenate(ti, axis=1).astype(jnp.int32), sample)
+
+
+def _make_kernel(k_bits: int, n_tables: int, top_k: int, cap: int,
+                 block_q: int, dedup: str):
     n_buckets = 2 ** k_bits
 
     def kernel(q_ref, theta_ref, pack_ref, tids_hbm, w_hbm,
                top_l_ref, top_i_ref, sample_ref, cand_ref,
                w_vmem, ids_vmem, sem_w, sem_i):
-        # ---- stage 1: simhash code ------------------------------------
-        q = q_ref[...].astype(jnp.float32)                    # [1, d]
+        # ---- stage 1: simhash codes for the whole tile ----------------
+        q = q_ref[...].astype(jnp.float32)                    # [Bq, d]
         # same normalization as core.simhash.unit (hash definition)
         norm = jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True))
         qn = q / jnp.maximum(norm, 1e-12)
         scores = jnp.matmul(qn, theta_ref[...].astype(jnp.float32),
-                            preferred_element_type=jnp.float32)  # [1, KL]
+                            preferred_element_type=jnp.float32)  # [Bq, KL]
         bits = (scores > 0).astype(jnp.float32)
         packed = jnp.matmul(bits, pack_ref[...],
-                            preferred_element_type=jnp.float32)  # [1, L]
+                            preferred_element_type=jnp.float32)  # [Bq, L]
         buckets = packed.astype(jnp.int32)
 
-        # ---- stage 2: slab DMA + MXU logits, one hit slab per table ---
-        logit_rows = []
-        id_rows = []
-        for t in range(n_tables):                 # static unroll over L
-            slab = t * n_buckets + buckets[0, t]
-            cp_w = pltpu.make_async_copy(w_hbm.at[slab], w_vmem, sem_w)
-            cp_i = pltpu.make_async_copy(tids_hbm.at[slab], ids_vmem, sem_i)
-            cp_w.start()
-            cp_i.start()
-            cp_w.wait()
-            cp_i.wait()
-            w = w_vmem[...].astype(jnp.float32)               # [P, d]
-            logit_rows.append(
-                jnp.matmul(q, w.T, preferred_element_type=jnp.float32))
-            id_rows.append(ids_vmem[...].reshape(1, cap))
-        logits = jnp.concatenate(logit_rows, axis=1)          # [1, C]
-        cand = jnp.concatenate(id_rows, axis=1)               # [1, C]
-        cand_ref[...] = cand
+        # ---- stage 2: double-buffered slab DMA + MXU logits -----------
+        # One shared fetch schedule for the tile: Bq*L slab copies
+        # through a 2-slot rotating scratch; copy i+1 is started before
+        # copy i is consumed, so DMA overlaps the matmul.
+        n_fetch = block_q * n_tables
 
-        # ---- stage 3: first-occurrence dedup mask ---------------------
-        c = cand.shape[1]
-        eq = cand.T == cand                                   # [C, C]
-        row = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
-        col = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
-        n_earlier = jnp.sum((eq & (col < row)).astype(jnp.int32),
-                            axis=1, keepdims=True)            # [C, 1]
-        valid = ((n_earlier == 0) & (cand.T >= 0)).T          # [1, C]
-        masked = jnp.where(valid, logits, NEG_INF)
-        sample_ref[0, 0] = jnp.sum(valid.astype(jnp.int32))
+        def slab_of(idx):
+            b, t = divmod(idx, n_tables)
+            return t * n_buckets + buckets[b, t]
 
-        # ---- stage 4: top-k (stable, lower index wins ties) -----------
-        pos = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)
-        work = masked
-        for i in range(top_k):                    # static unroll over k
-            best = jnp.max(work, axis=1, keepdims=True)       # [1, 1]
-            first = jnp.min(jnp.where(work == best, pos, c),
-                            axis=1, keepdims=True)            # [1, 1]
-            sel = pos == first                                # [1, C]
-            cid = jnp.sum(jnp.where(sel, cand, 0), axis=1,
-                          keepdims=True)                      # [1, 1]
-            top_l_ref[0, i] = best[0, 0]
-            top_i_ref[0, i] = jnp.where(best[0, 0] > NEG_INF / 2,
-                                        cid[0, 0], -1)
-            work = jnp.where(sel, NEG_INF, work)
+        def copies(idx, slot):
+            slab = slab_of(idx)
+            return (pltpu.make_async_copy(w_hbm.at[slab], w_vmem.at[slot],
+                                          sem_w.at[slot]),
+                    pltpu.make_async_copy(tids_hbm.at[slab],
+                                          ids_vmem.at[slot],
+                                          sem_i.at[slot]))
+
+        for cp in copies(0, 0):
+            cp.start()
+        logit_rows = [[None] * n_tables for _ in range(block_q)]
+        id_rows = [[None] * n_tables for _ in range(block_q)]
+        for idx in range(n_fetch):            # static unroll over Bq*L
+            slot = idx % 2
+            if idx + 1 < n_fetch:
+                for cp in copies(idx + 1, (idx + 1) % 2):
+                    cp.start()
+            for cp in copies(idx, slot):
+                cp.wait()
+            b, t = divmod(idx, n_tables)
+            w = w_vmem[slot].astype(jnp.float32)              # [P, d]
+            blk = jnp.matmul(q, w.T,
+                             preferred_element_type=jnp.float32)  # [Bq, P]
+            logit_rows[b][t] = blk[b:b + 1, :]                # this query's
+            id_rows[b][t] = ids_vmem[slot].reshape(1, cap)
+        logits = jnp.concatenate(
+            [jnp.concatenate(r, axis=1) for r in logit_rows], axis=0)
+        cand = jnp.concatenate(
+            [jnp.concatenate(r, axis=1) for r in id_rows], axis=0)
+        cand_ref[...] = cand                                  # [Bq, C]
+
+        # ---- stage 3+4: dedup + stable top-k --------------------------
+        if dedup == "quadratic":
+            for b in range(block_q):          # static unroll over the tile
+                tl, ti, sample = _topk_quadratic_row(
+                    cand[b:b + 1], logits[b:b + 1], top_k)
+                top_l_ref[b, :] = tl[0, :]
+                top_i_ref[b, :] = ti[0, :]
+                sample_ref[b, 0] = sample[0, 0]
+        else:
+            tl, ti, sample = _topk_bitonic_tile(cand, logits, top_k)
+            top_l_ref[...] = tl
+            top_i_ref[...] = ti
+            sample_ref[...] = sample
 
     return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("k_bits", "n_tables", "top_k",
+                                             "block_q", "dedup",
                                              "interpret"))
 def lss_topk_pallas(q_aug: jax.Array, theta: jax.Array, tids_flat: jax.Array,
                     w_flat: jax.Array, *, k_bits: int, n_tables: int,
-                    top_k: int, interpret: bool = False
+                    top_k: int, block_q: int = DEFAULT_BLOCK_Q,
+                    dedup: str = "quadratic", interpret: bool = False
                     ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Fused retrieve->score->top-k.
+    """Fused retrieve->score->top-k over ``[block_q, d]`` query tiles.
 
     Args:
-      q_aug:     ``[B, d]`` augmented queries (``ops.py`` pads d on TPU).
+      q_aug:     ``[B, d]`` augmented queries, B a multiple of
+                 ``block_q`` (``ops.py`` pads B; pads d on TPU).
       theta:     ``[d, K*L]`` hyperplanes.
       tids_flat: int32 ``[S, P]`` flattened bucket-major ids (S = L*2^K).
       w_flat:    ``[S, P, d]`` flattened bucket-major slabs.
+      block_q:   query rows per grid step (``grid=(B/block_q,)``).
+      dedup:     ``quadratic`` | ``bitonic`` (resolved by ``ops.py``).
 
     Returns:
       (top_logits [B,k], top_ids [B,k], sample [B,1], cand_ids [B, L*P]).
@@ -133,10 +232,12 @@ def lss_topk_pallas(q_aug: jax.Array, theta: jax.Array, tids_flat: jax.Array,
     n_slabs, cap, dw = w_flat.shape
     assert d == dw, (d, dw)
     assert n_slabs == n_tables * 2 ** k_bits, (n_slabs, n_tables, k_bits)
+    assert bsz % block_q == 0, (bsz, block_q)
     kl = k_bits * n_tables
     assert theta.shape == (d, kl), (theta.shape, d, kl)
     n_cand = n_tables * cap
     assert top_k <= n_cand, (top_k, n_cand)
+    assert dedup in ("quadratic", "bitonic"), dedup
 
     # constant pack matrix: pack[t*K + j, t] = 2^j (exact in fp32)
     eye = jnp.eye(n_tables, dtype=jnp.float32)
@@ -144,20 +245,20 @@ def lss_topk_pallas(q_aug: jax.Array, theta: jax.Array, tids_flat: jax.Array,
     pack = (eye[:, None, :] * weights[None, :, None]).reshape(kl, n_tables)
 
     return pl.pallas_call(
-        _make_kernel(k_bits, n_tables, top_k, cap),
-        grid=(bsz,),
+        _make_kernel(k_bits, n_tables, top_k, cap, block_q, dedup),
+        grid=(bsz // block_q,),
         in_specs=[
-            pl.BlockSpec((1, d), lambda b: (b, 0)),
+            pl.BlockSpec((block_q, d), lambda b: (b, 0)),
             pl.BlockSpec((d, kl), lambda b: (0, 0)),
             pl.BlockSpec((kl, n_tables), lambda b: (0, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),     # ids stay in HBM
             pl.BlockSpec(memory_space=pltpu.ANY),     # slabs stay in HBM
         ],
         out_specs=[
-            pl.BlockSpec((1, top_k), lambda b: (b, 0)),
-            pl.BlockSpec((1, top_k), lambda b: (b, 0)),
-            pl.BlockSpec((1, 1), lambda b: (b, 0)),
-            pl.BlockSpec((1, n_cand), lambda b: (b, 0)),
+            pl.BlockSpec((block_q, top_k), lambda b: (b, 0)),
+            pl.BlockSpec((block_q, top_k), lambda b: (b, 0)),
+            pl.BlockSpec((block_q, 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_q, n_cand), lambda b: (b, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bsz, top_k), jnp.float32),
@@ -166,10 +267,10 @@ def lss_topk_pallas(q_aug: jax.Array, theta: jax.Array, tids_flat: jax.Array,
             jax.ShapeDtypeStruct((bsz, n_cand), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((cap, d), w_flat.dtype),
-            pltpu.VMEM((cap,), jnp.int32),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, cap, d), w_flat.dtype),    # double-buffered
+            pltpu.VMEM((2, cap), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
     )(q_aug, theta, pack, tids_flat, w_flat)

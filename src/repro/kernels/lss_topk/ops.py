@@ -5,52 +5,139 @@ This is the serving hot path: ``core.lss.lss_forward`` routes every
 bucket-major forward through this op, so whichever impl the registry
 resolves (ref on CPU, pallas on TPU, pallas_interpret under test) is the
 one that actually serves traffic.
+
+Two registry knobs shape a call:
+
+* ``impl`` — which implementation runs (``ref`` | ``pallas`` |
+  ``pallas_interpret``), as for every op.
+* ``dedup`` — which cross-table dedup algorithm every impl uses
+  (``quadratic`` | ``bitonic``), resolved through the
+  ``lss_topk.dedup`` strategy (auto-select on C = L*P, ``REPRO_LSS_DEDUP``
+  env override; see ``kernels.lss_topk.dedup``).
+
+There is no hardcoded candidate ceiling anymore: past the old ~2k
+comfort limit the strategy auto-switches to the bitonic dedup, and a
+warning fires only when the VMEM working set DERIVED from the actual
+shape (:func:`lss_topk_vmem_bytes` over C, d, cap, Bq) exceeds the
+budget a TPU core can stage.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.lss_topk.kernel import lss_topk_pallas
+from repro.kernels.lss_topk import dedup as dedup_mod
+from repro.kernels.lss_topk.kernel import DEFAULT_BLOCK_Q, lss_topk_pallas
 from repro.kernels.lss_topk.ref import lss_topk_ref
 from repro.kernels.registry import kernel_op
 
 lss_topk_op = kernel_op("lss_topk")
 lss_topk_op.register_impl("ref", lss_topk_ref)
 
-# Past this candidate count the O(C^2) in-kernel dedup (a [C, C] compare
-# in fp32-adjacent int space) stops fitting comfortably in VMEM alongside
-# the [P, d] slabs; the ROADMAP follow-up is a sorted/bitonic dedup.
-DEDUP_COMFORT_LIMIT = 2048
+# Practical per-core VMEM budget for the kernel's working set (the full
+# VMEM is ~16 MiB; leave headroom for the compiler's own staging).
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+BLOCK_Q_ENV_VAR = "REPRO_LSS_BLOCK_Q"
+
+
+def default_block_q() -> int:
+    """Query-tile rows per grid step (env ``REPRO_LSS_BLOCK_Q``)."""
+    env = os.environ.get(BLOCK_Q_ENV_VAR)
+    return int(env) if env else DEFAULT_BLOCK_Q
+
+
+def grid_steps(bsz: int, block_q: int | None = None) -> int:
+    """Pallas grid size for a B-query call: ``ceil(B / Bq)`` query tiles
+    (the pre-blocking kernel ran ``B`` steps).  Single source of truth —
+    ``_pallas_impl`` sizes its grid and padding from this."""
+    bq = effective_block_q(bsz, block_q)
+    return -(-bsz // bq)
+
+
+def effective_block_q(bsz: int, block_q: int | None = None) -> int:
+    """Tile height actually used: never taller than the batch, so a
+    bucket-1 decode step keeps its single-row grid instead of paying for
+    seven padded rows of hash + slab traffic."""
+    bq = block_q or default_block_q()
+    return max(1, min(bq, bsz))
+
+
+def lss_topk_vmem_bytes(n_candidates: int, d: int, cap: int, *,
+                        block_q: int | None = None,
+                        dedup: str = "bitonic", kl: int = 64) -> int:
+    """Estimated VMEM working set of one fused-kernel grid step.
+
+    Counts the resident operands (theta ``[d, KL]``, pack, the query
+    tile, double-buffered ``2x[P, d]`` slab + ``2x[P]`` id scratch, the
+    ``[Bq, C]`` logit/candidate tiles) plus the dedup working set:
+    ``~9*C^2`` bytes for the quadratic all-pairs compare (id/iota int32
+    pairs + the bool mask) vs ``~4 arrays x [Bq, pow2(C)] x 4`` bytes
+    for the bitonic network (id, pos, logit, plus one merge temp).
+    """
+    bq = block_q or default_block_q()
+    c = n_candidates
+    fixed = 4 * (d * kl + kl * bq + bq * d)        # theta + pack + q tile
+    slabs = 2 * cap * d * 4 + 2 * cap * 4          # double-buffered scratch
+    tiles = 2 * bq * c * 4                         # logits + cand
+    if dedup == "quadratic":
+        dedup_ws = 9 * c * c                       # eq bool + iota pair
+    else:
+        n_pad = 1 << max(c - 1, 1).bit_length()
+        dedup_ws = 4 * bq * n_pad * 4 * 2          # 4 arrays + merge temp
+    return fixed + slabs + tiles + dedup_ws
 
 
 @functools.lru_cache(maxsize=None)
-def _warn_large_candidate_count(n_tables: int, capacity: int) -> None:
-    """One-time (per L x P shape) heads-up that the dedup is the scaling
-    wall, emitted at trace time from the dispatching call site."""
-    c = n_tables * capacity
+def _warn_vmem_exceeded(n_candidates: int, d: int, cap: int, block_q: int,
+                        dedup: str, est: float) -> None:
+    """One-time (per shape) heads-up that even the selected dedup
+    strategy cannot stage this shape's working set in VMEM."""
     warnings.warn(
-        f"lss_topk: candidate count C = L*P = {n_tables}*{capacity} = {c} "
-        f"exceeds ~{DEDUP_COMFORT_LIMIT}; the fused kernel's O(C^2) "
-        f"duplicate-mask no longer fits comfortably in VMEM at this size "
-        f"and will dominate the pass. Reduce table capacity / k_bits, or "
-        f"see the ROADMAP item on switching to a sorted (bitonic) dedup.",
-        stacklevel=3)
+        f"lss_topk: estimated VMEM working set {est / 2**20:.1f} MiB for "
+        f"C={n_candidates}, d={d}, P={cap}, Bq={block_q}, dedup={dedup} "
+        f"exceeds the ~{VMEM_BUDGET_BYTES / 2**20:.0f} MiB budget; the "
+        f"fused kernel will spill or fail to fit at this size. Reduce "
+        f"table capacity / k_bits / block_q, or shard the vocabulary "
+        f"(serve.heads.shard_index).", stacklevel=4)
+
+
+def _check_vmem(n_candidates: int, d: int, cap: int, block_q: int,
+                dedup: str, kl: int) -> None:
+    est = lss_topk_vmem_bytes(n_candidates, d, cap, block_q=block_q,
+                              dedup=dedup, kl=kl)
+    if est > VMEM_BUDGET_BYTES:
+        _warn_vmem_exceeded(n_candidates, d, cap, block_q, dedup, est)
 
 
 def _pallas_impl(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
-                 w_bucketed: jax.Array, *, top_k: int, interpret: bool
+                 w_bucketed: jax.Array, *, top_k: int, interpret: bool,
+                 dedup: str | None = None, block_q: int | None = None
                  ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     n_tables, n_buckets, cap = table_ids.shape
     k_bits = n_buckets.bit_length() - 1
     assert 2 ** k_bits == n_buckets, n_buckets
     bsz, d = q_aug.shape
+    # an explicit dedup= arrives pre-resolved from the dispatching
+    # wrapper; only resolve (and log) when called directly
+    choice = (dedup if dedup is not None
+              else dedup_mod.resolve_dedup(None, n_candidates=n_tables * cap))
+    bq = effective_block_q(bsz, block_q)
     tids = table_ids.reshape(n_tables * n_buckets, cap)
     w_flat = w_bucketed.reshape(n_tables * n_buckets, cap, d)
+    # Query-tile padding applies in BOTH modes (the grid is blocked
+    # either way): zero rows hash to some bucket like any query, produce
+    # ordinary per-row outputs, and are sliced off below — padding can
+    # never reach a real query's top-k because every row's dedup + top-k
+    # is row-local.
+    pad_b = (-bsz) % bq
+    if pad_b:
+        q_aug = jnp.pad(q_aug, ((0, pad_b), (0, 0)))
     pad_p = 0
     if not interpret:
         # TPU lane alignment; interpret mode runs unpadded so the fp32
@@ -67,7 +154,12 @@ def _pallas_impl(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
             tids = jnp.pad(tids, ((0, 0), (0, pad_p)), constant_values=-1)
     top_logits, top_ids, sample, cand = lss_topk_pallas(
         q_aug, theta, tids, w_flat, k_bits=k_bits, n_tables=n_tables,
-        top_k=top_k, interpret=interpret)
+        top_k=top_k, block_q=bq, dedup=choice, interpret=interpret)
+    if pad_b:
+        top_logits = top_logits[:bsz]
+        top_ids = top_ids[:bsz]
+        sample = sample[:bsz]
+        cand = cand[:bsz]
     if pad_p:
         cand = cand.reshape(bsz, n_tables, -1)[:, :, :cap]
         cand = cand.reshape(bsz, n_tables * cap)
@@ -81,18 +173,23 @@ lss_topk_op.register_impl(
 
 
 def lss_topk(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
-             w_bucketed: jax.Array, *, top_k: int, impl: str | None = None
+             w_bucketed: jax.Array, *, top_k: int, impl: str | None = None,
+             dedup: str | None = None
              ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused Algorithm-2 forward over a bucket-major index.
 
     ``[B,d] x [d,KL] x [L,2^K,P] x [L,2^K,P,d] ->``
     ``(top_logits [B,k], top_ids [B,k], sample_size [B], cand_ids [B,L*P])``
 
-    impl: ``ref`` | ``pallas`` | ``pallas_interpret`` | None (registry
-    auto-selection — see ``repro.kernels.registry``).
+    impl:  ``ref`` | ``pallas`` | ``pallas_interpret`` | None (registry
+           auto-selection — see ``repro.kernels.registry``).
+    dedup: ``quadratic`` | ``bitonic`` | None (strategy auto-select on
+           C = L*P — see ``repro.kernels.lss_topk.dedup``).
     """
     n_tables, _, capacity = table_ids.shape
-    if n_tables * capacity > DEDUP_COMFORT_LIMIT:
-        _warn_large_candidate_count(n_tables, capacity)
+    c = n_tables * capacity
+    choice = dedup_mod.resolve_dedup(dedup, n_candidates=c)
+    bq = effective_block_q(q_aug.shape[0])
+    _check_vmem(c, q_aug.shape[1], capacity, bq, choice, theta.shape[1])
     return lss_topk_op(q_aug, theta, table_ids, w_bucketed, top_k=top_k,
-                       impl=impl)
+                       dedup=choice, impl=impl)

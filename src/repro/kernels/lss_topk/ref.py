@@ -1,10 +1,18 @@
 """Pure-jnp oracle for the fused LSS top-k kernel.
 
 Composes the registry ref impls of the two sub-ops (simhash_codes,
-bucket_logits) with the dedup + top-k epilogue from ``core.lss`` — so
-this oracle IS, op for op, what ``lss_forward``'s ref path computes on a
-bucket-major index.  Bit-identity between the fused kernel and
-``lss_forward`` reduces to bit-identity against this function.
+bucket_logits) with the dedup + top-k epilogue — so this oracle IS, op
+for op, what ``lss_forward``'s ref path computes on a bucket-major
+index.  Bit-identity between the fused kernel and ``lss_forward``
+reduces to bit-identity against this function.
+
+The dedup step honors the ``lss_topk.dedup`` strategy knob
+(``quadratic`` | ``bitonic``, see ``kernels.lss_topk.dedup``): both
+produce the identical first-occurrence boolean mask, so the oracle's
+outputs are bit-identical across strategies — the knob only moves the
+CPU cost from O(C^2) all-pairs compares to an O(C log^2 C) sorting
+network, which is what keeps the ref path (the CPU-measurable serving
+path) sub-quadratic in the paper's large-sample regimes.
 """
 
 from __future__ import annotations
@@ -13,11 +21,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bucket_logits.ref import bucket_logits_ref
+from repro.kernels.lss_topk.dedup import (dedup_mask_bitonic,
+                                          dedup_mask_quadratic,
+                                          resolve_dedup)
 from repro.kernels.simhash_codes.ref import simhash_codes_ref
 
 
 def lss_topk_ref(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
-                 w_bucketed: jax.Array, *, top_k: int
+                 w_bucketed: jax.Array, *, top_k: int,
+                 dedup: str | None = None
                  ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Retrieve -> slab logits -> dedup mask -> top-k, all in jnp.
 
@@ -26,6 +38,8 @@ def lss_topk_ref(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
       theta:      ``[d_aug, K*L]`` hyperplanes.
       table_ids:  int32 ``[L, 2^K, P]`` bucket-major neuron ids, -1 padded.
       w_bucketed: ``[L, 2^K, P, d_aug]`` bucket-major WOL slabs.
+      dedup:      ``quadratic`` | ``bitonic`` | None (strategy
+                  auto-select on C = L*P).
 
     Returns:
       (top_logits [B,k] f32, top_ids [B,k] i32, sample_size [B] i32,
@@ -35,7 +49,7 @@ def lss_topk_ref(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
     # Deferred: core.lss routes through repro.kernels at module scope, so
     # importing it here at module scope would be circular.
     from repro.core import simhash
-    from repro.core.lss import NEG_INF, dedup_mask
+    from repro.core.lss import NEG_INF
 
     n_tables, n_buckets, cap = table_ids.shape
     k_bits = n_buckets.bit_length() - 1
@@ -54,7 +68,13 @@ def lss_topk_ref(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
     logits = bucket_logits_ref(q_aug, w_flat, slab_ids)         # [B, L, P]
     logits = logits.reshape(bsz, -1)
 
-    mask = dedup_mask(cand)
+    # an explicit dedup= arrives pre-resolved (and pre-logged) from the
+    # dispatching wrapper; only resolve (and log) when called directly
+    choice = (dedup if dedup is not None
+              else resolve_dedup(None, n_candidates=cand.shape[-1]))
+    assert choice in ("quadratic", "bitonic"), choice
+    mask = (dedup_mask_quadratic(cand) if choice == "quadratic"
+            else dedup_mask_bitonic(cand))
     logits = jnp.where(mask, logits, NEG_INF)
     top_logits, pos = jax.lax.top_k(logits, top_k)
     top_ids = jnp.take_along_axis(cand, pos, axis=-1)

@@ -18,10 +18,20 @@ Overrides from (2)/(3) that an op does not implement fall through to the
 backend default instead of erroring, so ``REPRO_KERNEL_IMPL=pallas`` on a
 TPU host is safe even if some op is ref-only.
 
-Dispatches are recorded at trace time (ops are typically called inside
-``jax.jit``, whose Python body runs once per compilation), so tests and
-tooling can assert which implementation actually served a path via
-:func:`dispatch_log` / :func:`last_dispatch`.
+Besides *implementations* (which backend runs an op), ops can expose
+*strategies* — named algorithm knobs within an op that every
+implementation honors (e.g. ``lss_topk.dedup`` = ``quadratic`` |
+``bitonic``).  A :class:`KernelStrategy` resolves the same way an impl
+does — explicit argument > process override (:func:`set_default_strategy`
+/ :func:`use_strategy`) > its own env var > an auto-select callback fed
+call-site context (e.g. the candidate count) — so shape-dependent
+algorithm switches are registry policy, not call-site ``if``\\ s.
+
+Dispatches AND strategy resolutions are recorded at trace time (ops are
+typically called inside ``jax.jit``, whose Python body runs once per
+compilation), so tests and tooling can assert which implementation and
+algorithm actually served a path via :func:`dispatch_log` /
+:func:`last_dispatch`.
 """
 
 from __future__ import annotations
@@ -36,6 +46,8 @@ __all__ = [
     "IMPLS", "ENV_VAR", "KernelOp", "kernel_op", "get_op", "list_ops",
     "resolve_impl", "set_default_impl", "use_impl", "dispatch_log",
     "dispatch_counts", "last_dispatch", "reset_dispatch_log",
+    "KernelStrategy", "kernel_strategy", "get_strategy", "list_strategies",
+    "set_default_strategy", "use_strategy",
 ]
 
 IMPLS = ("ref", "pallas", "pallas_interpret")
@@ -44,6 +56,8 @@ ENV_VAR = "REPRO_KERNEL_IMPL"
 _ops: dict[str, "KernelOp"] = {}
 _default_impl: str | None = None
 _log: list[tuple[str, str]] = []
+_strategies: dict[str, "KernelStrategy"] = {}
+_default_strategies: dict[str, str] = {}
 
 
 class KernelOp:
@@ -139,6 +153,104 @@ def resolve_impl(op_name: str, requested: str | None = None) -> str:
     if "pallas_interpret" in op.impls:
         return "pallas_interpret"
     raise KeyError(f"op {op_name!r} has no registered impls")
+
+
+# ----------------------------------------------------------- strategies --
+
+class KernelStrategy:
+    """One named algorithm knob shared by every implementation of an op.
+
+    ``choices`` is the closed set of algorithm names; ``env_var`` (if
+    given) is a ``REPRO_KERNEL_IMPL``-style per-knob override; ``auto``
+    is a callback receiving the call-site context kwargs (e.g.
+    ``n_candidates=``) and returning the data-dependent default.
+    """
+
+    def __init__(self, name: str, choices: tuple[str, ...],
+                 env_var: str | None = None,
+                 auto: Callable[..., str] | None = None):
+        self.name = name
+        self.choices = tuple(choices)
+        self.env_var = env_var
+        self.auto = auto
+
+    def resolve(self, requested: str | None = None, **ctx) -> str:
+        """Resolve which algorithm a call should use; logged like an impl
+        dispatch (as ``(strategy_name, choice)``)."""
+        choice = None
+        if requested is not None:
+            self._validate(requested, "explicit strategy")
+            choice = requested
+        if choice is None:
+            override = _default_strategies.get(self.name)
+            if override is not None:
+                choice = override
+        if choice is None and self.env_var:
+            env = os.environ.get(self.env_var) or None
+            if env is not None:
+                self._validate(env, f"${self.env_var}")
+                choice = env
+        if choice is None and self.auto is not None:
+            choice = self.auto(**ctx)
+            self._validate(choice, f"{self.name} auto-select")
+        if choice is None:
+            choice = self.choices[0]
+        _log.append((self.name, choice))
+        return choice
+
+    def _validate(self, choice: str, source: str) -> None:
+        if choice not in self.choices:
+            raise ValueError(f"{source} for {self.name!r} must be one of "
+                             f"{self.choices}, got {choice!r}")
+
+    def __repr__(self) -> str:
+        return f"KernelStrategy({self.name!r}, choices={self.choices})"
+
+
+def kernel_strategy(name: str, choices: tuple[str, ...] | None = None,
+                    env_var: str | None = None,
+                    auto: Callable[..., str] | None = None
+                    ) -> KernelStrategy:
+    """Get-or-create the strategy knob named ``name`` (conventionally
+    ``"<op>.<knob>"``)."""
+    if name not in _strategies:
+        if choices is None:
+            raise KeyError(f"unknown kernel strategy {name!r}; "
+                           f"registered: {sorted(_strategies)}")
+        _strategies[name] = KernelStrategy(name, choices, env_var, auto)
+    return _strategies[name]
+
+
+def get_strategy(name: str) -> KernelStrategy:
+    if name not in _strategies:
+        raise KeyError(f"unknown kernel strategy {name!r}; "
+                       f"registered: {sorted(_strategies)}")
+    return _strategies[name]
+
+
+def list_strategies() -> list[str]:
+    return sorted(_strategies)
+
+
+def set_default_strategy(name: str, choice: str | None) -> None:
+    """Process-wide strategy override (``None`` clears it)."""
+    strat = get_strategy(name)
+    if choice is None:
+        _default_strategies.pop(name, None)
+        return
+    strat._validate(choice, "set_default_strategy")
+    _default_strategies[name] = choice
+
+
+@contextmanager
+def use_strategy(name: str, choice: str | None):
+    """Scoped :func:`set_default_strategy`."""
+    prev = _default_strategies.get(name)
+    set_default_strategy(name, choice)
+    try:
+        yield
+    finally:
+        set_default_strategy(name, prev)
 
 
 # ------------------------------------------------------ dispatch records --

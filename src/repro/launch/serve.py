@@ -32,6 +32,11 @@ def main() -> None:
                     default=None,
                     help="pin the kernel-registry impl for the LSS head "
                          "(default: auto — pallas on TPU, ref elsewhere)")
+    ap.add_argument("--dedup", choices=("quadratic", "bitonic"),
+                    default=None,
+                    help="pin the lss_topk cross-table dedup strategy "
+                         "(default: auto — quadratic below the C "
+                         "crossover, bitonic above)")
     ap.add_argument("--no-lss", action="store_true",
                     help="legacy alias for --head full")
     ap.add_argument("--mode", choices=("generate", "decode"),
@@ -91,7 +96,7 @@ def main() -> None:
     n_slots = args.streams if args.mode == "decode" else args.batch
     dec = LMDecoder(state.params, cfg, lss_cfg, impl=args.impl,
                     max_streams=n_slots,
-                    max_len=16 + max(args.steps, 2))
+                    max_len=16 + max(args.steps, 2), dedup=args.dedup)
     if head != "full":
         dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:128]))
     prompt = jnp.asarray(toks[500:500 + args.batch, :16])

@@ -94,6 +94,9 @@ class Engine:
     ``impl`` pins the kernel-registry implementation the LSS heads serve
     with (``ref`` | ``pallas`` | ``pallas_interpret``); None lets the
     registry auto-select by backend (pallas on TPU, ref elsewhere).
+    ``dedup`` pins the ``lss_topk`` cross-table dedup strategy
+    (``quadratic`` | ``bitonic``); None lets the registry auto-select on
+    the candidate count C = L*P.
 
     Thread safety: every mutation of engine state — the pending request
     queue, finished results, the metrics window, and the jitted step
@@ -110,13 +113,18 @@ class Engine:
                  buckets=DEFAULT_BUCKETS,
                  mesh: jax.sharding.Mesh | None = None,
                  model_axis: str = "model",
-                 impl: str | None = None):
+                 impl: str | None = None,
+                 dedup: str | None = None):
         if head not in HEAD_KINDS:
             raise ValueError(f"head must be one of {HEAD_KINDS}, got {head}")
         if impl is not None and impl not in registry.IMPLS:
             raise ValueError(
                 f"impl must be one of {registry.IMPLS} or None, got {impl}")
+        if dedup is not None:
+            registry.get_strategy("lss_topk.dedup")._validate(
+                dedup, "Engine(dedup=...)")
         self.impl = impl
+        self.dedup = dedup
         self.embed_fn = embed_fn
         self.w = w.astype(jnp.float32)
         self.b = (jnp.zeros((w.shape[0],), jnp.float32) if b is None
@@ -206,7 +214,7 @@ class Engine:
                 w_aug = None if self.index.w_bucketed is not None \
                     else self._w_aug
                 head = make_lss_head(self.index, w_aug, self.top_k,
-                                     impl=self.impl)
+                                     impl=self.impl, dedup=self.dedup)
             else:
                 mesh = self._get_mesh()
                 tp = mesh.shape[self.model_axis]
@@ -218,7 +226,8 @@ class Engine:
                 head = make_sharded_lss_head(stack, w_stack, mesh,
                                              self.lss_cfg, m_local,
                                              self.top_k, self.model_axis,
-                                             impl=self.impl)
+                                             impl=self.impl,
+                                             dedup=self.dedup)
         self._heads[kind] = head
         return head
 
@@ -512,7 +521,7 @@ class LMDecoder:
 
     def __init__(self, params: dict, cfg, lss_cfg: LSSConfig | None = None,
                  impl: str | None = None, *, max_streams: int = 8,
-                 max_len: int | None = None):
+                 max_len: int | None = None, dedup: str | None = None):
         from repro.models import transformer as T
         self.T = T
         self.params = params
@@ -523,7 +532,7 @@ class LMDecoder:
         self._scheds: dict[str, Any] = {}
         self.engine = Engine(None, self.head_weights().astype(jnp.float32),
                              None, lss_cfg or LSSConfig(), top_k=1,
-                             head="full", impl=impl)
+                             head="full", impl=impl, dedup=dedup)
 
     @property
     def index(self):

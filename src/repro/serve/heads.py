@@ -55,17 +55,19 @@ def make_full_head(w: jax.Array, b: jax.Array, top_k: int
 
 
 def make_lss_head(index: LSSIndex, w_aug: jax.Array | None, top_k: int,
-                  impl: str | None = None
+                  impl: str | None = None, dedup: str | None = None
                   ) -> Callable[[jax.Array], HeadOutput]:
     """Algorithm 2 over one fitted index (single-device).
 
     ``impl`` pins the kernel-registry implementation serving the path
-    (``ref`` | ``pallas`` | ``pallas_interpret``; None = backend auto).
+    (``ref`` | ``pallas`` | ``pallas_interpret``; None = backend auto);
+    ``dedup`` pins the cross-table dedup strategy (``quadratic`` |
+    ``bitonic``; None = auto-select on the candidate count).
     """
 
     def head(q: jax.Array) -> HeadOutput:
         out = lss_forward(q.astype(jnp.float32), index, w_aug, top_k,
-                          impl=impl)
+                          impl=impl, dedup=dedup)
         return HeadOutput(out.top_logits, out.top_ids, out.sample_size,
                           out.cand_ids)
 
@@ -126,7 +128,8 @@ def shard_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig,
 def make_sharded_lss_head(index_stack, w_stack, mesh, cfg: LSSConfig,
                           m_local: int, top_k: int,
                           model_axis: str = "model",
-                          impl: str | None = None
+                          impl: str | None = None,
+                          dedup: str | None = None
                           ) -> Callable[[jax.Array], HeadOutput]:
     """Vocab-sharded Algorithm 2 (sample size psum'd across shards).
 
@@ -135,7 +138,7 @@ def make_sharded_lss_head(index_stack, w_stack, mesh, cfg: LSSConfig,
     the top-k set.
     """
     fwd = make_sharded_predict(mesh, model_axis, cfg, m_local, top_k,
-                               with_aux=True, impl=impl)
+                               with_aux=True, impl=impl, dedup=dedup)
 
     def head(q: jax.Array) -> HeadOutput:
         logits, ids, sample = fwd(q.astype(jnp.float32), index_stack,

@@ -13,6 +13,10 @@ otherwise — the invariants are:
     alike;
   * the shard-local ranking over real rows equals brute force, i.e.
     masking removed the padding WITHOUT disturbing real candidates.
+
+Also covers the fused kernel's QUERY-tile padding (the other padding
+axis): B not divisible by the query-block height pads with rows that
+never reach any real query's top-k — interpret == ref at every B.
 """
 
 import jax
@@ -86,6 +90,37 @@ def test_shard_index_padding_invariants(m, n_shards):
     for i in range(N_QUERIES):
         top = sorted(merged[i], reverse=True)[:TOP_K]
         assert all(0 <= gid < m for _, gid in top)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=1, max_value=19))
+def test_query_block_padding_parity(b):
+    """The fused kernel's query-blocked grid pads B up to the tile
+    multiple with rows that can never reach a real query's top-k: at
+    every B — divisible by the tile height or not — interpret-mode
+    outputs are bit-identical to the ref across all LSSForward fields,
+    and the planned grid covers exactly ceil(B / Bq) tiles (the
+    query-tile analogue of shard_index's marker-row invariants)."""
+    from repro.core.lss import lss_forward
+    from repro.kernels.lss_topk.ops import effective_block_q, grid_steps
+
+    cfg = LSSConfig(k_bits=3, n_tables=2, use_bucket_major=True)
+    w = jax.random.normal(jax.random.PRNGKey(b * 11 + 1), (40, D))
+    w_aug = simhash.augment_neurons(w, None)
+    theta = simhash.init_hyperplanes(jax.random.PRNGKey(1), D + 1,
+                                     cfg.k_bits, cfg.n_tables)
+    from repro.core.lss import build_index
+    index = build_index(w_aug, theta, cfg)
+    q = jax.random.normal(jax.random.PRNGKey(b), (b, D))
+    ref = lss_forward(q, index, None, top_k=TOP_K, impl="ref")
+    out = lss_forward(q, index, None, top_k=TOP_K,
+                      impl="pallas_interpret")
+    for name, r, o in zip(ref._fields, ref, out):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o),
+                                      err_msg=f"B={b} {name}")
+        assert np.asarray(o).shape[0] == b       # padding sliced off
+    bq = effective_block_q(b)
+    assert grid_steps(b) == -(-b // bq)
 
 
 @settings(max_examples=4, deadline=None)

@@ -86,11 +86,13 @@ def test_bucket_logits_matches_full_index_pipeline():
                                np.asarray(got)[mask], rtol=1e-4, atol=1e-4)
 
 
-def test_lss_topk_warns_once_past_dedup_comfort_limit():
-    """C = L*P > ~2k: the O(C^2) in-kernel dedup stops fitting in VMEM;
-    the dispatching wrapper must say so exactly once per shape."""
+def test_lss_topk_large_c_auto_switches_instead_of_warning():
+    """Past the old ~2k comfort limit the registry now auto-switches to
+    the bitonic dedup — no warning, because the bitonic working set
+    still fits VMEM at this shape."""
     import warnings
 
+    from repro.kernels import registry
     from repro.kernels.lss_topk import ops
 
     d_aug, cap = 8, 2560                        # C = 1 * 2560 > 2048
@@ -98,15 +100,39 @@ def test_lss_topk_warns_once_past_dedup_comfort_limit():
     theta = jnp.ones((d_aug, 1))                # K=1 bit, L=1 table
     tids = jnp.full((1, 2, cap), -1, jnp.int32)
     wb = jnp.zeros((1, 2, cap, d_aug))
-    ops._warn_large_candidate_count.cache_clear()
-    with pytest.warns(UserWarning, match=r"C = L\*P = 1\*2560"):
-        ops.lss_topk(q, theta, tids, wb, top_k=3, impl="ref")
-    with warnings.catch_warnings():             # second call: silent
-        warnings.simplefilter("error")
-        ops.lss_topk(q, theta, tids, wb, top_k=3, impl="ref")
-    # under the comfort limit: never warns
-    small = jnp.full((1, 2, 64), -1, jnp.int32)
+    registry.reset_dispatch_log()
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        ops.lss_topk(q, theta, small, jnp.zeros((1, 2, 64, d_aug)),
-                     top_k=3, impl="ref")
+        ops.lss_topk(q, theta, tids, wb, top_k=3, impl="ref")
+    assert ("lss_topk.dedup", "bitonic") in registry.dispatch_log()
+
+
+def test_lss_topk_warns_once_past_vmem_budget():
+    """The warning survives, but its limit is DERIVED from the shape:
+    a dedup working set past the VMEM budget says so, once per shape."""
+    import warnings
+
+    from repro.kernels.lss_topk import ops
+
+    d_aug, cap = 8, 2048                        # quadratic ws ~ 9*C^2
+    assert ops.lss_topk_vmem_bytes(cap, d_aug, cap, dedup="quadratic") \
+        > ops.VMEM_BUDGET_BYTES
+    assert ops.lss_topk_vmem_bytes(cap, d_aug, cap, dedup="bitonic") \
+        < ops.VMEM_BUDGET_BYTES
+    q = jnp.zeros((1, d_aug))
+    theta = jnp.ones((d_aug, 1))                # K=1 bit, L=1 table
+    tids = jnp.full((1, 2, cap), -1, jnp.int32)
+    wb = jnp.zeros((1, 2, cap, d_aug))
+    ops._warn_vmem_exceeded.cache_clear()
+    with pytest.warns(UserWarning, match=r"VMEM working set"):
+        ops.lss_topk(q, theta, tids, wb, top_k=3, impl="ref",
+                     dedup="quadratic")
+    with warnings.catch_warnings():             # second call: silent
+        warnings.simplefilter("error")
+        ops.lss_topk(q, theta, tids, wb, top_k=3, impl="ref",
+                     dedup="quadratic")
+    # same shape under the auto-selected bitonic strategy: never warns
+    ops._warn_vmem_exceeded.cache_clear()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ops.lss_topk(q, theta, tids, wb, top_k=3, impl="ref")

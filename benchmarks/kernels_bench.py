@@ -1,23 +1,36 @@
-"""C-sweep microbench for the ``lss_topk`` ref path's dedup strategies.
+"""C-sweep microbench for the ``lss_topk`` ref path's strategy knobs.
 
-Times the FULL fused-op ref path (hash -> slab gather -> dedup -> top-k)
-per dedup strategy across candidate counts C = L*P, so the quadratic /
-bitonic comparison reflects end-to-end us/query, not an isolated mask.
-Records the measured crossover (the smallest swept C where bitonic wins)
-— that number is what ``REPRO_LSS_DEDUP_AUTO_C`` /
-``kernels.lss_topk.dedup.set_dedup_auto_threshold`` should be fed, so
-the registry's auto-switch is data-derived rather than guessed.
+Two sweeps, one artifact:
+
+* **dedup** — times the FULL fused-op ref path (hash -> slab gather ->
+  dedup -> top-k) per dedup strategy across candidate counts C = L*P,
+  so the quadratic / bitonic comparison reflects end-to-end us/query,
+  not an isolated mask.  Records the measured crossover (the smallest
+  swept C where bitonic wins) — that number is what
+  ``REPRO_LSS_DEDUP_AUTO_C`` /
+  ``kernels.lss_topk.dedup.set_dedup_auto_threshold`` should be fed, so
+  the registry's auto-switch is data-derived rather than guessed.
+* **slab_dtype** — builds one REAL synthetic-WOL index per storage
+  format (fp32 | bf16 | int8, see ``kernels.lss_topk.slabs``) from the
+  same weights/hyperplanes, and records per format: us/query, the
+  per-query slab DMA byte count (``lss_topk_slab_dma_bytes`` — the ~3.6x
+  int8 win at d=64), top-k label recall against the EXACT brute-force
+  WOL top-k, and the recall delta vs the fp32 index.  Candidate
+  retrieval is identical across formats (tables hash fp32 weights), so
+  the delta isolates exactly what quantization can cost: ranked top-k
+  membership.
 
 Doubles as the CI smoke guard: ``--guard-c 512 --guard-ratio 1.5`` fails
-the run when bitonic regresses past 1.5x quadratic at C = 512, so the
-sorting network can never quietly pessimize the small-C regime the
-quadratic mask owns.
+the run when bitonic regresses past 1.5x quadratic at C = 512, and
+``--guard-recall-delta 0.005`` fails it when a quantized format's label
+recall drops more than 0.5% below fp32 — so neither the sorting network
+nor storage compression can quietly pessimize the regimes they own.
 
     python -m benchmarks.kernels_bench --cs 512,2048,8192 \
-        --guard-c 512 --guard-ratio 1.5
+        --guard-c 512 --guard-ratio 1.5 --guard-recall-delta 0.005
 
 Writes ``BENCH_kernels.json`` (also embedded by ``benchmarks.run``'s
-kernels section).
+kernels section; schema checked by ``tools/check_bench_schema.py``).
 """
 
 from __future__ import annotations
@@ -92,10 +105,71 @@ def bench_dedup_sweep(cs=(512, 2048, 8192), b: int = 8, d: int = 64,
     return {"rows": rows, "crossover_c": crossover}
 
 
+def bench_slab_dtype_sweep(m: int = 4096, d: int = 63, b: int = 64,
+                           top_k: int = 10, k_bits: int = 4,
+                           n_tables: int = 4, seed: int = 0,
+                           repeats: int = 3) -> dict:
+    """One synthetic-WOL index per slab storage format; returns
+    ``{"rows": [...]}`` with us/query, per-query slab DMA bytes, and
+    top-k label recall (+ delta vs fp32) per format.
+
+    Recall target: the exact brute-force WOL top-k (``q @ w_aug.T``),
+    i.e. the labels a full head would rank — the quantity LSS serving
+    exists to approximate.  The fp32 row's recall is the retrieval
+    ceiling (what hashing alone loses); quantized rows can only differ
+    from it through ranking error, so ``recall_delta_vs_fp32`` is a pure
+    measurement of storage-compression cost."""
+    from repro.core import simhash
+    from repro.core.lss import LSSConfig, build_index, lss_forward
+    from repro.kernels.lss_topk.slabs import (SLAB_DTYPE_CHOICES,
+                                              lss_topk_slab_dma_bytes)
+
+    kw, kq = jax.random.split(jax.random.PRNGKey(seed), 2)
+    w = jax.random.normal(kw, (m, d), jnp.float32)
+    q = jax.random.normal(kq, (b, d), jnp.float32)
+    w_aug = simhash.augment_neurons(w)
+    q_aug = simhash.augment_queries(q)
+    # ground truth: exact full-WOL top-k labels per query
+    exact = jax.lax.top_k(q_aug @ w_aug.T, top_k)[1]          # [B, k]
+
+    rows = []
+    recall_fp32 = None
+    for sdt in SLAB_DTYPE_CHOICES:
+        cfg = LSSConfig(k_bits=k_bits, n_tables=n_tables, slab_dtype=sdt)
+        theta = simhash.init_hyperplanes(jax.random.PRNGKey(seed + 2),
+                                         w_aug.shape[1], k_bits, n_tables)
+        index = build_index(w_aug, theta, cfg)
+        cap = index.tables.capacity
+        f = jax.jit(functools.partial(lss_forward, top_k=top_k, impl="ref"))
+        out = jax.block_until_ready(f(q, index, None))
+        hit = (exact[:, :, None] == out.top_ids[:, None, :]).any(-1)
+        recall = float(jnp.mean(hit))
+        if sdt == "fp32":
+            recall_fp32 = recall
+        us = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for _ in range(3):
+                jax.block_until_ready(f(q, index, None))
+            us = min(us, (time.perf_counter() - t0) / 3 / b * 1e6)
+        rows.append({
+            "kernel": "lss_topk", "impl": "ref", "slab_dtype": sdt,
+            "us_per_query": round(us, 3),
+            "dma_bytes_per_query": lss_topk_slab_dma_bytes(
+                n_tables, cap, w_aug.shape[1], sdt),
+            "recall": round(recall, 4),
+            "recall_delta_vs_fp32": round(recall_fp32 - recall, 4),
+            "shape": f"m{m}_B{b}_d{d}_K{k_bits}_L{n_tables}_P{cap}",
+            "repeats": repeats,
+        })
+    return {"rows": rows}
+
+
 def check_guard(rec: dict, guard_c: int, guard_ratio: float) -> str | None:
     """None if ok, else a failure message: bitonic must stay within
     ``guard_ratio`` x quadratic at the small-C guard point."""
-    us = {(r["c"], r["dedup"]): r["us_per_query"] for r in rec["rows"]}
+    us = {(r["c"], r["dedup"]): r["us_per_query"] for r in rec["rows"]
+          if "c" in r and "dedup" in r}
     quad, bit = us.get((guard_c, "quadratic")), us.get((guard_c, "bitonic"))
     if quad is None or bit is None:
         return f"guard C={guard_c} not in sweep"
@@ -103,6 +177,20 @@ def check_guard(rec: dict, guard_c: int, guard_ratio: float) -> str | None:
         return (f"bitonic regresses the small-C regime: {bit:.1f} us/q vs "
                 f"quadratic {quad:.1f} at C={guard_c} "
                 f"(> {guard_ratio}x)")
+    return None
+
+
+def check_recall_guard(rec: dict, max_delta: float) -> str | None:
+    """None if ok, else a failure message: no quantized slab format may
+    lose more than ``max_delta`` label recall vs the fp32 index."""
+    slab_rows = [r for r in rec["rows"] if "slab_dtype" in r]
+    if not slab_rows:
+        return "no slab_dtype rows in sweep"
+    worst = max(slab_rows, key=lambda r: r["recall_delta_vs_fp32"])
+    if worst["recall_delta_vs_fp32"] > max_delta:
+        return (f"slab_dtype={worst['slab_dtype']} loses "
+                f"{worst['recall_delta_vs_fp32']:.4f} label recall vs fp32 "
+                f"(> {max_delta}) at {worst['shape']}")
     return None
 
 
@@ -140,6 +228,11 @@ def main() -> None:
                     help="fail if bitonic exceeds guard-ratio x quadratic "
                          "at this C")
     ap.add_argument("--guard-ratio", type=float, default=1.5)
+    ap.add_argument("--guard-recall-delta", type=float, default=None,
+                    help="fail if any quantized slab format loses more "
+                         "than this label recall vs fp32")
+    ap.add_argument("--skip-slab-sweep", action="store_true",
+                    help="dedup sweep only (no slab_dtype rows)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     cs = tuple(int(x) for x in args.cs.split(","))
@@ -149,12 +242,25 @@ def main() -> None:
         print(f"kernel_lss_topk_ref_{r['dedup']}_c{r['c']},"
               f"{r['us_per_query']:.3f},{r['shape']}")
     print(f"crossover_c={rec['crossover_c']}")
+    if not args.skip_slab_sweep:
+        slab = bench_slab_dtype_sweep()
+        rec["rows"].extend(slab["rows"])
+        for r in slab["rows"]:
+            print(f"kernel_lss_topk_ref_slab_{r['slab_dtype']},"
+                  f"{r['us_per_query']:.3f},{r['shape']},"
+                  f"dma={r['dma_bytes_per_query']},"
+                  f"recall={r['recall']:.4f},"
+                  f"delta={r['recall_delta_vs_fp32']:.4f}")
     guard = None
     rec["guard"] = None
     if args.guard_c is not None:
         guard = check_guard(rec, args.guard_c, args.guard_ratio)
         rec["guard"] = {"c": args.guard_c, "ratio": args.guard_ratio,
                         "failed": guard}
+    if guard is None and args.guard_recall_delta is not None:
+        guard = check_recall_guard(rec, args.guard_recall_delta)
+        rec["recall_guard"] = {"max_delta": args.guard_recall_delta,
+                               "failed": guard}
     write_artifact(rec, args.out)
     if guard is not None:
         print(f"GUARD FAILED: {guard}", file=sys.stderr)

@@ -83,6 +83,17 @@ def bench_kernels() -> tuple[dict, list[str]]:
                     f"{r['us_per_query']:.3f},{r['shape']}")
     rows.append(f"kernel_lss_topk_dedup_crossover,0,"
                 f"crossover_c={sweep['crossover_c']}")
+
+    # slab_dtype storage sweep: us/query, per-query slab DMA bytes, and
+    # top-k label recall delta vs fp32, one synthetic-WOL index per format
+    from benchmarks.kernels_bench import bench_slab_dtype_sweep
+    slab = bench_slab_dtype_sweep()
+    recs.extend(slab["rows"])
+    for r in slab["rows"]:
+        rows.append(f"kernel_lss_topk_ref_slab_{r['slab_dtype']},"
+                    f"{r['us_per_query']:.3f},{r['shape']},"
+                    f"dma={r['dma_bytes_per_query']},"
+                    f"recall_delta={r['recall_delta_vs_fp32']:.4f}")
     return {"rows": recs, "crossover_c": sweep["crossover_c"]}, rows
 
 

@@ -10,7 +10,7 @@ skipping Algorithm 1 keeps the benchmark CPU-friendly.  K is sized so the
 expected candidate set is ~1k neurons regardless of m, which is exactly
 the regime where the paper reports its ~5x win over the exact head.
 
-Two sections:
+Three sections:
 
   * the head comparison (full | lss | lss-sharded) on the gather-layout
     index at 50k-500k classes (the bucket-major slab for m=500k would be
@@ -20,7 +20,14 @@ Two sections:
     TPU, ``pallas``) so ``BENCH_serve.json`` reports ref-vs-pallas
     us/query side by side through the SAME fused ``lss_topk`` hot path.
     Interpret mode executes the kernel body per grid step in Python — it
-    validates the fused pipeline, it does not represent TPU speed.
+    validates the fused pipeline, it does not represent TPU speed;
+  * the slab-storage dimension (``lss_topk.slab_dtype``): one bucket-major
+    engine per storage format, each row carrying the analytic index slab
+    byte count.  The full pass (BENCH_FAST=0) adds an m=2,000,000 int8
+    row — at that size the fp32 slab tensor is ~1 GB and does not fit
+    the CI footprint, while the int8 index (~270 MB incl. scales) serves
+    fine: storage compression moves the "largest m per host" wall, which
+    is the paper-level point of the knob.
 
 Env: BENCH_FAST=1 (default when run via benchmarks.run) shrinks sizes
 and iteration counts; BENCH_SERVE_OUT overrides the artifact path.
@@ -128,13 +135,54 @@ def bench_impls(fast: bool) -> list[dict]:
     return rows
 
 
+def _slab_bytes(cfg: LSSConfig, m: int, d_aug: int, slab_dtype: str) -> int:
+    """Analytic bucket-major index bytes for one storage format: the
+    ``[L, 2^K, P, d_aug]`` slab tensor + int32 ids + (int8 only) the
+    fp32 scale table."""
+    from repro.kernels.lss_topk.slabs import slab_itemsize
+    slots = cfg.n_tables * 2 ** cfg.k_bits * cfg.resolve_capacity(m)
+    n = slots * d_aug * slab_itemsize(slab_dtype) + slots * 4
+    if slab_dtype == "int8":
+        n += slots * 4
+    return n
+
+
+def bench_slab_storage(fast: bool) -> list[dict]:
+    """One bucket-major engine per slab storage format; the full pass
+    adds the m=2M int8 row whose fp32 equivalent cannot fit CI."""
+    m = 20_000 if fast else 100_000
+    q = jax.random.normal(jax.random.PRNGKey(1), (IMPL_BATCH, D_MODEL),
+                          jnp.float32)
+    points = [(m, sdt) for sdt in ("fp32", "bf16", "int8")]
+    if not fast:
+        # fp32 at m=2M would be a ~1 GB slab tensor — int8 only
+        points.append((2_000_000, "int8"))
+    rows = []
+    for m_i, sdt in points:
+        w = jax.random.normal(jax.random.PRNGKey(0), (m_i, D_MODEL),
+                              jnp.float32)
+        cfg = _lss_cfg(m_i, bucket_major=True, n_tables=2,
+                       target=IMPL_TARGET_SAMPLE)
+        eng = Engine(None, w, None, cfg, top_k=TOP_K,
+                     buckets=(IMPL_BATCH,), impl="ref", slab_dtype=sdt)
+        eng.fit_random(jax.random.PRNGKey(2))
+        iters = 5 if fast else 10
+        row = _row(eng, q, "lss", "ref", m_i, IMPL_BATCH, iters, None)
+        row["slab_dtype"] = sdt
+        row["slab_bytes"] = _slab_bytes(cfg, m_i, D_MODEL + 1, sdt)
+        rows.append(row)
+        del eng, w
+    return rows
+
+
 def bench_serving(fast: bool = True) -> dict:
     return {
         "bench": "serve",
         "backend": jax.default_backend(),
         "n_devices": len(jax.devices()),
         "fast": fast,
-        "rows": bench_heads(fast) + bench_impls(fast),
+        "rows": (bench_heads(fast) + bench_impls(fast)
+                 + bench_slab_storage(fast)),
     }
 
 

@@ -22,6 +22,16 @@ auto-switches to the bitonic sorting network once C = L*P crosses the
 measured crossover, so large candidate counts are a strategy change,
 not a hard wall — a warning fires only past the VMEM budget derived
 from the actual (C, d, P) shape (``kernels.lss_topk.ops``).
+
+Slab storage is a third knob, resolved HERE at :func:`build_index` time
+rather than per call: ``LSSConfig.slab_dtype`` (``fp32`` | ``bf16`` |
+``int8``; None = the ``lss_topk.slab_dtype`` registry strategy, env
+``REPRO_LSS_SLAB_DTYPE``).  A quantized index stores its bucket-major
+slabs in the compressed format (int8 carries a per-neuron-row scale
+table in ``LSSIndex.w_scale``) and both lss_topk impls dequantize on
+the fly.  Because ``fit_lss`` rebuilds the index through this same
+constructor every IUL epoch, refits REQUANTIZE automatically — there is
+no path that silently mixes fp32 tables with stale quantized slabs.
 """
 
 from __future__ import annotations
@@ -34,6 +44,8 @@ import jax.numpy as jnp
 from repro.core import simhash
 from repro.core.tables import LSSTables, build_tables, bucketize_weights
 from repro.kernels import bucket_logits, lss_topk, simhash_codes
+from repro.kernels.lss_topk.slabs import (dequantize_slabs, quantize_slabs,
+                                          resolve_slab_dtype)
 
 __all__ = [
     "LSSConfig", "LSSIndex", "build_index", "retrieve", "dedup_mask",
@@ -49,6 +61,9 @@ class LSSConfig(NamedTuple):
     n_tables: int = 1
     capacity: int = 0          # 0 -> auto: 2 * m / 2^K rounded up to 8
     use_bucket_major: bool = True   # materialise [L, 2^K, P, d] weight slabs
+    # slab storage format: fp32 | bf16 | int8, None = registry strategy
+    # (lss_topk.slab_dtype / $REPRO_LSS_SLAB_DTYPE, auto -> fp32)
+    slab_dtype: str | None = None
     # IUL pair-mining thresholds (inner-product quantiles; see iul.py)
     t1_quantile: float = 0.3
     t2_quantile: float = 0.7
@@ -65,26 +80,45 @@ class LSSConfig(NamedTuple):
 
 
 class LSSIndex(NamedTuple):
-    """The frozen serving-time index (a pytree; shardable under pjit)."""
+    """The frozen serving-time index (a pytree; shardable under pjit).
+
+    ``w_bucketed`` may store fp32, bf16 or int8 slabs — the storage
+    format is recovered from the array dtype, and ``w_scale`` is the
+    int8 format's per-neuron-row fp32 scale table (None otherwise).
+    Hash tables are always built from the fp32 ``w_aug``, so candidate
+    retrieval (the paper's label recall) is identical across formats;
+    only the ranked logits see quantization error.
+    """
 
     theta: jax.Array             # [d_aug, K*L] learned hyperplanes
     tables: LSSTables            # bucket-major neuron ids
     w_bucketed: jax.Array | None  # [L, 2^K, P, d_aug] or None (gather path)
+    w_scale: jax.Array | None = None  # [L, 2^K, P] f32, int8 storage only
 
 
 jax.tree_util.register_pytree_node(
     LSSIndex,
-    lambda i: ((i.theta, i.tables, i.w_bucketed), None),
+    lambda i: ((i.theta, i.tables, i.w_bucketed, i.w_scale), None),
     lambda _, leaves: LSSIndex(*leaves),
 )
 
 
 def build_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig) -> LSSIndex:
-    """(Re)build tables (and slabs) for the current hyperplanes."""
+    """(Re)build tables (and slabs) for the current hyperplanes.
+
+    Resolves the slab storage format (``cfg.slab_dtype`` >
+    ``lss_topk.slab_dtype`` strategy) and quantizes the bucket-major
+    slabs at construction, so every rebuild — including each IUL refit
+    epoch inside ``fit_lss``'s jitted ``rebuild`` — requantizes from the
+    current fp32 weights.
+    """
     cap = cfg.resolve_capacity(w_aug.shape[0])
     tables = build_tables(w_aug, theta, cfg.k_bits, cfg.n_tables, cap)
-    wb = bucketize_weights(w_aug, tables) if cfg.use_bucket_major else None
-    return LSSIndex(theta, tables, wb)
+    if not cfg.use_bucket_major:
+        return LSSIndex(theta, tables, None, None)
+    wb, w_scale = quantize_slabs(bucketize_weights(w_aug, tables),
+                                 resolve_slab_dtype(cfg.slab_dtype))
+    return LSSIndex(theta, tables, wb, w_scale)
 
 
 def retrieve(q_aug: jax.Array, index: LSSIndex, impl: str | None = None
@@ -150,7 +184,9 @@ def sparse_logits_bucketed(q_aug: jax.Array, index: LSSIndex,
     path, the scalar-prefetch Pallas kernel on TPU.
     """
     t = index.tables
-    wb = index.w_bucketed                                 # [L, 2^K, P, d]
+    # this unfused path hands whole slabs to bucket_logits, so widen
+    # quantized storage up front (the fused lss_topk path widens in-kernel)
+    wb = dequantize_slabs(index.w_bucketed, index.w_scale)  # [L, 2^K, P, d]
     w_flat = wb.reshape(t.n_tables * t.n_buckets, t.capacity, wb.shape[-1])
     slab_ids = buckets + jnp.arange(
         t.n_tables, dtype=buckets.dtype)[None, :] * t.n_buckets   # [B, L]
@@ -190,7 +226,8 @@ def lss_forward(q: jax.Array, index: LSSIndex, w_aug: jax.Array | None,
     if index.w_bucketed is not None:
         t = index.tables
         out = lss_topk(q_aug, index.theta, t.table_ids, index.w_bucketed,
-                       top_k=top_k, impl=impl, dedup=dedup)
+                       top_k=top_k, impl=impl, dedup=dedup,
+                       w_scale=index.w_scale)
         return LSSForward(*out)
     cand_ids, _ = retrieve(q_aug, index, impl=impl)
     logits = sparse_logits_gather(q_aug, w_aug, cand_ids)

@@ -11,6 +11,11 @@ Per query:
 This replaces the paper's "embarrassingly parallel over CPU threads" claim
 with "embarrassingly parallel over vocab shards" and makes the WOL head's
 communication volume independent of vocabulary size.
+
+Quantized slab storage composes transparently: ``LSSIndex.w_scale`` is
+an ordinary pytree leaf, so per-shard int8 indexes stack, shard over the
+model axis, and flow through shard_map exactly like the fp32 slabs —
+nothing here is storage-format aware.
 """
 
 from __future__ import annotations

@@ -15,6 +15,13 @@ and, optionally, a *bucket-major weight layout*:
 Buckets that overflow capacity ``P`` are truncated (the IUL loss actively
 balances load — paper §3.3 property 3); the overflow fraction is reported
 as a first-class metric so capacity can be sized.
+
+``bucketize_weights`` always emits fp32 slabs; quantized storage
+(``lss_topk.slab_dtype`` = bf16 | int8) is applied on top by
+``core.lss.build_index`` via ``kernels.lss_topk.slabs.quantize_slabs``,
+AFTER bucketization — empty (-1) slots are zero rows, which every format
+round-trips to exactly 0, so the "padded slots score logit 0, masked by
+id" contract here is storage-format independent.
 """
 
 from __future__ import annotations

@@ -12,7 +12,9 @@ Ops can also expose *strategy* knobs — algorithm choices every impl
 honors, resolved the same way (explicit arg > ``use_strategy`` > env >
 auto-select on shape): ``lss_topk.dedup`` picks the cross-table dedup
 (``quadratic`` below the measured C crossover, ``bitonic`` above; see
-``repro.kernels.lss_topk.dedup``).
+``repro.kernels.lss_topk.dedup``); ``lss_topk.slab_dtype`` picks the
+bucket-major slab storage format (``fp32`` | ``bf16`` | ``int8``,
+resolved once at index build time; see ``repro.kernels.lss_topk.slabs``).
 """
 from repro.kernels import registry
 from repro.kernels.simhash_codes import simhash_codes

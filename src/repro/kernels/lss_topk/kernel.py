@@ -22,6 +22,15 @@ slabs is ever materialised, which is the point of LSS: the full head
 streams ``m*d`` weights per batch, this kernel streams ``L*P*d`` per
 query with no HBM round-trips for the intermediate codes or logits.
 
+Quantized slab storage (``lss_topk.slab_dtype``, see
+``kernels.lss_topk.slabs``): the slab scratch inherits the storage dtype,
+so bf16 slabs halve and int8 slabs quarter the DMA bytes per fetch.  For
+int8 each fetch also streams the slab's ``[P]`` fp32 scale row through a
+third rotating scratch, and the kernel dequantizes IN VMEM right before
+the matmul (``w.astype(f32) * scale[:, None]`` — elementwise, so the
+operand matrix is bit-identical to the jnp oracle's up-front widening and
+the interpret-mode exactness contract below extends to every format).
+
 Query blocking (``grid=(ceil(B/Bq),)``) amortises per-step dispatch and
 turns the slab product into an MXU-shaped ``[Bq, d] @ [d, P]`` matmul
 (row b of the product is that query's logits; the other rows ride the
@@ -130,12 +139,21 @@ def _topk_bitonic_tile(cand, logits, top_k):
 
 
 def _make_kernel(k_bits: int, n_tables: int, top_k: int, cap: int,
-                 block_q: int, dedup: str):
+                 block_q: int, dedup: str, quantized: bool):
     n_buckets = 2 ** k_bits
 
-    def kernel(q_ref, theta_ref, pack_ref, tids_hbm, w_hbm,
-               top_l_ref, top_i_ref, sample_ref, cand_ref,
-               w_vmem, ids_vmem, sem_w, sem_i):
+    def kernel(*refs):
+        # int8 storage threads one extra HBM input (the per-row scales)
+        # and one extra rotating scratch + semaphore through the ref list
+        if quantized:
+            (q_ref, theta_ref, pack_ref, tids_hbm, w_hbm, scales_hbm,
+             top_l_ref, top_i_ref, sample_ref, cand_ref,
+             w_vmem, ids_vmem, scale_vmem, sem_w, sem_i, sem_s) = refs
+        else:
+            (q_ref, theta_ref, pack_ref, tids_hbm, w_hbm,
+             top_l_ref, top_i_ref, sample_ref, cand_ref,
+             w_vmem, ids_vmem, sem_w, sem_i) = refs
+            scales_hbm = scale_vmem = sem_s = None
         # ---- stage 1: simhash codes for the whole tile ----------------
         q = q_ref[...].astype(jnp.float32)                    # [Bq, d]
         # same normalization as core.simhash.unit (hash definition)
@@ -160,11 +178,16 @@ def _make_kernel(k_bits: int, n_tables: int, top_k: int, cap: int,
 
         def copies(idx, slot):
             slab = slab_of(idx)
-            return (pltpu.make_async_copy(w_hbm.at[slab], w_vmem.at[slot],
-                                          sem_w.at[slot]),
-                    pltpu.make_async_copy(tids_hbm.at[slab],
-                                          ids_vmem.at[slot],
-                                          sem_i.at[slot]))
+            cps = (pltpu.make_async_copy(w_hbm.at[slab], w_vmem.at[slot],
+                                         sem_w.at[slot]),
+                   pltpu.make_async_copy(tids_hbm.at[slab],
+                                         ids_vmem.at[slot],
+                                         sem_i.at[slot]))
+            if quantized:
+                cps += (pltpu.make_async_copy(scales_hbm.at[slab],
+                                              scale_vmem.at[slot],
+                                              sem_s.at[slot]),)
+            return cps
 
         for cp in copies(0, 0):
             cp.start()
@@ -179,6 +202,10 @@ def _make_kernel(k_bits: int, n_tables: int, top_k: int, cap: int,
                 cp.wait()
             b, t = divmod(idx, n_tables)
             w = w_vmem[slot].astype(jnp.float32)              # [P, d]
+            if quantized:
+                # in-VMEM dequantize: same elementwise op as the
+                # oracle's dequantize_int8_rows, so bit-identical
+                w = w * scale_vmem[slot].reshape(cap, 1)
             blk = jnp.matmul(q, w.T,
                              preferred_element_type=jnp.float32)  # [Bq, P]
             logit_rows[b][t] = blk[b:b + 1, :]                # this query's
@@ -210,7 +237,8 @@ def _make_kernel(k_bits: int, n_tables: int, top_k: int, cap: int,
                                              "block_q", "dedup",
                                              "interpret"))
 def lss_topk_pallas(q_aug: jax.Array, theta: jax.Array, tids_flat: jax.Array,
-                    w_flat: jax.Array, *, k_bits: int, n_tables: int,
+                    w_flat: jax.Array, scales_flat: jax.Array | None = None,
+                    *, k_bits: int, n_tables: int,
                     top_k: int, block_q: int = DEFAULT_BLOCK_Q,
                     dedup: str = "quadratic", interpret: bool = False
                     ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -221,7 +249,10 @@ def lss_topk_pallas(q_aug: jax.Array, theta: jax.Array, tids_flat: jax.Array,
                  ``block_q`` (``ops.py`` pads B; pads d on TPU).
       theta:     ``[d, K*L]`` hyperplanes.
       tids_flat: int32 ``[S, P]`` flattened bucket-major ids (S = L*2^K).
-      w_flat:    ``[S, P, d]`` flattened bucket-major slabs.
+      w_flat:    ``[S, P, d]`` flattened bucket-major slabs
+                 (fp32 | bf16 | int8 storage).
+      scales_flat: fp32 ``[S, P]`` per-neuron-row scales — required iff
+                 ``w_flat`` is int8 (``lss_topk.slab_dtype = int8``).
       block_q:   query rows per grid step (``grid=(B/block_q,)``).
       dedup:     ``quadratic`` | ``bitonic`` (resolved by ``ops.py``).
 
@@ -238,22 +269,40 @@ def lss_topk_pallas(q_aug: jax.Array, theta: jax.Array, tids_flat: jax.Array,
     n_cand = n_tables * cap
     assert top_k <= n_cand, (top_k, n_cand)
     assert dedup in ("quadratic", "bitonic"), dedup
+    quantized = w_flat.dtype == jnp.int8
+    assert quantized == (scales_flat is not None), \
+        "int8 slabs require scales_flat (and only int8 slabs take one)"
+    if quantized:
+        assert scales_flat.shape == (n_slabs, cap), scales_flat.shape
 
     # constant pack matrix: pack[t*K + j, t] = 2^j (exact in fp32)
     eye = jnp.eye(n_tables, dtype=jnp.float32)
     weights = 2.0 ** jnp.arange(k_bits, dtype=jnp.float32)
     pack = (eye[:, None, :] * weights[None, :, None]).reshape(kl, n_tables)
 
+    in_specs = [
+        pl.BlockSpec((block_q, d), lambda b: (b, 0)),
+        pl.BlockSpec((d, kl), lambda b: (0, 0)),
+        pl.BlockSpec((kl, n_tables), lambda b: (0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),     # ids stay in HBM
+        pl.BlockSpec(memory_space=pltpu.ANY),     # slabs stay in HBM
+    ]
+    scratch = [
+        pltpu.VMEM((2, cap, d), w_flat.dtype),    # double-buffered
+        pltpu.VMEM((2, cap), jnp.int32),
+    ]
+    operands = [q_aug, theta, pack, tids_flat, w_flat]
+    if quantized:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))  # scales too
+        scratch.append(pltpu.VMEM((2, cap), jnp.float32))
+        operands.append(scales_flat)
+    scratch += [pltpu.SemaphoreType.DMA((2,))] * (3 if quantized else 2)
+
     return pl.pallas_call(
-        _make_kernel(k_bits, n_tables, top_k, cap, block_q, dedup),
+        _make_kernel(k_bits, n_tables, top_k, cap, block_q, dedup,
+                     quantized),
         grid=(bsz // block_q,),
-        in_specs=[
-            pl.BlockSpec((block_q, d), lambda b: (b, 0)),
-            pl.BlockSpec((d, kl), lambda b: (0, 0)),
-            pl.BlockSpec((kl, n_tables), lambda b: (0, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),     # ids stay in HBM
-            pl.BlockSpec(memory_space=pltpu.ANY),     # slabs stay in HBM
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_q, top_k), lambda b: (b, 0)),
             pl.BlockSpec((block_q, top_k), lambda b: (b, 0)),
@@ -266,11 +315,6 @@ def lss_topk_pallas(q_aug: jax.Array, theta: jax.Array, tids_flat: jax.Array,
             jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
             jax.ShapeDtypeStruct((bsz, n_cand), jnp.int32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((2, cap, d), w_flat.dtype),    # double-buffered
-            pltpu.VMEM((2, cap), jnp.int32),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(q_aug, theta, pack, tids_flat, w_flat)
+    )(*operands)

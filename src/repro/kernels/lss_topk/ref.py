@@ -13,6 +13,14 @@ outputs are bit-identical across strategies — the knob only moves the
 CPU cost from O(C^2) all-pairs compares to an O(C log^2 C) sorting
 network, which is what keeps the ref path (the CPU-measurable serving
 path) sub-quadratic in the paper's large-sample regimes.
+
+Quantized slab storage (``lss_topk.slab_dtype``, see
+``kernels.lss_topk.slabs``): when the index stores bf16/int8 slabs the
+oracle widens the WHOLE slab tensor to fp32 up front
+(``dequantize_slabs``) and then runs the identical pipeline.  Widening
+is elementwise, so the kernel — which widens each fetched ``[P, d]``
+slab in VMEM instead — sees bit-identical operand matrices and the
+interpret-mode exact-equality contract holds per storage format.
 """
 
 from __future__ import annotations
@@ -24,12 +32,14 @@ from repro.kernels.bucket_logits.ref import bucket_logits_ref
 from repro.kernels.lss_topk.dedup import (dedup_mask_bitonic,
                                           dedup_mask_quadratic,
                                           resolve_dedup)
+from repro.kernels.lss_topk.slabs import dequantize_slabs
 from repro.kernels.simhash_codes.ref import simhash_codes_ref
 
 
 def lss_topk_ref(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
                  w_bucketed: jax.Array, *, top_k: int,
-                 dedup: str | None = None
+                 dedup: str | None = None,
+                 w_scale: jax.Array | None = None
                  ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Retrieve -> slab logits -> dedup mask -> top-k, all in jnp.
 
@@ -37,9 +47,13 @@ def lss_topk_ref(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
       q_aug:      ``[B, d_aug]`` bias-augmented queries.
       theta:      ``[d_aug, K*L]`` hyperplanes.
       table_ids:  int32 ``[L, 2^K, P]`` bucket-major neuron ids, -1 padded.
-      w_bucketed: ``[L, 2^K, P, d_aug]`` bucket-major WOL slabs.
+      w_bucketed: ``[L, 2^K, P, d_aug]`` bucket-major WOL slabs
+                  (fp32 | bf16 | int8 storage, see
+                  ``kernels.lss_topk.slabs``).
       dedup:      ``quadratic`` | ``bitonic`` | None (strategy
                   auto-select on C = L*P).
+      w_scale:    fp32 ``[L, 2^K, P]`` per-neuron-row scales (int8
+                  storage only, else None).
 
     Returns:
       (top_logits [B,k] f32, top_ids [B,k] i32, sample_size [B] i32,
@@ -54,6 +68,9 @@ def lss_topk_ref(q_aug: jax.Array, theta: jax.Array, table_ids: jax.Array,
     n_tables, n_buckets, cap = table_ids.shape
     k_bits = n_buckets.bit_length() - 1
     bsz = q_aug.shape[0]
+    # dequantize-on-the-fly, oracle form: widen once, elementwise — the
+    # kernel widens per fetched slab, which is the same values
+    w_bucketed = dequantize_slabs(w_bucketed, w_scale)
 
     # sign(theta^T x) is scale-invariant; normalizing first matches the
     # hash definition in core.simhash (shared with the IUL relaxation).

@@ -37,6 +37,11 @@ def main() -> None:
                     help="pin the lss_topk cross-table dedup strategy "
                          "(default: auto — quadratic below the C "
                          "crossover, bitonic above)")
+    ap.add_argument("--slab-dtype", choices=("fp32", "bf16", "int8"),
+                    default=None,
+                    help="bucket-major slab storage format for the LSS "
+                         "index (default: lss_topk.slab_dtype strategy / "
+                         "$REPRO_LSS_SLAB_DTYPE, auto -> fp32)")
     ap.add_argument("--no-lss", action="store_true",
                     help="legacy alias for --head full")
     ap.add_argument("--mode", choices=("generate", "decode"),
@@ -96,7 +101,8 @@ def main() -> None:
     n_slots = args.streams if args.mode == "decode" else args.batch
     dec = LMDecoder(state.params, cfg, lss_cfg, impl=args.impl,
                     max_streams=n_slots,
-                    max_len=16 + max(args.steps, 2), dedup=args.dedup)
+                    max_len=16 + max(args.steps, 2), dedup=args.dedup,
+                    slab_dtype=args.slab_dtype)
     if head != "full":
         dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:128]))
     prompt = jnp.asarray(toks[500:500 + args.batch, :16])

@@ -1,19 +1,30 @@
-"""Cross-pod gradient compression: int8 + error feedback.
+"""Symmetric int8 quantization primitives + cross-pod gradient compression.
 
-On a multi-pod mesh the 'pod' axis crosses data-center interconnect
-(~10x slower than ICI).  The standard trick (1-bit Adam / error-feedback
-SGD lineage): keep in-pod reductions full-precision, quantize only the
-cross-pod exchange, and carry the quantization error into the next step
-so the compression is unbiased over time.
+Two consumers share the same rowwise quantizer:
 
-    g_pod      = in-pod mean grad           (full precision, fast links)
-    q, scale   = quantize_int8(g_pod + err)
-    g_global   = dequant(all_reduce_over_pods(q))
-    err'       = (g_pod + err) - dequant(q)
+* **Gradient compression** (:func:`compressed_psum`): on a multi-pod mesh
+  the 'pod' axis crosses data-center interconnect (~10x slower than ICI).
+  The standard trick (1-bit Adam / error-feedback SGD lineage): keep
+  in-pod reductions full-precision, quantize only the cross-pod exchange,
+  and carry the quantization error into the next step so the compression
+  is unbiased over time.
 
-Implemented as pure functions usable inside a pjit'd train step via
-shard_map over the 'pod' axis; per-tensor block scales keep the quant
-error small (block = last axis rows).
+      g_pod      = in-pod mean grad           (full precision, fast links)
+      q, scale   = quantize_int8(g_pod + err)
+      g_global   = dequant(all_reduce_over_pods(q))
+      err'       = (g_pod + err) - dequant(q)
+
+  Implemented as pure functions usable inside a pjit'd train step via
+  shard_map over the 'pod' axis; per-tensor block scales keep the quant
+  error small (block = last axis rows).
+
+* **Quantized LSS slab storage** (``kernels.lss_topk.slabs``): the serving
+  index stores its bucket-major WOL slabs int8 with one
+  :func:`quantize_int8_rows` scale per neuron row, and the fused kernel
+  dequantizes on the fly inside its MXU matmul.  That path needs the
+  per-ROW form (a row == one neuron's ``[d]`` vector, the natural unit a
+  score-aware quantizer must preserve), so the rowwise primitive is
+  public and the blockwise gradient form is a reshape over it.
 """
 
 from __future__ import annotations
@@ -23,8 +34,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum",
-           "init_error_state"]
+__all__ = ["quantize_int8", "dequantize_int8", "quantize_int8_rows",
+           "dequantize_int8_rows", "compressed_psum", "init_error_state"]
 
 _BLOCK = 256
 
@@ -35,13 +46,30 @@ def _blocked(x: jax.Array) -> jax.Array:
     return jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK)
 
 
-def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Blockwise symmetric int8. Returns (q [nb, B] int8, scale [nb] f32)."""
-    blocks = _blocked(x.astype(jnp.float32))
-    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127
+def quantize_int8_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 along the LAST axis: one scale per leading row.
+
+    ``[..., d] -> (q int8 [..., d], scale f32 [...])`` with
+    ``scale = max|row| / 127 + eps`` (the eps keeps all-zero rows — e.g.
+    empty LSS bucket slots — dequantizing to exactly 0 instead of NaN).
+    """
+    rows = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(rows), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(rows / scale[..., None]), -127, 127
                  ).astype(jnp.int8)
     return q, scale
+
+
+def dequantize_int8_rows(q: jax.Array, scale: jax.Array,
+                         dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_int8_rows`:
+    ``q [..., d] * scale [..., None] -> [..., d]``."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8. Returns (q [nb, B] int8, scale [nb] f32)."""
+    return quantize_int8_rows(_blocked(x))
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array, shape: tuple,

@@ -15,6 +15,28 @@
 Hangs behind :class:`repro.serve.AsyncRuntime` via ``submit_decode``
 (admission queue, block|shed, deadlines) or runs standalone via
 ``DecodeScheduler.submit`` / ``run``.
+
+Invariants:
+
+* **Dispatch snapshots are copied.** ``_dispatch`` materialises the
+  active ``[(slot, session)]`` list into the in-flight record instead
+  of re-reading ``self.sessions`` at collect time: a session can retire
+  (EOS / budget) and its slot be re-admitted by a NEW session while the
+  step is still on device, and emitting that step's token to the new
+  occupant would corrupt both streams.  Collect consults the copy and
+  skips rows whose session finished in flight (a wasted row, never a
+  wrong token).
+* **The blocking facade shares the pooled step shape.** ``generate``
+  submits into the same fixed ``max_streams``-row scheduler the
+  streaming path uses because XLA's CPU gemm is NOT batch-shape
+  invariant (ROADMAP "Standing constraints"): a dedicated
+  ``[batch]``-shaped step would produce ulp-level different logits and
+  break "blocking results are bit-identical to interleaved ones" — as
+  well as double the compile cache.
+* **Per-row lengths, one program.** Batch composition (joins/retires)
+  only changes the ``lengths`` vector and the token rows, never a
+  shape, so the fused step compiles once per (head, pool shape) and a
+  slot join is O(prefill), not O(recompile).
 """
 
 from repro.serve.decode.kv_pool import KVCachePool

@@ -96,7 +96,11 @@ class Engine:
     registry auto-select by backend (pallas on TPU, ref elsewhere).
     ``dedup`` pins the ``lss_topk`` cross-table dedup strategy
     (``quadratic`` | ``bitonic``); None lets the registry auto-select on
-    the candidate count C = L*P.
+    the candidate count C = L*P.  ``slab_dtype`` pins the bucket-major
+    slab storage format (``fp32`` | ``bf16`` | ``int8``) by overriding
+    ``lss_cfg.slab_dtype`` — it takes effect at every index (re)build,
+    so ``fit`` and each IUL refit (re)quantize through the same knob;
+    None defers to the ``lss_topk.slab_dtype`` registry strategy.
 
     Thread safety: every mutation of engine state — the pending request
     queue, finished results, the metrics window, and the jitted step
@@ -114,7 +118,8 @@ class Engine:
                  mesh: jax.sharding.Mesh | None = None,
                  model_axis: str = "model",
                  impl: str | None = None,
-                 dedup: str | None = None):
+                 dedup: str | None = None,
+                 slab_dtype: str | None = None):
         if head not in HEAD_KINDS:
             raise ValueError(f"head must be one of {HEAD_KINDS}, got {head}")
         if impl is not None and impl not in registry.IMPLS:
@@ -123,6 +128,10 @@ class Engine:
         if dedup is not None:
             registry.get_strategy("lss_topk.dedup")._validate(
                 dedup, "Engine(dedup=...)")
+        if slab_dtype is not None:
+            registry.get_strategy("lss_topk.slab_dtype")._validate(
+                slab_dtype, "Engine(slab_dtype=...)")
+            lss_cfg = lss_cfg._replace(slab_dtype=slab_dtype)
         self.impl = impl
         self.dedup = dedup
         self.embed_fn = embed_fn
@@ -521,7 +530,8 @@ class LMDecoder:
 
     def __init__(self, params: dict, cfg, lss_cfg: LSSConfig | None = None,
                  impl: str | None = None, *, max_streams: int = 8,
-                 max_len: int | None = None, dedup: str | None = None):
+                 max_len: int | None = None, dedup: str | None = None,
+                 slab_dtype: str | None = None):
         from repro.models import transformer as T
         self.T = T
         self.params = params
@@ -532,7 +542,8 @@ class LMDecoder:
         self._scheds: dict[str, Any] = {}
         self.engine = Engine(None, self.head_weights().astype(jnp.float32),
                              None, lss_cfg or LSSConfig(), top_k=1,
-                             head="full", impl=impl, dedup=dedup)
+                             head="full", impl=impl, dedup=dedup,
+                             slab_dtype=slab_dtype)
 
     @property
     def index(self):

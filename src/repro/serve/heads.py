@@ -83,8 +83,10 @@ def _mask_index_tail(index: LSSIndex, n_valid: int) -> LSSIndex:
     tables = LSSTables(ids, t.n_dropped, t.k_bits, t.n_tables, t.capacity)
     wb = index.w_bucketed
     if wb is not None:
+        # zeroing works for every slab_dtype: an int8 zero code (and its
+        # untouched scale) dequantizes to exactly 0, same as fp32/bf16
         wb = jnp.where((ids >= 0)[..., None], wb, jnp.zeros_like(wb))
-    return LSSIndex(index.theta, tables, wb)
+    return LSSIndex(index.theta, tables, wb, index.w_scale)
 
 
 def shard_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig,

@@ -8,6 +8,24 @@ host/device pipeline over a (thread-safe) :class:`~repro.serve.Engine`.
   * ``runtime`` — :class:`AsyncRuntime` (dispatcher + completion threads,
     deadline shedding, drain/close, :class:`RuntimeStats`; with a
     ``DecodeScheduler`` attached, ``submit_decode`` streams tokens).
+
+Invariants the pieces rely on:
+
+* **One mutator per structure.** The dispatcher thread is the only
+  thread that pops the admission queue and launches device work; the
+  completion thread only resolves futures.  Anything both touch (stats
+  windows, future state) is lock-guarded; nothing here mutates Engine
+  internals outside ``Engine.lock``.
+* **Snapshots are copies.** Work captured at dispatch time (request
+  batches, the decode scheduler's active-slot list) is materialised as
+  a new list, never a live reference — sessions may retire and slots
+  may be re-admitted between dispatch and completion, and completion
+  must attribute results to what was ACTUALLY in the batch when it
+  launched.
+* **Shedding happens outside device code.** Deadlines are checked at
+  admission and again at dispatch; once a batch is launched it runs to
+  completion (there is no device-side cancellation), so a shed is
+  always a cheap host-side future resolution.
 """
 
 from repro.serve.runtime.future import (DeadlineExceededError, QueueFullError,

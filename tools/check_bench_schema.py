@@ -1,0 +1,80 @@
+"""Schema check for ``BENCH_kernels.json`` (the CI guard after the
+kernels C-sweep).
+
+The artifact mixes row kinds (per-kernel timings, the dedup C-sweep,
+the slab_dtype storage sweep), so a field quietly dropped from one
+producer would not fail any consumer — it would just vanish from the
+record.  This check pins the per-kind required fields; in particular a
+``slab_dtype`` row without its ``recall``/``recall_delta_vs_fp32``
+fields fails CI, so storage compression can never silently stop
+reporting its accuracy cost.
+
+Usage: ``python tools/check_bench_schema.py [path]`` (default
+``BENCH_kernels.json``; exit 1 on any violation; stdlib only).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+# every row
+BASE_FIELDS = ("kernel", "us_per_query", "shape")
+# dedup C-sweep rows (identified by having a "dedup" field)
+DEDUP_FIELDS = ("dedup", "c", "impl")
+# slab_dtype sweep rows (identified by having a "slab_dtype" field)
+SLAB_FIELDS = ("slab_dtype", "impl", "dma_bytes_per_query",
+               "recall", "recall_delta_vs_fp32")
+
+SLAB_DTYPES = {"fp32", "bf16", "int8"}
+
+
+def check(rec: dict) -> list[str]:
+    errors = []
+    rows = rec.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return ["artifact has no rows"]
+    seen_slab: set[str] = set()
+    for i, r in enumerate(rows):
+        missing = [f for f in BASE_FIELDS if f not in r]
+        if "dedup" in r:
+            missing += [f for f in DEDUP_FIELDS if f not in r]
+        if "slab_dtype" in r:
+            missing += [f for f in SLAB_FIELDS if f not in r]
+            seen_slab.add(r.get("slab_dtype"))
+        if missing:
+            errors.append(f"row {i} ({r.get('kernel')}): missing "
+                          f"required fields {missing}")
+    if seen_slab and seen_slab != SLAB_DTYPES:
+        errors.append(f"slab_dtype sweep incomplete: got {sorted(seen_slab)}"
+                      f", want {sorted(SLAB_DTYPES)} (a format was "
+                      f"silently dropped)")
+    if seen_slab:
+        fp32 = [r for r in rows if r.get("slab_dtype") == "fp32"]
+        if any(r["recall_delta_vs_fp32"] != 0 for r in fp32):
+            errors.append("fp32 slab row has nonzero recall_delta_vs_fp32 "
+                          "(the baseline drifted)")
+    return errors
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"SCHEMA CHECK FAILED: cannot read {path}: {e}",
+              file=sys.stderr)
+        return 1
+    errors = check(rec)
+    for e in errors:
+        print(f"SCHEMA CHECK FAILED: {e}", file=sys.stderr)
+    if not errors:
+        n_slab = sum(1 for r in rec["rows"] if "slab_dtype" in r)
+        print(f"schema ok: {len(rec['rows'])} rows "
+              f"({n_slab} slab_dtype rows)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

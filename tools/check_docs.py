@@ -1,0 +1,88 @@
+"""Docs consistency check (the CI docs job).
+
+Two failure classes, both of which otherwise rot silently:
+
+* **Broken intra-repo links** — every relative markdown link or inline
+  path reference in ``docs/*.md`` + ``README.md`` must resolve to a
+  real file in the repo.
+* **Stale env-var names** — every ``REPRO_*`` variable mentioned in the
+  docs must appear in ``src/``, and every ``REPRO_*`` variable defined
+  in ``src/`` must appear in docs/KERNELS.md's authoritative table —
+  so adding a knob without documenting it (or documenting a renamed
+  one) fails CI instead of shipping stale docs.
+
+Usage: ``python tools/check_docs.py`` (exit 1 on any failure; no deps
+beyond the stdlib, so the docs job doesn't need jax installed).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
+KERNELS_DOC = ROOT / "docs" / "KERNELS.md"
+
+# [text](target) — skip absolute URLs and pure anchors
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#][^)]*)\)")
+# `path/to/file.py` style inline references (only ones with a slash and
+# a real-file-looking suffix; prose like `serve/decode/` counts too)
+_INLINE = re.compile(r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_./-]*)`")
+_ENV = re.compile(r"\bREPRO_[A-Z0-9_]+\b")
+
+
+def check_links() -> list[str]:
+    errors = []
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        targets = set(_LINK.findall(text))
+        targets |= {m for m in _INLINE.findall(text)}
+        for t in sorted(targets):
+            t = t.split("#")[0].rstrip("/")
+            if not t or t.startswith(("http://", "https://", "mailto:")):
+                continue
+            # resolve relative to the doc, the repo root, and the two
+            # package shorthands the prose uses (`serve/engine.py` and
+            # `repro/utils/compat.py` both mean src/repro/...)
+            roots = (doc.parent / t, ROOT / t, ROOT / "src" / t,
+                     ROOT / "src" / "repro" / t)
+            if not any(p.exists() for p in roots):
+                errors.append(f"{doc.relative_to(ROOT)}: broken link or "
+                              f"stale path reference: {t}")
+    return errors
+
+
+def check_env_vars() -> list[str]:
+    errors = []
+    src_text = "\n".join(p.read_text()
+                         for p in sorted(ROOT.glob("src/**/*.py")))
+    src_vars = set(_ENV.findall(src_text))
+    doc_vars: set[str] = set()
+    for doc in DOC_FILES:
+        for v in _ENV.findall(doc.read_text()):
+            doc_vars.add(v)
+            if v not in src_vars:
+                errors.append(f"{doc.relative_to(ROOT)}: env var {v} is "
+                              f"not defined anywhere in src/ (renamed or "
+                              f"removed?)")
+    kernels_vars = set(_ENV.findall(KERNELS_DOC.read_text()))
+    for v in sorted(src_vars - kernels_vars):
+        errors.append(f"src/ defines {v} but docs/KERNELS.md's env-var "
+                      f"table does not mention it")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_env_vars()
+    for e in errors:
+        print(f"DOCS CHECK FAILED: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs check ok: {len(DOC_FILES)} files, links + env vars "
+              f"consistent")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

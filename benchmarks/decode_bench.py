@@ -21,7 +21,12 @@ Each (head, streams, qps) point reports:
 
 The artifact also records whether burst tokens/sec improved
 monotonically from 1 stream to the max — the "continuous batching pays
-off" acceptance signal.
+off" acceptance signal — plus three paged-KV capacity rows (always run,
+measured on real sessions): ``sessions_per_gb`` (mixed prompt lengths,
+peak-page accounting vs dense per-slot reservation), ``long_context``
+(a >= 4k-prompt session in a page-capped arena a dense pool of equal
+bytes cannot fit), and ``prefix_cache`` (shared-prompt joins skipping
+prefill).  ``tools/check_bench_schema.py`` validates all of them.
 
 Run:  PYTHONPATH=src python -m benchmarks.decode_bench --streams 1,2,4,8
 Env:  BENCH_FAST=1 shrinks sizes (default); BENCH_DECODE_OUT /
@@ -55,12 +60,16 @@ def tiny_lm_cfg(vocab: int) -> TransformerConfig:
 
 
 def build_decoder(params, cfg, streams: int, max_len: int,
-                  impl: str | None) -> LMDecoder:
+                  impl: str | None, *, kv_layout: str | None = None,
+                  kv_page_tokens: int | None = None,
+                  kv_pages: int | None = None) -> LMDecoder:
     """SimHash-initialised LSS head over the LM's WOL (retrieval speed is
     learning-independent; see benchmarks/serve_bench.py)."""
     dec = LMDecoder(params, cfg,
                     LSSConfig(k_bits=5, n_tables=2, use_bucket_major=True),
-                    impl=impl, max_streams=streams, max_len=max_len)
+                    impl=impl, max_streams=streams, max_len=max_len,
+                    kv_layout=kv_layout, kv_page_tokens=kv_page_tokens,
+                    kv_pages=kv_pages)
     dec.engine.fit_random(jax.random.PRNGKey(2))
     return dec
 
@@ -120,10 +129,126 @@ def run_blocking_baseline(dec1: LMDecoder, head: str, prompts,
     return n_tok / (time.perf_counter() - t0)
 
 
+def _drain_sessions(dec: LMDecoder, head: str, prompts,
+                    max_new_tokens: int) -> "object":
+    """Run a session set to completion on the decoder's scheduler and
+    return the scheduler's DecodeStats for the measured window."""
+    sched = dec.scheduler(head=head)
+    sched.reset_stats()
+    streams = [sched.submit(np.asarray(p, np.int32),
+                            max_new_tokens=max_new_tokens) for p in prompts]
+    sched.run(until=lambda: all(st.done() for st in streams))
+    for st in streams:
+        st.result()                          # surface any session failure
+    return sched.stats()
+
+
+def _dense_row_bytes(cfg, max_len: int) -> int:
+    """Device bytes ONE dense slot reserves (both cache sides)."""
+    itemsize = jnp.zeros((), cfg.dtype).itemsize
+    return (2 * cfg.n_layers * max_len * cfg.n_kv_heads * cfg.head_dim
+            * itemsize)
+
+
+def bench_capacity(params, cfg, impl: str | None, *,
+                   long_prompt: int, page_tokens: int) -> list[dict]:
+    """The paged-KV memory story, measured (not modelled) on real
+    sessions: sessions-per-GB at mixed prompt lengths, a >= 4k-prompt
+    long-context session a dense pool cannot fit at equal memory, and
+    the shared-prefix row where repeat joins skip prefill."""
+    rows = []
+    rng = np.random.default_rng(11)
+    vocab = cfg.vocab
+    steps = 8
+
+    # -- sessions-per-GB: mixed prompt lengths against one wide pool ----
+    # Dense reserves max_len rows per slot no matter the session; paged
+    # allocates ceil((len+steps)/page) pages.  Peak pages come from the
+    # pool's own high-water mark over a full concurrent run.
+    mixed_lens = [8, 16, 32, 64]
+    cap_len = 256
+    n_mix = len(mixed_lens) * 2
+    dec = build_decoder(params, cfg, n_mix, cap_len, impl,
+                        kv_layout="paged", kv_page_tokens=page_tokens)
+    prompts = [rng.integers(0, vocab, (n,)).astype(np.int32)
+               for n in mixed_lens * 2]
+    s = _drain_sessions(dec, "full", prompts, steps)
+    page_bytes = dec.scheduler(head="full").pool.page_bytes()
+    paged_per_session = s.kv_peak_pages * page_bytes / n_mix
+    dense_per_session = _dense_row_bytes(cfg, cap_len)
+    gb = 1 << 30
+    rows.append({
+        "kind": "sessions_per_gb", "head": "full",
+        "kv_layout": "paged", "page_tokens": page_tokens,
+        "max_len": cap_len, "prompt_lens": mixed_lens,
+        "n_sessions": n_mix, "max_new_tokens": steps,
+        "peak_pages": s.kv_peak_pages,
+        "paged_bytes_per_session": int(paged_per_session),
+        "dense_bytes_per_session": dense_per_session,
+        "sessions_per_gb": round(gb / paged_per_session, 1),
+        "sessions_per_gb_dense": round(gb / dense_per_session, 1),
+        "sessions_per_gb_ratio": round(
+            dense_per_session / paged_per_session, 2),
+    })
+
+    # -- long context: one >= 4k-prompt session in a page-capped arena --
+    # The arena is sized to the measured working set; a dense pool of the
+    # SAME bytes and slot count caps max_len far below the prompt.
+    long_steps = 4
+    long_max = long_prompt + 2 * long_steps
+    n_slots = 4
+    pps = -(-long_max // page_tokens)
+    # 1 long session + (n_slots - 1) short ones + scratch + slack
+    n_pages = 1 + (pps + 1) + (n_slots - 1) * 2 + 2
+    dec = build_decoder(params, cfg, n_slots, long_max, impl,
+                        kv_layout="paged", kv_page_tokens=page_tokens,
+                        kv_pages=n_pages)
+    prompts = [rng.integers(0, vocab, (long_prompt,)).astype(np.int32)]
+    prompts += [rng.integers(0, vocab, (8,)).astype(np.int32)
+                for _ in range(n_slots - 1)]
+    s = _drain_sessions(dec, "full", prompts, long_steps)
+    arena_bytes = dec.scheduler(head="full").pool.storage_bytes()
+    dense_equal_len = arena_bytes // (_dense_row_bytes(cfg, 1) * n_slots)
+    rows.append({
+        "kind": "long_context", "head": "full",
+        "kv_layout": "paged", "page_tokens": page_tokens,
+        "prompt_len": long_prompt, "max_new_tokens": long_steps,
+        "n_sessions": len(prompts), "n_pages": n_pages,
+        "peak_pages": s.kv_peak_pages,
+        "arena_bytes": arena_bytes,
+        "dense_equal_mem_max_len": int(dense_equal_len),
+        "fits_dense_at_equal_memory": bool(dense_equal_len >= long_max),
+        "tokens": s.n_tokens,
+    })
+
+    # -- prefix cache: N sessions sharing one prompt skip N-1 prefills --
+    n_shared = 8
+    shared = rng.integers(0, vocab, (3 * page_tokens // 2,)).astype(np.int32)
+    dec = build_decoder(params, cfg, 4, 4 * page_tokens, impl,
+                        kv_layout="paged", kv_page_tokens=page_tokens)
+    s = _drain_sessions(dec, "full", [shared] * n_shared, steps)
+    rows.append({
+        "kind": "prefix_cache", "head": "full",
+        "kv_layout": "paged", "page_tokens": page_tokens,
+        "prompt_len": int(shared.shape[0]), "n_sessions": n_shared,
+        "max_new_tokens": steps,
+        "n_prefill_skipped": s.n_prefill_skipped,
+        "prefix_hit_rate": (None if s.prefix_hit_rate != s.prefix_hit_rate
+                            else round(s.prefix_hit_rate, 3)),
+        "n_prefill_compiles": s.n_prefill_compiles,
+        "n_prefill_buckets": s.n_prefill_buckets,
+    })
+    return rows
+
+
 def bench_decode(*, vocab: int, n_sessions: int, streams_list: list[int],
                  qps_list: list[float], heads: list[str],
                  max_new_tokens: int, impl: str | None,
-                 max_queue: int, deadline_ms: float | None) -> dict:
+                 max_queue: int, deadline_ms: float | None,
+                 kv_layout: str | None = None,
+                 kv_page_tokens: int | None = None,
+                 long_prompt: int = 4096,
+                 capacity_page_tokens: int = 16) -> dict:
     deadline_s = None if deadline_ms is None else deadline_ms / 1e3
     cfg = tiny_lm_cfg(vocab)
     params_key = jax.random.PRNGKey(0)
@@ -135,13 +260,18 @@ def bench_decode(*, vocab: int, n_sessions: int, streams_list: list[int],
 
     rows = []
     baselines: dict[str, float] = {}
-    dec1 = build_decoder(params, cfg, 1, max_len, impl)
+    dec1 = build_decoder(params, cfg, 1, max_len, impl,
+                         kv_layout=kv_layout,
+                         kv_page_tokens=kv_page_tokens)
     for head in heads:
         warm(dec1, head, max_new_tokens)
         baselines[head] = run_blocking_baseline(dec1, head, prompts,
                                                 max_new_tokens)
+    resolved_layout = dec1.scheduler(head=heads[0]).pool.layout
     for streams in streams_list:
-        dec = build_decoder(params, cfg, streams, max_len, impl)
+        dec = build_decoder(params, cfg, streams, max_len, impl,
+                            kv_layout=kv_layout,
+                            kv_page_tokens=kv_page_tokens)
         for head in heads:
             warm(dec, head, max_new_tokens)
             for qps in qps_list:
@@ -149,21 +279,26 @@ def bench_decode(*, vocab: int, n_sessions: int, streams_list: list[int],
                     dec, head, prompts, qps, max_new_tokens,
                     max_queue=max_queue, deadline_s=deadline_s)
                 row.update({
+                    "kind": "sweep",
                     "head": head, "impl": impl or "auto",
                     "streams": streams, "qps": qps, "vocab": vocab,
                     "prompt_len": PROMPT_LEN,
                     "max_new_tokens": max_new_tokens,
+                    "kv_layout": resolved_layout,
                     "blocking_tok_s": round(baselines[head], 1),
                     "speedup_vs_blocking": round(
                         row["tokens_per_s"] / baselines[head], 2),
                 })
                 rows.append(row)
+    rows.extend(bench_capacity(params, cfg, impl, long_prompt=long_prompt,
+                               page_tokens=capacity_page_tokens))
     # acceptance signal: burst tokens/sec improves monotonically in the
     # number of concurrent streams (per head); None = no burst data
     monotonic = {}
     for head in heads:
         burst = sorted((r["streams"], r["tokens_per_s"]) for r in rows
-                       if r["head"] == head and r["qps"] <= 0)
+                       if r.get("kind") == "sweep" and r["head"] == head
+                       and r["qps"] <= 0)
         monotonic[head] = (None if not burst else
                            bool(all(b[1] >= a[1]
                                     for a, b in zip(burst, burst[1:]))))
@@ -172,6 +307,7 @@ def bench_decode(*, vocab: int, n_sessions: int, streams_list: list[int],
         "backend": jax.default_backend(),
         "n_devices": len(jax.devices()),
         "streams": streams_list,
+        "kv_layout": resolved_layout,
         "monotonic_tokens_per_s": monotonic,
         "rows": rows,
     }
@@ -214,6 +350,14 @@ def main(argv: list[str] | None = None) -> dict:
                     choices=(None, "ref", "pallas", "pallas_interpret"))
     ap.add_argument("--max-queue", type=int, default=4096)
     ap.add_argument("--deadline-ms", type=float, default=None)
+    ap.add_argument("--kv-layout", default=None,
+                    choices=(None, "dense", "paged"),
+                    help="sweep KV layout (None = $REPRO_KV_LAYOUT/dense); "
+                         "capacity rows always run paged")
+    ap.add_argument("--page-tokens", type=int, default=None,
+                    help="sweep page size when --kv-layout paged")
+    ap.add_argument("--long-prompt", type=int, default=4096,
+                    help="long-context capacity row prompt length")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -222,11 +366,15 @@ def main(argv: list[str] | None = None) -> dict:
         streams_list=args.streams, qps_list=args.qps,
         heads=[h for h in args.heads.split(",") if h],
         max_new_tokens=args.steps, impl=args.impl,
-        max_queue=args.max_queue, deadline_ms=args.deadline_ms)
+        max_queue=args.max_queue, deadline_ms=args.deadline_ms,
+        kv_layout=args.kv_layout, kv_page_tokens=args.page_tokens,
+        long_prompt=args.long_prompt)
     path = write_artifact(rec, args.out)
     print(f"wrote {path}")
     print(f"monotonic tokens/s vs streams: {rec['monotonic_tokens_per_s']}")
     for r in rec["rows"]:
+        if r.get("kind") != "sweep":
+            continue
         qps = "  burst" if r["qps"] <= 0 else f"{r['qps']:>7.1f}"
         print(f"  {r['head']:<5} streams={r['streams']:>3} qps={qps} "
               f"tok/s={r['tokens_per_s']:>8.1f}  "
@@ -235,6 +383,24 @@ def main(argv: list[str] | None = None) -> dict:
               f"shed={r['shed_queue']}+{r['shed_deadline']}  "
               f"blocking={r['blocking_tok_s']:>8.1f} tok/s  "
               f"x{r['speedup_vs_blocking']:.2f}")
+    for r in rec["rows"]:
+        k = r.get("kind")
+        if k == "sessions_per_gb":
+            print(f"  sessions/GB: paged={r['sessions_per_gb']} "
+                  f"dense={r['sessions_per_gb_dense']} "
+                  f"ratio=x{r['sessions_per_gb_ratio']} "
+                  f"(peak {r['peak_pages']} pages, "
+                  f"prompts {r['prompt_lens']})")
+        elif k == "long_context":
+            print(f"  long-context: prompt={r['prompt_len']} on "
+                  f"{r['n_pages']} pages ({r['arena_bytes']} B); dense at "
+                  f"equal memory caps max_len at "
+                  f"{r['dense_equal_mem_max_len']} "
+                  f"(fits={r['fits_dense_at_equal_memory']})")
+        elif k == "prefix_cache":
+            print(f"  prefix-cache: {r['n_prefill_skipped']}/"
+                  f"{r['n_sessions']} joins skipped prefill, page hit "
+                  f"rate {r['prefix_hit_rate']}")
     return rec
 
 

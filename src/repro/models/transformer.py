@@ -470,3 +470,59 @@ def decode_step_pooled(params: dict, token: jax.Array, k: jax.Array,
     return _decode_layers(params, token, k, v,
                           lengths[:, None].astype(jnp.int32),  # positions
                           lengths + 1, cfg)
+
+
+def decode_step_paged(params: dict, token: jax.Array, k_arena: jax.Array,
+                      v_arena: jax.Array, page_table: jax.Array,
+                      lengths: jax.Array, cfg: TransformerConfig,
+                      max_len: int
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """:func:`decode_step_pooled` over PAGED KV storage.
+
+    token [B] int32, k/v arenas [L, n_pages, page_tokens, KV, H],
+    page_table [B, pages_per_slot] int32 (0 = unmapped -> the reserved
+    scratch page), lengths [B] int32 -> (hidden [B, D], k_arena, v_arena).
+
+    Bit-identity with the dense layout is by construction: each row's
+    pages are gathered IN ORDER into a contiguous view sliced to exactly
+    ``max_len`` — the same ``[L, B, max_len, KV, H]`` operand shape the
+    dense slabs present — so :func:`_decode_layers` runs the very same
+    program over the very same valid contents (positions >= lengths are
+    masked to exact zeros inside ``attention_decode`` either way; what
+    garbage sits there — arena zeros vs stale rows — cannot matter
+    because everything the model ever writes is finite).  Slicing to
+    ``max_len`` (not ``pages_per_slot * page_tokens``) is load-bearing:
+    XLA:CPU reductions are not shape-invariant at the ulp level, so the
+    view width must equal the dense width exactly.
+
+    The new KV row is scattered back into each row's current write page
+    (page ``lengths // p``, offset ``lengths % p``).  Rows that must not
+    write — parked slots and rows at ``lengths == max_len`` (where the
+    dense one-hot write falls off the end of the slab) — are redirected
+    to scratch page 0, so a freed slot's in-flight step can never
+    corrupt a recycled page.  All shapes are static: joins, leaves, and
+    page-table churn cost zero recompiles.
+    """
+    n_l, _, p, n_kv, h_dim = k_arena.shape
+    b, n_pp = page_table.shape
+    w = max_len
+
+    def view(arena):
+        return arena[:, page_table].reshape(n_l, b, n_pp * p,
+                                            n_kv, h_dim)[:, :, :w]
+
+    hidden, k_new, v_new = _decode_layers(
+        params, token, view(k_arena), view(v_arena),
+        lengths[:, None].astype(jnp.int32), lengths + 1, cfg)
+
+    rows = jnp.arange(b)
+    wpos = jnp.clip(lengths, 0, w - 1)
+    pidx = jnp.clip(lengths // p, 0, n_pp - 1)
+    dest = jnp.take_along_axis(page_table, pidx[:, None], axis=1)[:, 0]
+    dest = jnp.where(lengths < w, dest, 0)          # full rows -> scratch
+    off = jnp.where(lengths < w, lengths % p, 0)
+    k_arena = k_arena.at[:, dest, off].set(
+        k_new[:, rows, wpos].astype(k_arena.dtype))
+    v_arena = v_arena.at[:, dest, off].set(
+        v_new[:, rows, wpos].astype(v_arena.dtype))
+    return hidden, k_arena, v_arena

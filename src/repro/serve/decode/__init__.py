@@ -3,14 +3,22 @@
   * ``sessions``  — :class:`DecodeSession` (one generation request) and
     :class:`TokenStream` (write-many per-token future with TTFT /
     inter-token timing).
-  * ``kv_pool``   — :class:`KVCachePool`: fixed ``[L, max_streams,
-    max_len, KV, H]`` cache slabs; sessions join a free slot after
-    prefill and leave on EOS / token budget, so batch composition
-    changes with zero recompiles.
+  * ``kv_pool``   — :class:`KVCachePool`: KV storage behind one slot
+    API, in two layouts (the ``kv_pool.layout`` strategy /
+    ``$REPRO_KV_LAYOUT``): ``dense`` fixed ``[L, max_streams, max_len,
+    KV, H]`` slabs, or ``paged`` — a ``[L, n_pages, page_tokens, KV,
+    H]`` arena + host page tables (``$REPRO_KV_PAGE_TOKENS``), with
+    refcounted prefix-shared prompt pages and copy-on-write at
+    divergence.  Sessions join a free slot after prefill and leave on
+    EOS / token budget, so batch composition changes with zero
+    recompiles — in either layout.
   * ``scheduler`` — :class:`DecodeScheduler`: one fused
-    ``decode_step_pooled -> Engine head`` program per step over all
-    slots, software-pipelined one step deep, token-exact with the
-    blocking per-stream loop.
+    ``decode_step_pooled | decode_step_paged -> Engine head`` program
+    per step over all slots, software-pipelined one step deep,
+    token-exact with the blocking per-stream loop (and across layouts).
+    Prefill pads prompts to power-of-two buckets (compiles are O(log
+    max_len), not O(distinct lengths)), and a fully prefix-cached prompt
+    skips prefill outright.
 
 Hangs behind :class:`repro.serve.AsyncRuntime` via ``submit_decode``
 (admission queue, block|shed, deadlines) or runs standalone via
@@ -37,6 +45,13 @@ Invariants:
   only changes the ``lengths`` vector and the token rows, never a
   shape, so the fused step compiles once per (head, pool shape) and a
   slot join is O(prefill), not O(recompile).
+* **The paged view is dense-width.** ``decode_step_paged`` gathers each
+  row's pages into a contiguous view sliced to exactly ``max_len`` —
+  the dense slab's shape — so both layouts run the same reduction over
+  the same valid contents and paged decode is BIT-identical to dense
+  (tests/test_paged_decode.py).  Page 0 of the arena is reserved
+  scratch: unmapped table entries and suppressed writes (parked rows,
+  rows at ``max_len``) land there, never in a recycled page.
 """
 
 from repro.serve.decode.kv_pool import KVCachePool

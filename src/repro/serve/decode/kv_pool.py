@@ -1,55 +1,155 @@
-"""Slot-based KV-cache pool for continuous-batching decode.
+"""KV-cache pool for continuous-batching decode: dense slabs or paged
+storage behind one slot API.
 
-One pool owns fixed-shape cache slabs ``[n_layers, max_streams, max_len,
-n_kv_heads, head_dim]``.  Sessions JOIN a free slot after prefill (their
-prefill KV is scattered into the slot's rows and the slot's length set to
-the prompt length) and LEAVE on EOS / token budget, so the batch
-composition changes continuously while every device program keeps the
-same static shape — the property that makes "sessions come and go" cost
-zero recompiles.
+Two storage layouts, selected by the ``kv_pool.layout`` registry strategy
+(``REPRO_KV_LAYOUT`` = ``dense`` | ``paged``):
+
+**dense** — the original fixed-shape slabs ``[n_layers, max_streams,
+max_len, n_kv_heads, head_dim]``: every slot reserves ``max_len`` rows up
+front, so capacity is ``max_streams`` regardless of how short sessions
+actually are.
+
+**paged** — one ``[n_layers, n_pages, page_tokens, KV, H]`` arena per
+cache side plus a host-side ``[max_streams, pages_per_slot]`` page table:
+sessions map fixed-size pages on demand (at join, and as decode crosses a
+page boundary), so pool capacity becomes sessions-per-GB instead of
+``max_streams × max_len``.  Page 0 is a reserved scratch page — it is
+never allocated, unmapped page-table entries point at it, and in-flight
+writes from parked rows land there, so a freed session's lagged step can
+never corrupt a page that has been recycled to a new session.
+
+On top of the page table the paged layout adds **prefix caching**:
+prompt pages are content-addressed (key = the full token prefix the
+page's KV depends on, plus the prefill bucket — KV is only bit-reproducible
+within one prefill reduction shape), so sessions joining with an
+identical prompt prefix share read-only pages, and an identical *full*
+prompt lets the scheduler skip prefill entirely
+(:meth:`KVCachePool.join_from_cache`).  Sharing is safe while the donor
+still decodes because KV pages are append-only: a session only ever
+writes at offsets >= its own prompt length, and the page a new session
+must write into (the partial remainder page) is copy-on-write at join.
+Cache-held pages persist after their sessions leave (the cache holds one
+reference) and are evicted LRU under page pressure.
+
+Token exactness: the paged decode step gathers each row's pages in order
+into a contiguous ``[max_len]``-wide view (see
+``models.transformer.decode_step_paged``), so the attention reduction has
+the SAME shape and the SAME valid contents as the dense slab — masked
+positions contribute exact zeros either way — making paged decode
+bit-identical to dense (asserted in tests/test_paged_decode.py).
 
 Slot state is split across the device/host boundary deliberately:
 
-  * the slabs (``k``/``v``) live on device and flow functionally through
-    the scheduler's fused step (step k+1 consumes step k's output slabs,
-    so a join scatter issued after step k's dispatch can never race it);
-  * per-slot lengths live on the HOST (`numpy`) — they are scheduler
-    control state, read every step to build the [max_streams] lengths
-    operand, and mutating them must not synchronize with the device.
+  * the slabs/arenas (``k``/``v``) live on device and flow functionally
+    through the scheduler's fused step (step k+1 consumes step k's
+    output, so a join scatter issued after step k's dispatch can never
+    race it);
+  * per-slot lengths, the page table, page refcounts, and the prefix
+    cache live on the HOST (`numpy`) — they are scheduler control state,
+    snapshotted (copied!) into device operands every step.
 
-A freed slot is simply abandoned in place: parked rows keep decoding
-garbage at a frozen length (row-parallel math — they cannot disturb live
-rows) and the next join's prefill scatter overwrites everything the new
-session can see (positions >= its length are masked by attention).
+A freed dense slot is simply abandoned in place; a freed paged slot
+releases its page references (pages return to the free list once neither
+a session nor the prefix cache holds them).
 """
 
 from __future__ import annotations
+
+import os
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["KVCachePool"]
+from repro.kernels import registry
+
+__all__ = ["KVCachePool", "KV_LAYOUTS", "KV_LAYOUT_ENV", "KV_PAGE_ENV"]
+
+KV_LAYOUTS = ("dense", "paged")
+KV_LAYOUT_ENV = "REPRO_KV_LAYOUT"
+KV_PAGE_ENV = "REPRO_KV_PAGE_TOKENS"
+DEFAULT_PAGE_TOKENS = 128
+
+# registry-style strategy knob: explicit arg > set_default_strategy /
+# use_strategy("kv_pool.layout", ...) > $REPRO_KV_LAYOUT > dense
+_layout_strategy = registry.kernel_strategy(
+    "kv_pool.layout", KV_LAYOUTS, env_var=KV_LAYOUT_ENV)
 
 
 @jax.jit
 def _scatter_prefill(k, v, k_new, v_new, slot):
-    """Write [L, 1, S, KV, H] prefill slabs into pool slot ``slot``.
+    """Write [L, 1, S, KV, H] prefill slabs into dense pool slot ``slot``.
 
     ``slot`` is a traced scalar so one compilation serves every slot (a
     python-int index would specialize and retrace per slot); jax caches
-    one program per prompt length S.
+    one program per prompt width S.
     """
     start = (0, slot, 0, 0, 0)
     return (jax.lax.dynamic_update_slice(k, k_new.astype(k.dtype), start),
             jax.lax.dynamic_update_slice(v, v_new.astype(v.dtype), start))
 
 
-class KVCachePool:
-    """Fixed ``[L, max_streams, max_len, KV, H]`` cache slabs + slot
-    accounting."""
+@jax.jit
+def _scatter_pages(k, v, k_new, v_new, page_ids):
+    """Write a join's prefill KV into its freshly allocated arena pages.
 
-    def __init__(self, cfg, max_streams: int, max_len: int, dtype=None):
+    ``k``/``v`` [L, n_pages, p, KV, H]; ``k_new``/``v_new`` [L, 1, S, KV,
+    H] (S <= pages_per_slot * p); ``page_ids`` [pages_per_slot] int32 —
+    the destination page of each logical chunk, with 0 (the scratch page)
+    for chunks that must NOT be written (prefix-cache hits sharing an
+    existing page, and chunks past the prompt).  One fused scatter per
+    join, compiled once per (arena shape, prefill width).
+    """
+    L_, _, p, kv_h, h = k.shape
+    n_pp = page_ids.shape[0]
+    w = n_pp * p
+
+    def rows(x):
+        x = x[:, 0]                                   # [L, S, KV, H]
+        pad = w - x.shape[1]
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.reshape(L_, n_pp, p, kv_h, h)
+
+    return (k.at[:, page_ids].set(rows(k_new).astype(k.dtype)),
+            v.at[:, page_ids].set(rows(v_new).astype(v.dtype)))
+
+
+@jax.jit
+def _copy_page(k, v, src, dst):
+    """Copy arena page ``src`` -> ``dst`` (both traced scalars): the
+    copy-on-write step when a join reuses a cached remainder page it will
+    subsequently decode into."""
+    kp = jax.lax.dynamic_index_in_dim(k, src, axis=1, keepdims=True)
+    vp = jax.lax.dynamic_index_in_dim(v, src, axis=1, keepdims=True)
+    return (jax.lax.dynamic_update_slice_in_dim(k, kp, dst, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(v, vp, dst, axis=1))
+
+
+class KVCachePool:
+    """Slot accounting + KV storage (dense slabs or a paged arena).
+
+    Args:
+      cfg: the TransformerConfig whose decode this pool backs.
+      max_streams: slot count == rows of the fused step (a compile shape).
+      max_len: logical cache width every session sees (and the paged
+        step's gathered-view width, so dense and paged reductions share
+        one shape).
+      dtype: cache dtype; defaults to ``cfg.dtype``.
+      layout: ``dense`` | ``paged`` | None (resolve via the
+        ``kv_pool.layout`` registry strategy / ``$REPRO_KV_LAYOUT``).
+      page_tokens: paged layout page size; None reads
+        ``$REPRO_KV_PAGE_TOKENS`` (default 128).
+      n_pages: paged arena size INCLUDING the reserved scratch page;
+        None sizes for dense parity (every slot can reach ``max_len``).
+        Smaller values cap memory — sessions then share capacity and a
+        join/advance that cannot get a page raises ``RuntimeError``.
+    """
+
+    def __init__(self, cfg, max_streams: int, max_len: int, dtype=None, *,
+                 layout: str | None = None, page_tokens: int | None = None,
+                 n_pages: int | None = None):
         if max_streams < 1:
             raise ValueError(f"max_streams must be >= 1, got {max_streams}")
         if max_len < 2:
@@ -57,13 +157,43 @@ class KVCachePool:
         self.cfg = cfg
         self.max_streams = int(max_streams)
         self.max_len = int(max_len)
-        dt = dtype or cfg.dtype
-        shape = (cfg.n_layers, max_streams, max_len,
-                 cfg.n_kv_heads, cfg.head_dim)
-        self.k = jnp.zeros(shape, dt)
-        self.v = jnp.zeros(shape, dt)
+        self.dtype = dtype or cfg.dtype
+        self.layout = _layout_strategy.resolve(layout)
         self.lengths = np.zeros((max_streams,), np.int32)   # host mirror
         self._free = list(range(max_streams - 1, -1, -1))   # pop() -> slot 0
+        if self.layout == "dense":
+            shape = (cfg.n_layers, max_streams, max_len,
+                     cfg.n_kv_heads, cfg.head_dim)
+            self.k = jnp.zeros(shape, self.dtype)
+            self.v = jnp.zeros(shape, self.dtype)
+            return
+        # ------------------------------------------------- paged layout --
+        if page_tokens is None:
+            page_tokens = int(os.environ.get(KV_PAGE_ENV)
+                              or DEFAULT_PAGE_TOKENS)
+        if page_tokens < 1:
+            raise ValueError(f"page_tokens must be >= 1, got {page_tokens}")
+        self.page_tokens = int(page_tokens)
+        self.pages_per_slot = -(-self.max_len // self.page_tokens)  # ceil
+        parity = 1 + self.max_streams * self.pages_per_slot
+        self.n_pages = parity if n_pages is None else int(n_pages)
+        if self.n_pages < 2:
+            raise ValueError(f"n_pages must be >= 2 (page 0 is scratch), "
+                             f"got {self.n_pages}")
+        shape = (cfg.n_layers, self.n_pages, self.page_tokens,
+                 cfg.n_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, self.dtype)
+        self.v = jnp.zeros(shape, self.dtype)
+        # host control state: 0 in the table = unmapped (scratch)
+        self.page_table = np.zeros((max_streams, self.pages_per_slot),
+                                   np.int32)
+        self._free_pages = list(range(self.n_pages - 1, 0, -1))
+        self._ref = np.zeros((self.n_pages,), np.int32)
+        self._cache: dict = {}            # content key -> page id
+        self._lru: OrderedDict = OrderedDict()   # content key -> None
+        self.prefix_hits = 0              # pages reused via the cache
+        self.prefix_misses = 0            # shareable pages not found
+        self._peak_pages = 0
 
     # ------------------------------------------------------ slot account --
     @property
@@ -79,27 +209,232 @@ class KVCachePool:
         return self._free.pop() if self._free else None
 
     def free(self, slot: int) -> None:
-        assert 0 <= slot < self.max_streams and slot not in self._free, slot
+        """Release a slot.  Raises ``ValueError`` on an out-of-range slot
+        or a double free (a real error, not an ``assert`` that vanishes
+        under ``python -O``)."""
+        self._check_owned(slot, "free")
+        if self.layout == "paged":
+            row = self.page_table[slot]
+            for pid in row[row > 0]:
+                self._unref(int(pid))
+            row[:] = 0
         self.lengths[slot] = 0
         self._free.append(slot)
 
+    def _check_owned(self, slot, what: str) -> None:
+        if not isinstance(slot, (int, np.integer)) \
+                or not 0 <= slot < self.max_streams:
+            raise ValueError(f"{what}: slot {slot!r} out of range "
+                             f"[0, {self.max_streams})")
+        if slot in self._free:
+            raise ValueError(f"{what}: slot {slot} is not allocated "
+                             f"(double free, or join before alloc)")
+
+    # ------------------------------------------------------ page account --
+    @property
+    def pages_in_use(self) -> int:
+        """Pages currently referenced (by sessions and/or the prefix
+        cache); excludes the scratch page.  0 for the dense layout."""
+        return 0 if self.layout == "dense" else int((self._ref > 0).sum())
+
+    @property
+    def peak_pages_in_use(self) -> int:
+        return 0 if self.layout == "dense" else self._peak_pages
+
+    @property
+    def n_free_pages(self) -> int:
+        return 0 if self.layout == "dense" else len(self._free_pages)
+
+    def page_bytes(self) -> int:
+        """Device bytes of ONE page (both cache sides, all layers)."""
+        if self.layout == "dense":
+            return 0
+        itemsize = jnp.zeros((), self.dtype).itemsize
+        return (2 * self.cfg.n_layers * self.page_tokens
+                * self.cfg.n_kv_heads * self.cfg.head_dim * itemsize)
+
+    def storage_bytes(self) -> int:
+        """Total device bytes of the k+v storage."""
+        itemsize = jnp.zeros((), self.dtype).itemsize
+        return 2 * int(np.prod(self.k.shape)) * itemsize
+
+    def _note_usage(self) -> None:
+        used = int((self._ref > 0).sum())
+        if used > self._peak_pages:
+            self._peak_pages = used
+
+    def _alloc_page(self) -> int:
+        if not self._free_pages:
+            self._evict()
+        if not self._free_pages:
+            raise RuntimeError(
+                f"paged KV pool exhausted: all {self.n_pages - 1} pages "
+                f"are referenced by live sessions (size n_pages for the "
+                f"working set, or admit fewer concurrent sessions)")
+        pid = self._free_pages.pop()
+        self._ref[pid] = 1
+        return pid
+
+    def _unref(self, pid: int) -> None:
+        self._ref[pid] -= 1
+        if self._ref[pid] == 0:
+            self._free_pages.append(pid)
+
+    def _evict(self) -> None:
+        """Drop LRU prefix-cache entries whose page only the cache still
+        holds, until at least one page is free (or nothing is evictable)."""
+        for key in list(self._lru):
+            pid = self._cache[key]
+            if self._ref[pid] == 1:       # cache is the sole holder
+                del self._cache[key]
+                del self._lru[key]
+                self._unref(pid)
+                return
+        # every cached page is also live in a session: nothing to evict
+
+    def _register(self, key, pid: int) -> None:
+        self._cache[key] = pid
+        self._lru[key] = None
+        self._ref[pid] += 1               # the cache's own hold
+        self._note_usage()
+
+    @staticmethod
+    def _full_key(prompt: np.ndarray, bucket: int, j: int, p: int):
+        # page j's KV depends on every token <= its last position AND the
+        # prefill reduction width (the bucket): key both
+        return ("full", int(bucket), j, prompt[:(j + 1) * p].tobytes())
+
+    @staticmethod
+    def _rem_key(prompt: np.ndarray, bucket: int, length: int):
+        return ("rem", int(bucket), int(length), prompt[:length].tobytes())
+
     # ------------------------------------------------------- device side --
     def join(self, slot: int, k_new: jax.Array, v_new: jax.Array,
-             length: int) -> None:
-        """Scatter a session's [L, 1, S, KV, H] prefill into ``slot`` and
+             length: int, *, prompt: np.ndarray | None = None,
+             bucket: int = 0) -> None:
+        """Write a session's [L, 1, S, KV, H] prefill into ``slot`` and
         set its valid length.  Issued AFTER the current step's dispatch,
         so data flow (the scatter consumes that step's output slabs)
-        orders it behind any stale in-flight write to this slot."""
-        assert length <= self.max_len, (length, self.max_len)
-        self.k, self.v = _scatter_prefill(self.k, self.v, k_new, v_new,
-                                          jnp.int32(slot))
+        orders it behind any stale in-flight write to this slot.
+
+        Paged layout: allocates the pages covering positions
+        ``[0, length]`` (the last one is the session's write page),
+        reusing prefix-cache pages for full prompt pages whose content
+        key matches (``prompt`` + ``bucket`` enable the lookup), and
+        registers fresh prompt pages for future sessions to share.
+        """
+        self._check_owned(slot, "join")
+        if not 1 <= length <= self.max_len:
+            raise ValueError(f"join: length {length} outside "
+                             f"[1, {self.max_len}]")
+        if self.layout == "dense":
+            self.k, self.v = _scatter_prefill(self.k, self.v, k_new, v_new,
+                                              jnp.int32(slot))
+            self.lengths[slot] = length
+            return
+        p = self.page_tokens
+        n_need = min(length // p + 1, self.pages_per_slot)
+        n_full = 0 if prompt is None else min(length // p, n_need)
+        row = self.page_table[slot]
+        for pid in row[row > 0]:          # re-join: release any previous
+            self._unref(int(pid))         # mapping first
+        row[:] = 0
+        scatter_ids = np.zeros((self.pages_per_slot,), np.int32)
+        for j in range(n_need):
+            if j < n_full:
+                key = self._full_key(prompt, bucket, j, p)
+                pid = self._cache.get(key)
+                if pid is not None:
+                    self._ref[pid] += 1            # shared, read-only
+                    row[j] = pid
+                    self._lru.move_to_end(key)
+                    self.prefix_hits += 1
+                    self._note_usage()
+                    continue
+                self.prefix_misses += 1
+                pid = self._alloc_page()
+                row[j] = pid
+                scatter_ids[j] = pid
+                self._register(key, pid)
+            else:
+                pid = self._alloc_page()
+                row[j] = pid
+                scatter_ids[j] = pid
+                self._note_usage()
+                if prompt is not None and j == n_need - 1 and length % p:
+                    # the remainder page: prompt KV at offsets < length%p
+                    # is append-only (the session decodes at offsets >=
+                    # length%p), so registering the LIVE page is safe —
+                    # hitters copy-on-write before touching it.  Never
+                    # re-register an existing key: overwriting the cache
+                    # entry would strand the old page's cache reference.
+                    key = self._rem_key(prompt, bucket, length)
+                    if key not in self._cache:
+                        self._register(key, pid)
+        self.k, self.v = _scatter_pages(self.k, self.v, k_new, v_new,
+                                        jnp.asarray(scatter_ids))
         self.lengths[slot] = length
 
+    def join_from_cache(self, slot: int, prompt: np.ndarray, length: int,
+                        bucket: int) -> bool:
+        """Map ``slot`` entirely from cached prompt pages — the
+        full-prompt prefix hit that lets the scheduler SKIP prefill.
+        Returns False (mutating nothing) unless every page covering the
+        prompt is cached: all full pages by content key, plus the
+        remainder page (copied, since this session will write into it).
+        """
+        if self.layout == "dense":
+            return False
+        self._check_owned(slot, "join_from_cache")
+        if not 1 <= length <= self.max_len:
+            raise ValueError(f"join_from_cache: length {length} outside "
+                             f"[1, {self.max_len}]")
+        p = self.page_tokens
+        n_need = min(length // p + 1, self.pages_per_slot)
+        n_full = min(length // p, n_need)
+        keys = [self._full_key(prompt, bucket, j, p) for j in range(n_full)]
+        rem_key = (self._rem_key(prompt, bucket, length)
+                   if length % p and n_full < n_need else None)
+        if rem_key is not None:
+            keys.append(rem_key)
+        if any(k not in self._cache for k in keys):
+            return False
+        row = self.page_table[slot]
+        for pid in row[row > 0]:          # re-join: release any previous
+            self._unref(int(pid))         # mapping first
+        row[:] = 0
+        for j in range(n_full):
+            pid = self._cache[keys[j]]
+            self._ref[pid] += 1
+            row[j] = pid
+            self._lru.move_to_end(keys[j])
+        if rem_key is not None:
+            src = self._cache[rem_key]
+            dst = self._alloc_page()          # copy-on-write: this page
+            self.k, self.v = _copy_page(      # is the session's write page
+                self.k, self.v, jnp.int32(src), jnp.int32(dst))
+            row[n_full] = dst
+            self._lru.move_to_end(rem_key)
+        elif n_need > n_full:                 # page-aligned prompt: the
+            row[n_full] = self._alloc_page()  # write page starts empty
+        self.prefix_hits += len(keys)
+        self._note_usage()
+        self.lengths[slot] = length
+        return True
+
     def advance(self, slots) -> None:
-        """The fused step wrote one KV per listed slot: bump lengths."""
+        """The fused step wrote one KV per listed slot: bump lengths (and,
+        paged, map the next page when a row crosses a page boundary)."""
         for s in slots:
             self.lengths[s] += 1
+            if self.layout == "paged":
+                j, off = divmod(int(self.lengths[s]), self.page_tokens)
+                if off == 0 and j < self.pages_per_slot \
+                        and self.page_table[s, j] == 0:
+                    self.page_table[s, j] = self._alloc_page()
+                    self._note_usage()
 
+    # ---------------------------------------------------- step operands --
     def lengths_device(self) -> jax.Array:
         """Snapshot the host lengths as the step's [max_streams] operand.
 
@@ -110,3 +445,19 @@ class KVCachePool:
         duplicated tokens).  The copy freezes the snapshot.
         """
         return jnp.asarray(self.lengths.copy())
+
+    def page_table_device(self) -> jax.Array:
+        """Snapshot the host page table as the paged step's
+        [max_streams, pages_per_slot] operand (same copy rule as
+        :meth:`lengths_device` — joins/frees mutate the table while the
+        previous step is in flight)."""
+        return jnp.asarray(self.page_table.copy())
+
+    def step_operands(self) -> tuple:
+        """The fused step's cache-state operands, layout-resolved: the
+        scheduler dispatches ``step(params, tok, *pool.step_operands())``
+        so join/leave and layout never change its call site."""
+        if self.layout == "dense":
+            return (self.k, self.v, self.lengths_device())
+        return (self.k, self.v, self.page_table_device(),
+                self.lengths_device())

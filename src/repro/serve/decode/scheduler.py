@@ -41,7 +41,7 @@ import functools
 import math
 import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Callable, NamedTuple
 
 import jax
@@ -55,13 +55,37 @@ from repro.serve.runtime.future import DeadlineExceededError
 __all__ = ["DecodeScheduler", "DecodeStats"]
 
 
+# trace-time prefill compile counter, keyed (cfg.name, bucket) — the
+# observable that proves bucketing works: O(log max_len) entries per cfg,
+# not O(distinct prompt lengths).  Module-level because _prefill_jit's
+# cache is module-level (shared across schedulers).
+_PREFILL_COMPILES: dict[tuple, int] = {}
+
+_MIN_PREFILL_BUCKET = 8
+
+
+def _prefill_bucket(plen: int) -> int:
+    """Power-of-two prefill bucket for a prompt length (floor 8).
+
+    The bucket is BOTH the compile shape and a numeric shape: prefill's
+    attention reduces over the padded width, and XLA:CPU reductions are
+    not shape-invariant at the ulp level — so prompt KV is only
+    bit-reproducible within one bucket, and every prefix-cache key
+    includes it.  Causal masking makes end-padding exact: position i
+    attends only to j <= i, so the pad tail cannot perturb real rows.
+    """
+    return max(_MIN_PREFILL_BUCKET, 1 << max(plen - 1, 0).bit_length())
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "max_len"))
 def _prefill_jit(params, prompt, cfg, max_len):
-    """Jitted prefill, shared across schedulers (cached per cfg + prompt
-    length).  Eager prefill measured ~500 ms/session on CPU for a tiny
-    2-layer model — pure op-dispatch overhead that would dwarf every
-    decode step; one compile per prompt length removes it."""
+    """Jitted prefill, shared across schedulers (cached per cfg + padded
+    prompt bucket).  Eager prefill measured ~500 ms/session on CPU for a
+    tiny 2-layer model — pure op-dispatch overhead that would dwarf every
+    decode step; one compile per power-of-two bucket removes it."""
     from repro.models import transformer as T
+    key = (cfg.name, max_len)                     # trace-time side effect:
+    _PREFILL_COMPILES[key] = _PREFILL_COMPILES.get(key, 0) + 1
     return T.prefill(params, prompt, cfg, max_len=max_len)
 
 
@@ -87,6 +111,14 @@ class DecodeStats(NamedTuple):
     itl_p99_ms: float
     tokens_per_s: float          # n_tokens / (first submit -> last token)
     wall_s: float
+    # appended with defaults so positional consumers of the original 14
+    # fields keep working
+    n_prefill_skipped: int = 0   # full-prompt prefix hits (no prefill run)
+    n_prefill_compiles: int = 0  # prefill traces for this cfg (all buckets)
+    n_prefill_buckets: int = 0   # distinct prefill buckets compiled
+    prefix_hit_rate: float = math.nan   # shared / shareable prompt pages
+    kv_pages_in_use: int = 0     # paged layout: pages referenced now
+    kv_peak_pages: int = 0       # paged layout: high-water mark
 
 
 class _Inflight(NamedTuple):
@@ -116,6 +148,10 @@ class DecodeScheduler:
         ``len(prompt) + max_new_tokens <= max_len``.
       head: head kind for ALL sessions of this scheduler (one fused
         program serves one head; build one scheduler per head kind).
+      kv_layout, kv_page_tokens, kv_pages: KV storage knobs, forwarded to
+        :class:`KVCachePool` (layout None resolves the ``kv_pool.layout``
+        strategy / ``$REPRO_KV_LAYOUT``; the paged layout enables prefix
+        caching and prefill skipping).
 
     Threading: ``submit``/``add_session`` may be called from any thread;
     ``tick``/``run`` must be driven by ONE thread at a time (the
@@ -123,12 +159,18 @@ class DecodeScheduler:
     """
 
     def __init__(self, engine, params: dict, cfg, *, max_streams: int = 8,
-                 max_len: int = 256, head: str | None = None):
+                 max_len: int = 256, head: str | None = None,
+                 kv_layout: str | None = None,
+                 kv_page_tokens: int | None = None,
+                 kv_pages: int | None = None):
         self.engine = engine
         self.params = params
         self.cfg = cfg
         self.head = head or engine.default_head
-        self.pool = KVCachePool(cfg, max_streams, max_len)
+        self.pool = KVCachePool(cfg, max_streams, max_len,
+                                layout=kv_layout,
+                                page_tokens=kv_page_tokens,
+                                n_pages=kv_pages)
         self.max_streams = int(max_streams)
         self.max_len = int(max_len)
         self.tok = jnp.zeros((max_streams,), jnp.int32)
@@ -138,8 +180,21 @@ class DecodeScheduler:
         # names the fused step's compile shape in the engine's jitted-step
         # table; qualified by the model name so two schedulers over the
         # SAME engine with different model configs cannot collide on one
-        # cached program
-        self._tag = f"decode[{max_streams}x{max_len}]@{cfg.name}"
+        # cached program.  The paged layout is a different program (page
+        # gather + arena scatter), so it gets a distinct tag — the dense
+        # tag is unchanged and stays the observable tests pin.
+        if self.pool.layout == "paged":
+            self._tag = (f"decode[{max_streams}x{max_len},"
+                         f"paged{self.pool.page_tokens}]@{cfg.name}")
+        else:
+            self._tag = f"decode[{max_streams}x{max_len}]@{cfg.name}"
+        # first-token memo for full-prompt prefix hits: (prompt bytes,
+        # bucket) -> (head index object at compute time, tok0).  Keyed on
+        # the index IDENTITY (not id() — addresses get reused) so an LSS
+        # refit naturally invalidates; bounded LRU so pinned old indexes
+        # cannot accumulate.
+        self._tok0_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._tok0_cache_cap = 1024
         self._lock = threading.Lock()
         # serializes tick(): a blocking generate() may drive the same
         # scheduler an AsyncRuntime dispatcher is ticking — two ticks
@@ -155,6 +210,7 @@ class DecodeScheduler:
         self._n_shed_deadline = 0
         self._n_tokens = 0
         self._n_steps = 0
+        self._n_prefill_skipped = 0
         self._occupancy_sum = 0.0
         self._ttft_s: list[float] = []
         self._itl_s: list[float] = []
@@ -268,36 +324,79 @@ class DecodeScheduler:
                 self._done(sess, "shed_deadline")
                 continue
             slot = self.pool.alloc()
-            # prefill at the session's own prompt length (one compile per
-            # length, shared by every scheduler over this cfg)
-            prompt = jnp.asarray(sess.prompt)[None, :]
-            hidden, cache = _prefill_jit(self.params, prompt, self.cfg,
-                                         prompt.shape[1])
-            self.pool.join(slot, cache.k, cache.v, prompt.shape[1])
-            # first token: the prefill's last hidden state through the
-            # same bucket-1 head step the blocking loop uses
-            ho = self.engine.rank(hidden[:, -1].astype(jnp.float32),
-                                  head=self.head, record=False)
-            tok0 = max(int(np.asarray(ho.ids)[0, 0]), 0)
+            tok0 = self._prefill(slot, sess.prompt)
             self.tok = _set_tok(self.tok, jnp.int32(slot),
                                 jnp.int32(tok0))
             sess.slot = slot
             self.sessions[slot] = sess
             self._emit(sess, tok0, time.perf_counter())
 
+    def _prefill(self, slot: int, prompt_np: np.ndarray) -> int:
+        """Fill ``slot``'s KV for a prompt and return its first token.
+
+        Fast path: with the paged layout, a prompt whose every page is
+        already in the pool's prefix cache joins straight from cached
+        pages AND reuses the memoized first token — no prefill, no head
+        ranking (``n_prefill_skipped``).  The memo is keyed on the
+        prompt+bucket and on the engine's index object identity, so an
+        LSS refit invalidates it.
+
+        Slow path: pad the prompt to its power-of-two bucket (one prefill
+        compile per bucket, not per length; causal masking keeps real
+        rows exact), join the KV sliced to the pool width, and rank the
+        last REAL row's hidden state through the same bucket-1 head step
+        the blocking loop uses.
+        """
+        plen = int(prompt_np.shape[0])
+        bucket = _prefill_bucket(plen)
+        key = (prompt_np.tobytes(), bucket)
+        memo = self._tok0_cache.get(key)
+        if memo is not None and memo[0] is self.engine.index \
+                and self.pool.join_from_cache(slot, prompt_np, plen,
+                                              bucket):
+            self._tok0_cache.move_to_end(key)
+            with self._lock:
+                self._n_prefill_skipped += 1
+            return memo[1]
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :plen] = prompt_np
+        hidden, cache = _prefill_jit(self.params, jnp.asarray(padded),
+                                     self.cfg, bucket)
+        k_new, v_new = cache.k, cache.v
+        if bucket > self.max_len:                 # pool never reads past
+            k_new = k_new[:, :, :self.max_len]    # its own width
+            v_new = v_new[:, :, :self.max_len]
+        self.pool.join(slot, k_new, v_new, plen, prompt=prompt_np,
+                       bucket=bucket)
+        ho = self.engine.rank(hidden[:, plen - 1].astype(jnp.float32),
+                              head=self.head, record=False)
+        tok0 = max(int(np.asarray(ho.ids)[0, 0]), 0)
+        self._tok0_cache[key] = (self.engine.index, tok0)
+        if len(self._tok0_cache) > self._tok0_cache_cap:
+            self._tok0_cache.popitem(last=False)
+        return tok0
+
     # -------------------------------------------------------------- dispatch --
     @functools.cached_property
     def _body(self):
-        """The model half of the fused step.  Deliberately closes over
-        ONLY ``cfg`` — the engine caches the jitted step whose closure
-        holds this body, and capturing ``self`` would pin the whole
-        scheduler (and its KV-pool slabs) in the engine's step table
-        past this scheduler's lifetime."""
+        """The model half of the fused step, layout-resolved.
+        Deliberately closes over ONLY ``cfg`` (plus the pool's view
+        width for the paged gather) — the engine caches the jitted step
+        whose closure holds this body, and capturing ``self`` would pin
+        the whole scheduler (and its KV-pool slabs) in the engine's step
+        table past this scheduler's lifetime."""
         cfg = self.cfg
+        if self.pool.layout == "paged":
+            max_len = self.max_len
 
-        def body(params, tok, k, v, lengths):
-            from repro.models import transformer as T
-            return T.decode_step_pooled(params, tok, k, v, lengths, cfg)
+            def body(params, tok, k, v, page_table, lengths):
+                from repro.models import transformer as T
+                return T.decode_step_paged(params, tok, k, v, page_table,
+                                           lengths, cfg, max_len)
+        else:
+            def body(params, tok, k, v, lengths):
+                from repro.models import transformer as T
+                return T.decode_step_pooled(params, tok, k, v, lengths, cfg)
 
         return body
 
@@ -308,8 +407,7 @@ class DecodeScheduler:
         step = self.engine.decode_logits(self.head, self._tag, self._body)
         t0 = time.perf_counter()
         tok_next, ho, k_new, v_new = step(
-            self.params, self.tok, self.pool.k, self.pool.v,
-            self.pool.lengths_device())
+            self.params, self.tok, *self.pool.step_operands())
         self.tok = tok_next                      # device-to-device feedback
         self.pool.k, self.pool.v = k_new, v_new
         self.pool.advance(active)
@@ -411,6 +509,7 @@ class DecodeScheduler:
             self._n_shed_deadline = 0
             self._n_tokens = 0
             self._n_steps = 0
+            self._n_prefill_skipped = 0
             self._occupancy_sum = 0.0
             self._ttft_s = []
             self._itl_s = []
@@ -437,4 +536,19 @@ class DecodeScheduler:
                 itl_p50_ms=itl[0], itl_p95_ms=itl[1], itl_p99_ms=itl[2],
                 tokens_per_s=(self._n_tokens / wall if wall > 0 else 0.0),
                 wall_s=wall,
+                n_prefill_skipped=self._n_prefill_skipped,
+                n_prefill_compiles=sum(
+                    n for (name, _), n in _PREFILL_COMPILES.items()
+                    if name == self.cfg.name),
+                n_prefill_buckets=sum(
+                    1 for (name, _) in _PREFILL_COMPILES
+                    if name == self.cfg.name),
+                prefix_hit_rate=(
+                    self.pool.prefix_hits
+                    / (self.pool.prefix_hits + self.pool.prefix_misses)
+                    if self.pool.layout == "paged"
+                    and (self.pool.prefix_hits + self.pool.prefix_misses)
+                    else math.nan),
+                kv_pages_in_use=self.pool.pages_in_use,
+                kv_peak_pages=self.pool.peak_pages_in_use,
             )

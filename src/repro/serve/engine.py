@@ -275,16 +275,24 @@ class Engine:
         the LSS kinds, so the WOL ranking inside the token loop is the
         same kernel path the score buckets use.
 
-        ``body(params, tok, k, v, lengths) -> (hidden [B, d], k_new,
-        v_new)``; the returned step maps the same signature to
-        ``(tok_next [B] int32, HeadOutput, k_new, v_new)`` with the
-        next-token feedback computed IN-program, so a decode loop can
-        chain steps device-to-device without a host round trip.  ``tag``
-        names the compile shape (the scheduler uses "decode[SxW]") and
+        ``body(params, tok, *state) -> (hidden [B, d], k_new, v_new)``
+        where ``state`` is the pool layout's cache operands — dense
+        ``(k, v, lengths)``, paged ``(k, v, page_table, lengths)``; the
+        returned step maps the same signature to ``(tok_next [B] int32,
+        HeadOutput, k_new, v_new)`` with the next-token feedback computed
+        IN-program, so a decode loop can chain steps device-to-device
+        without a host round trip.  ``tag`` names the compile shape (the
+        scheduler uses "decode[SxW]", paged "decode[SxW,pagedP]") and
         keys the shared jitted-step cache — compile counts land in
         ``compile_counts[(kind, tag)]`` next to the score buckets, and a
         refit (``_set_index``) invalidates LSS decode steps exactly like
         LSS score steps.
+
+        The k/v slabs sit at argument positions 2 and 3 in EVERY layout,
+        and on TPU the step donates them for in-place cache update
+        (halving peak KV memory across a step); XLA:CPU does not support
+        buffer donation, so donation is skipped there (the standing
+        constraint) and the functional k-in/k-out flow stands alone.
         """
         key = (kind, tag)
         step = self._steps.get(key)       # lock-free hot path, like _step
@@ -294,15 +302,17 @@ class Engine:
             if key not in self._steps:
                 head = self._head(kind)
 
-                def raw_step(params, tok, k, v, lengths):
+                def raw_step(params, tok, *state):
                     self.compile_counts[key] = \
                         self.compile_counts.get(key, 0) + 1
-                    hidden, k_new, v_new = body(params, tok, k, v, lengths)
+                    hidden, k_new, v_new = body(params, tok, *state)
                     ho = head(hidden.astype(jnp.float32))
                     tok_next = jnp.maximum(ho.ids[:, 0], 0).astype(jnp.int32)
                     return tok_next, ho, k_new, v_new
 
-                self._steps[key] = jax.jit(raw_step)
+                donate = ((2, 3) if jax.default_backend() == "tpu"
+                          else ())
+                self._steps[key] = jax.jit(raw_step, donate_argnums=donate)
             return self._steps[key]
 
     def _pad_to_bucket(self, x, bucket: int):
@@ -531,7 +541,9 @@ class LMDecoder:
     def __init__(self, params: dict, cfg, lss_cfg: LSSConfig | None = None,
                  impl: str | None = None, *, max_streams: int = 8,
                  max_len: int | None = None, dedup: str | None = None,
-                 slab_dtype: str | None = None):
+                 slab_dtype: str | None = None, kv_layout: str | None = None,
+                 kv_page_tokens: int | None = None,
+                 kv_pages: int | None = None):
         from repro.models import transformer as T
         self.T = T
         self.params = params
@@ -539,6 +551,12 @@ class LMDecoder:
         self.lss_cfg = lss_cfg
         self.max_streams = max_streams
         self._max_len = max_len
+        # KV storage layout knobs, handed to each scheduler's pool:
+        # layout dense|paged (None -> kv_pool.layout strategy /
+        # $REPRO_KV_LAYOUT), page size, and an optional arena page cap
+        self.kv_layout = kv_layout
+        self.kv_page_tokens = kv_page_tokens
+        self.kv_pages = kv_pages
         self._scheds: dict[str, Any] = {}
         self.engine = Engine(None, self.head_weights().astype(jnp.float32),
                              None, lss_cfg or LSSConfig(), top_k=1,
@@ -598,7 +616,10 @@ class LMDecoder:
                          else max(self._max_len, need))
         sched = DecodeScheduler(self.engine, self.params, self.cfg,
                                 max_streams=self.max_streams,
-                                max_len=self._max_len, head=kind)
+                                max_len=self._max_len, head=kind,
+                                kv_layout=self.kv_layout,
+                                kv_page_tokens=self.kv_page_tokens,
+                                kv_pages=self.kv_pages)
         self._scheds[kind] = sched
         return sched
 

@@ -117,6 +117,12 @@ class RuntimeStats(NamedTuple):
     itl_p99_ms: float = math.nan
     decode_slot_occupancy: float = 0.0   # mean active/max_streams per step
     decode_tokens_per_s: float = 0.0
+    n_prefill_skipped: int = 0      # full-prompt prefix-cache hits
+    n_prefill_compiles: int = 0     # prefill traces (one per bucket)
+    n_prefill_buckets: int = 0      # distinct power-of-two buckets
+    prefix_hit_rate: float = math.nan   # shared / shareable prompt pages
+    kv_pages_in_use: int = 0        # paged KV layout: live pages
+    kv_peak_pages: int = 0          # paged KV layout: high-water mark
 
 
 def _paced_submit(n: int, qps: float, seed: int, submit
@@ -677,6 +683,12 @@ class AsyncRuntime:
                 itl_p99_ms=ds.itl_p99_ms,
                 decode_slot_occupancy=ds.slot_occupancy,
                 decode_tokens_per_s=ds.tokens_per_s,
+                n_prefill_skipped=ds.n_prefill_skipped,
+                n_prefill_compiles=ds.n_prefill_compiles,
+                n_prefill_buckets=ds.n_prefill_buckets,
+                prefix_hit_rate=ds.prefix_hit_rate,
+                kv_pages_in_use=ds.kv_pages_in_use,
+                kv_peak_pages=ds.kv_peak_pages,
             )
             return RuntimeStats(**decode,
                 n_submitted=self._n_submitted,

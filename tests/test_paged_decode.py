@@ -1,0 +1,334 @@
+"""Paged KV cache + prefix caching: bit-exactness of the paged layout
+against the dense slabs (blocking, interleaved join/leave, prefix-shared
+and partially-shared sessions, page-boundary crossings), KVCachePool
+slot/page accounting (double-free raises, exhaustion returns None,
+refcounts under prefix sharing — including a seeded property sweep), and
+prompt-length-bucketed prefill compile counts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lss import LSSConfig
+from repro.data.synthetic import lm_dataset
+from repro.models import transformer as T
+from repro.serve import KVCachePool, LMDecoder
+from repro.serve.decode.scheduler import _PREFILL_COMPILES, _prefill_bucket
+
+VOCAB = 512
+PROMPT_LEN = 6
+MAX_LEN = 24
+PAGE = 8                 # pages_per_slot = 3 at MAX_LEN=24
+
+CFG = T.TransformerConfig(name="tp", n_layers=2, d_model=32, n_heads=2,
+                          n_kv_heads=2, head_dim=16, d_ff=64,
+                          vocab=VOCAB, dtype=jnp.float32, kv_chunk=32)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    toks = np.asarray(lm_dataset(0, 64 * 33, VOCAB, 33))
+    return params, toks
+
+
+def _decoder(params, layout, *, page_tokens=PAGE, max_streams=3,
+             max_len=MAX_LEN):
+    dec = LMDecoder(params, CFG, LSSConfig(k_bits=4, n_tables=2),
+                    max_streams=max_streams, max_len=max_len,
+                    kv_layout=layout, kv_page_tokens=page_tokens)
+    dec.engine.fit_random(jax.random.PRNGKey(1))  # same key across
+    return dec                                    # layouts: same index
+
+
+@pytest.fixture(scope="module")
+def dense_dec(lm):
+    return _decoder(lm[0], "dense")
+
+
+@pytest.fixture(scope="module")
+def paged_dec(lm):
+    return _decoder(lm[0], "paged")
+
+
+@pytest.fixture(scope="module")
+def dense4_dec(lm):
+    return _decoder(lm[0], "dense", page_tokens=4)
+
+
+@pytest.fixture(scope="module")
+def paged4_dec(lm):
+    return _decoder(lm[0], "paged", page_tokens=4)
+
+
+# ------------------------------------------------- paged == dense exact --
+
+@pytest.mark.parametrize("head", ["full", "lss"])
+def test_paged_blocking_exact_vs_dense(dense_dec, paged_dec, lm, head):
+    _, toks = lm
+    for i in range(3):
+        a = np.asarray(dense_dec.generate(
+            jnp.asarray(toks[i:i + 1, :PROMPT_LEN]), steps=8, head=head))
+        b = np.asarray(paged_dec.generate(
+            jnp.asarray(toks[i:i + 1, :PROMPT_LEN]), steps=8, head=head))
+        np.testing.assert_array_equal(a, b, err_msg=f"row {i} head {head}")
+    # the paged step is its own program under a distinct tag; the dense
+    # tag (the observable other tests pin) is untouched
+    assert (head, f"decode[3x{MAX_LEN},paged{PAGE}]@tp") \
+        in paged_dec.engine.compile_counts
+
+
+@pytest.mark.parametrize("head", ["full", "lss"])
+def test_paged_interleaved_join_leave_exact(dense_dec, paged_dec, lm, head):
+    """5 sessions through 3 paged slots with staggered budgets — sessions
+    leave mid-flight and queued ones join freed slots (page recycling in
+    anger) — must match one-at-a-time dense blocking generate exactly."""
+    _, toks = lm
+    budgets = [3, 6, 9, 4, 12]
+    seq = [np.asarray(dense_dec.generate(
+        jnp.asarray(toks[i:i + 1, :PROMPT_LEN]), steps=budgets[i],
+        head=head))[0] for i in range(5)]
+    sched = paged_dec.scheduler(head=head)
+    streams = [sched.submit(toks[i, :PROMPT_LEN], max_new_tokens=budgets[i])
+               for i in range(5)]
+    sched.run(timeout=120.0)
+    for i, st_ in enumerate(streams):
+        assert st_.finish_reason == "max_tokens"
+        np.testing.assert_array_equal(st_.result(), seq[i],
+                                      err_msg=f"session {i} head {head}")
+    assert sched.pool.n_free == sched.max_streams
+
+
+def test_prefix_shared_sessions_skip_prefill_and_stay_exact(
+        dense_dec, paged_dec, lm):
+    """Identical prompts: the first join prefills and registers its
+    pages; every later join maps straight from the cache (no prefill, no
+    head rank) and still produces bit-identical tokens."""
+    _, toks = lm
+    prompt = toks[9, :PROMPT_LEN]
+    ref = np.asarray(dense_dec.generate(
+        jnp.asarray(prompt)[None, :], steps=7, head="full"))[0]
+    sched = paged_dec.scheduler(head="full")
+    sched.reset_stats()
+    streams = [sched.submit(prompt, max_new_tokens=7) for _ in range(5)]
+    sched.run(timeout=120.0)
+    for st_ in streams:
+        np.testing.assert_array_equal(st_.result(), ref)
+    s = sched.stats()
+    assert s.n_prefill_skipped >= 4          # all but (at most) the first
+    assert s.prefix_hit_rate > 0
+
+
+def test_partial_prefix_share_and_divergence_exact(dense4_dec, paged4_dec,
+                                                   lm):
+    """Two prompts sharing full pages but diverging in the remainder:
+    the shared full pages come from the cache (refcount > 1), the
+    divergent remainder does not, and both sessions decode exactly."""
+    _, toks = lm
+    dense, paged = dense4_dec, paged4_dec
+    a = toks[3, :10].copy()
+    b = a.copy()
+    b[-1] = (b[-1] + 1) % VOCAB              # diverge inside the rem page
+    refs = [np.asarray(dense.generate(jnp.asarray(p)[None, :], steps=5,
+                                      head="full"))[0] for p in (a, b)]
+    sched = paged.scheduler(head="full")
+    st_a = sched.submit(a, max_new_tokens=5)
+    sched.run(until=st_a.done)
+    hits0 = sched.pool.prefix_hits
+    st_b = sched.submit(b, max_new_tokens=5)
+    sched.run(timeout=120.0)
+    np.testing.assert_array_equal(st_a.result(), refs[0])
+    np.testing.assert_array_equal(st_b.result(), refs[1])
+    # b reused a's two full pages (tokens 0..7) but NOT the remainder
+    assert sched.pool.prefix_hits - hits0 == 2
+
+
+def test_page_boundary_crossing_exact(dense4_dec, paged4_dec, lm):
+    """A tiny page size forces several advance-time page allocations per
+    session; tokens must still match dense exactly."""
+    _, toks = lm
+    dense, paged = dense4_dec, paged4_dec
+    for i in (11, 12):
+        a = np.asarray(dense.generate(jnp.asarray(toks[i:i + 1, :5]),
+                                      steps=14, head="full"))
+        b = np.asarray(paged.generate(jnp.asarray(toks[i:i + 1, :5]),
+                                      steps=14, head="full"))
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------ pool accounting --
+
+def _dummy_kv(s):
+    shape = (CFG.n_layers, 1, s, CFG.n_kv_heads, CFG.head_dim)
+    return jnp.zeros(shape, CFG.dtype), jnp.zeros(shape, CFG.dtype)
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_pool_slot_validation(layout):
+    pool = KVCachePool(CFG, max_streams=2, max_len=16, layout=layout,
+                       page_tokens=PAGE)
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {0, 1} and pool.alloc() is None   # exhaustion: None
+    pool.free(a)
+    with pytest.raises(ValueError):                    # double free
+        pool.free(a)
+    with pytest.raises(ValueError):                    # out of range
+        pool.free(7)
+    k, v = _dummy_kv(8)
+    with pytest.raises(ValueError):                    # join unowned slot
+        pool.join(a, k, v, 4)
+    with pytest.raises(ValueError):                    # length > width
+        pool.join(b, k, v, 17)
+    assert pool.alloc() == a                           # free -> reuse
+    pool.join(a, k, v, 4)
+    assert pool.lengths[a] == 4
+
+
+def test_page_refcounting_under_prefix_sharing():
+    pool = KVCachePool(CFG, max_streams=3, max_len=16, layout="paged",
+                       page_tokens=4)
+    prompt = np.arange(10, dtype=np.int32)
+    k, v = _dummy_kv(12)
+    s0 = pool.alloc()
+    pool.join(s0, k, v, 10, prompt=prompt, bucket=16)
+    row0 = pool.page_table[s0].copy()
+    assert (row0[:3] > 0).all() and row0[3] == 0       # 2 full + 1 rem
+    # full and rem pages: held by slot AND cache
+    assert all(pool._ref[p] == 2 for p in row0[:3])
+    s1 = pool.alloc()
+    pool.join(s1, k, v, 10, prompt=prompt, bucket=16)
+    row1 = pool.page_table[s1]
+    np.testing.assert_array_equal(row0[:2], row1[:2])  # full pages shared
+    assert row1[2] != row0[2]                          # rem NOT shared
+    assert all(pool._ref[p] == 3 for p in row0[:2])
+    # the cached rem key still points at s0's page (no re-registration)
+    assert pool._ref[row0[2]] == 2 and pool._ref[row1[2]] == 1
+    pool.free(s0)
+    assert all(pool._ref[p] == 2 for p in row0[:2])    # s1 + cache
+    assert pool._ref[row0[2]] == 1                     # cache only
+    pool.free(s1)
+    # cache keeps every registered page alive at ref 1
+    assert all(pool._ref[p] == 1 for p in row0[:3])
+    assert pool.pages_in_use == 3
+    # full-prompt cache join: maps both full pages + a CoW'd remainder
+    s2 = pool.alloc()
+    assert pool.join_from_cache(s2, prompt, 10, bucket=16)
+    row2 = pool.page_table[s2]
+    np.testing.assert_array_equal(row2[:2], row0[:2])
+    assert row2[2] not in (0, row0[2])                 # fresh CoW page
+    # a different bucket is a different reduction shape: never a hit
+    s3 = pool.alloc()
+    assert not pool.join_from_cache(s3, prompt, 10, bucket=32)
+
+
+def test_paged_pool_page_exhaustion_raises():
+    pool = KVCachePool(CFG, max_streams=2, max_len=16, layout="paged",
+                       page_tokens=4, n_pages=3)     # scratch + 2 pages
+    k, v = _dummy_kv(12)
+    s0 = pool.alloc()
+    pool.join(s0, k, v, 5)                           # needs 2 pages
+    s1 = pool.alloc()
+    with pytest.raises(RuntimeError):
+        pool.join(s1, k, v, 5)                       # nothing evictable
+
+
+def test_evict_lru_cached_pages_under_pressure():
+    pool = KVCachePool(CFG, max_streams=1, max_len=8, layout="paged",
+                       page_tokens=4, n_pages=4)     # scratch + 3 pages
+    k, v = _dummy_kv(8)
+    s0 = pool.alloc()
+    pa = np.arange(3, dtype=np.int32)
+    pb = np.arange(3, 6, dtype=np.int32)
+    pool.join(s0, k, v, 3, prompt=pa, bucket=8)      # 1 rem page, cached
+    pool.free(s0)
+    s0 = pool.alloc()
+    pool.join(s0, k, v, 3, prompt=pb, bucket=8)      # 2nd cached page
+    pool.free(s0)
+    assert pool.pages_in_use == 2 and pool.n_free_pages == 1
+    # a 3-page join must evict both cache-only pages (LRU) to fit
+    s0 = pool.alloc()
+    pool.join(s0, k, v, 8, prompt=np.arange(8, dtype=np.int32), bucket=8)
+    assert (pool.page_table[s0] > 0).sum() == 2      # len 8 = 2 full pages
+    assert not pool.join_from_cache(
+        (pool.free(s0), pool.alloc())[1], pa, 3, 8)  # pa was evicted
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_pool_accounting_property(seed):
+    """Seeded op-sequence sweep (alloc/join/cache-join/advance/free over
+    two shareable prompts): after every op, page refcounts must equal
+    the number of slot mappings plus cache holds, the free list must be
+    disjoint from referenced pages, and together they must cover the
+    arena."""
+    rng = np.random.default_rng(seed)
+    pool = KVCachePool(CFG, max_streams=3, max_len=16, layout="paged",
+                       page_tokens=4)
+    k, v = _dummy_kv(12)
+    prompts = [np.arange(9, dtype=np.int32),
+               np.arange(100, 109, dtype=np.int32)]
+    held: list[int | None] = []
+
+    def check():
+        refs = np.zeros(pool.n_pages, np.int64)
+        for s in range(pool.max_streams):
+            for pid in pool.page_table[s]:
+                if pid > 0:
+                    refs[pid] += 1
+        for pid in pool._cache.values():
+            refs[pid] += 1
+        np.testing.assert_array_equal(refs[1:], pool._ref[1:])
+        assert pool._ref[0] == 0
+        free = set(pool._free_pages)
+        assert len(free) == len(pool._free_pages)       # no dup frees
+        assert all(pool._ref[p] == 0 for p in free)
+        assert len(free) + pool.pages_in_use == pool.n_pages - 1
+
+    for _ in range(40):
+        op = rng.integers(0, 4)
+        if op == 0:
+            s = pool.alloc()
+            if s is not None:
+                held.append(s)
+        elif op == 1 and held:
+            s = held.pop(int(rng.integers(0, len(held))))
+            pool.free(s)
+        elif op == 2 and held:
+            s = held[int(rng.integers(0, len(held)))]
+            p = prompts[int(rng.integers(0, 2))]
+            if not (rng.integers(0, 2)
+                    and pool.join_from_cache(s, p, 9, bucket=16)):
+                pool.join(s, k, v, 9, prompt=p, bucket=16)
+        elif op == 3 and held:
+            s = held[int(rng.integers(0, len(held)))]
+            if 0 < pool.lengths[s] < pool.max_len:
+                pool.advance([s])
+        check()
+
+
+# ------------------------------------------------- prefill bucketing --
+
+def test_prefill_bucket_shape():
+    assert _prefill_bucket(1) == 8 and _prefill_bucket(8) == 8
+    assert _prefill_bucket(9) == 16 and _prefill_bucket(16) == 16
+    assert _prefill_bucket(17) == 32 and _prefill_bucket(4096) == 4096
+
+
+def test_prefill_compiles_per_bucket_not_per_length(lm):
+    """Distinct prompt lengths within one power-of-two bucket share ONE
+    prefill trace; the compile counter (surfaced through DecodeStats /
+    RuntimeStats) proves it."""
+    params, toks = lm
+    cfg = CFG._replace(name="tp-buckets")
+    p2 = T.init_params(jax.random.PRNGKey(2), cfg)
+    dec = LMDecoder(p2, cfg, max_streams=2, max_len=MAX_LEN)
+    sched = dec.scheduler(head="full")
+    for plen in (3, 5, 6, 8, 9, 12, 15):     # buckets: {8, 16} only
+        st_ = sched.submit(toks[0, :plen], max_new_tokens=2)
+        sched.run(until=st_.done)
+    sched.run(timeout=60.0)
+    s = sched.stats()
+    assert s.n_prefill_buckets == 2, dict(_PREFILL_COMPILES)
+    assert s.n_prefill_compiles == 2, dict(_PREFILL_COMPILES)

@@ -1,16 +1,20 @@
-"""Schema check for ``BENCH_kernels.json`` (the CI guard after the
-kernels C-sweep).
+"""Schema check for the CI bench artifacts (``BENCH_kernels.json`` and
+``BENCH_decode.json``).
 
-The artifact mixes row kinds (per-kernel timings, the dedup C-sweep,
-the slab_dtype storage sweep), so a field quietly dropped from one
-producer would not fail any consumer — it would just vanish from the
-record.  This check pins the per-kind required fields; in particular a
-``slab_dtype`` row without its ``recall``/``recall_delta_vs_fp32``
-fields fails CI, so storage compression can never silently stop
-reporting its accuracy cost.
+Both artifacts mix row kinds (per-kernel timings, the dedup C-sweep, the
+slab_dtype storage sweep; decode sweep points and the paged-KV capacity
+rows), so a field quietly dropped from one producer would not fail any
+consumer — it would just vanish from the record.  This check pins the
+per-kind required fields; in particular a ``slab_dtype`` row without its
+``recall``/``recall_delta_vs_fp32`` fields fails CI (storage compression
+can never silently stop reporting its accuracy cost), and a decode
+artifact missing any of the three capacity kinds — ``sessions_per_gb``,
+``long_context``, ``prefix_cache`` — fails CI (the paged-KV memory story
+can never silently drop out of the bench).
 
 Usage: ``python tools/check_bench_schema.py [path]`` (default
-``BENCH_kernels.json``; exit 1 on any violation; stdlib only).
+``BENCH_kernels.json``; the artifact's own ``bench`` field selects the
+schema; exit 1 on any violation; stdlib only).
 """
 
 from __future__ import annotations
@@ -18,6 +22,7 @@ from __future__ import annotations
 import json
 import sys
 
+# ----------------------------------------------------- kernels schema --
 # every row
 BASE_FIELDS = ("kernel", "us_per_query", "shape")
 # dedup C-sweep rows (identified by having a "dedup" field)
@@ -28,8 +33,29 @@ SLAB_FIELDS = ("slab_dtype", "impl", "dma_bytes_per_query",
 
 SLAB_DTYPES = {"fp32", "bf16", "int8"}
 
+# ------------------------------------------------------ decode schema --
+DECODE_SWEEP_FIELDS = (
+    "head", "streams", "qps", "prompt_len", "max_new_tokens", "kv_layout",
+    "tokens_per_s", "ttft_p50_ms", "ttft_p95_ms", "itl_p50_ms",
+    "blocking_tok_s", "speedup_vs_blocking")
+DECODE_CAPACITY_FIELDS = {
+    "sessions_per_gb": (
+        "kv_layout", "page_tokens", "prompt_lens", "peak_pages",
+        "paged_bytes_per_session", "dense_bytes_per_session",
+        "sessions_per_gb", "sessions_per_gb_dense",
+        "sessions_per_gb_ratio"),
+    "long_context": (
+        "kv_layout", "page_tokens", "prompt_len", "n_pages", "peak_pages",
+        "arena_bytes", "dense_equal_mem_max_len",
+        "fits_dense_at_equal_memory"),
+    "prefix_cache": (
+        "kv_layout", "page_tokens", "prompt_len", "n_sessions",
+        "n_prefill_skipped", "prefix_hit_rate", "n_prefill_compiles",
+        "n_prefill_buckets"),
+}
 
-def check(rec: dict) -> list[str]:
+
+def check_kernels(rec: dict) -> list[str]:
     errors = []
     rows = rec.get("rows")
     if not isinstance(rows, list) or not rows:
@@ -57,6 +83,43 @@ def check(rec: dict) -> list[str]:
     return errors
 
 
+def check_decode(rec: dict) -> list[str]:
+    errors = []
+    rows = rec.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return ["artifact has no rows"]
+    seen_kinds: set[str] = set()
+    for i, r in enumerate(rows):
+        kind = r.get("kind", "sweep")     # pre-paged artifacts: all sweep
+        seen_kinds.add(kind)
+        if kind == "sweep":
+            required = DECODE_SWEEP_FIELDS
+        elif kind in DECODE_CAPACITY_FIELDS:
+            required = DECODE_CAPACITY_FIELDS[kind]
+        else:
+            errors.append(f"row {i}: unknown decode row kind {kind!r}")
+            continue
+        missing = [f for f in required if f not in r]
+        if missing:
+            errors.append(f"row {i} (kind={kind}): missing required "
+                          f"fields {missing}")
+    for kind in DECODE_CAPACITY_FIELDS:
+        if kind not in seen_kinds:
+            errors.append(f"decode artifact has no {kind!r} row (a "
+                          f"capacity row was silently dropped)")
+    spg = [r for r in rows if r.get("kind") == "sessions_per_gb"]
+    if any(r.get("sessions_per_gb_ratio", 0) < 1.0 for r in spg):
+        errors.append("sessions_per_gb_ratio < 1: paged layout is WORSE "
+                      "than dense per-slot reservation")
+    return errors
+
+
+def check(rec: dict) -> list[str]:
+    if rec.get("bench") == "decode":
+        return check_decode(rec)
+    return check_kernels(rec)
+
+
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
     try:
@@ -70,9 +133,15 @@ def main() -> int:
     for e in errors:
         print(f"SCHEMA CHECK FAILED: {e}", file=sys.stderr)
     if not errors:
-        n_slab = sum(1 for r in rec["rows"] if "slab_dtype" in r)
-        print(f"schema ok: {len(rec['rows'])} rows "
-              f"({n_slab} slab_dtype rows)")
+        if rec.get("bench") == "decode":
+            kinds = [r.get("kind", "sweep") for r in rec["rows"]]
+            print(f"schema ok: {len(rec['rows'])} decode rows "
+                  f"({sum(k == 'sweep' for k in kinds)} sweep, "
+                  f"{sum(k != 'sweep' for k in kinds)} capacity)")
+        else:
+            n_slab = sum(1 for r in rec["rows"] if "slab_dtype" in r)
+            print(f"schema ok: {len(rec['rows'])} rows "
+                  f"({n_slab} slab_dtype rows)")
     return 1 if errors else 0
 
 

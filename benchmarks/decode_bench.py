@@ -27,6 +27,10 @@ peak-page accounting vs dense per-slot reservation), ``long_context``
 (a >= 4k-prompt session in a page-capped arena a dense pool of equal
 bytes cannot fit), and ``prefix_cache`` (shared-prompt joins skipping
 prefill).  ``tools/check_bench_schema.py`` validates all of them.
+The capacity rows count PERSISTENT arena bytes (what bounds sessions
+held on device between steps); the paged step's per-step gather can
+transiently materialize a dense-slab-sized view — see
+docs/ARCHITECTURE.md "Paged KV decode" for the trade-off.
 
 Run:  PYTHONPATH=src python -m benchmarks.decode_bench --streams 1,2,4,8
 Env:  BENCH_FAST=1 shrinks sizes (default); BENCH_DECODE_OUT /

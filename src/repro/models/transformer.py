@@ -495,6 +495,15 @@ def decode_step_paged(params: dict, token: jax.Array, k_arena: jax.Array,
     XLA:CPU reductions are not shape-invariant at the ulp level, so the
     view width must equal the dense width exactly.
 
+    Memory caveat: that gather materializes a contiguous
+    ``[L, B, max_len, KV, H]`` view per step — the size of the full
+    dense slab — unless the backend fuses it into attention, so the
+    paged layout's savings are in PERSISTENT arena bytes (what bounds
+    how many sessions a device can hold between steps), while the
+    per-step transient peak can match the dense layout's.  The
+    ``BENCH_decode.json`` capacity rows count persistent bytes only;
+    see docs/ARCHITECTURE.md "Paged KV decode" for the trade-off.
+
     The new KV row is scattered back into each row's current write page
     (page ``lengths // p``, offset ``lengths % p``).  Rows that must not
     write — parked slots and rows at ``lengths == max_len`` (where the

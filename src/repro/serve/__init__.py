@@ -16,7 +16,8 @@ the async serving runtime.
 
 from repro.serve.batcher import DEFAULT_BUCKETS, Chunk, MicroBatcher
 from repro.serve.decode import (DecodeScheduler, DecodeSession, DecodeStats,
-                                KVCachePool, TokenStream)
+                                KVCachePool, KVPoolExhaustedError,
+                                TokenStream)
 from repro.serve.engine import (Engine, LMDecoder, RankResult, ServeMetrics,
                                 WOLServer)
 from repro.serve.heads import (HEAD_KINDS, HeadOutput, make_full_head,
@@ -37,5 +38,5 @@ __all__ = [
     "ShedError", "QueueFullError", "DeadlineExceededError",
     "RuntimeClosedError", "submit_open_loop", "submit_decode_open_loop",
     "DecodeScheduler", "DecodeSession", "DecodeStats", "KVCachePool",
-    "TokenStream",
+    "KVPoolExhaustedError", "TokenStream",
 ]

@@ -54,10 +54,10 @@ Invariants:
   rows at ``max_len``) land there, never in a recycled page.
 """
 
-from repro.serve.decode.kv_pool import KVCachePool
+from repro.serve.decode.kv_pool import KVCachePool, KVPoolExhaustedError
 from repro.serve.decode.scheduler import DecodeScheduler, DecodeStats
 from repro.serve.decode.sessions import (FINISH_REASONS, DecodeSession,
                                          TokenStream)
 
-__all__ = ["KVCachePool", "DecodeScheduler", "DecodeStats",
-           "DecodeSession", "TokenStream", "FINISH_REASONS"]
+__all__ = ["KVCachePool", "KVPoolExhaustedError", "DecodeScheduler",
+           "DecodeStats", "DecodeSession", "TokenStream", "FINISH_REASONS"]

@@ -64,7 +64,16 @@ import numpy as np
 
 from repro.kernels import registry
 
-__all__ = ["KVCachePool", "KV_LAYOUTS", "KV_LAYOUT_ENV", "KV_PAGE_ENV"]
+__all__ = ["KVCachePool", "KVPoolExhaustedError", "KV_LAYOUTS",
+           "KV_LAYOUT_ENV", "KV_PAGE_ENV"]
+
+
+class KVPoolExhaustedError(RuntimeError):
+    """The paged arena has no free page and nothing is evictable: every
+    page is referenced by a live session.  Raised by ``join`` /
+    ``join_from_cache`` (which unwind to the pre-call state first) so
+    the scheduler can shed the ONE session that could not get a page
+    instead of tearing down the whole tick."""
 
 KV_LAYOUTS = ("dense", "paged")
 KV_LAYOUT_ENV = "REPRO_KV_LAYOUT"
@@ -143,8 +152,10 @@ class KVCachePool:
         ``$REPRO_KV_PAGE_TOKENS`` (default 128).
       n_pages: paged arena size INCLUDING the reserved scratch page;
         None sizes for dense parity (every slot can reach ``max_len``).
-        Smaller values cap memory — sessions then share capacity and a
-        join/advance that cannot get a page raises ``RuntimeError``.
+        Smaller values cap memory — sessions then share capacity: a
+        join that cannot get a page raises :class:`KVPoolExhaustedError`
+        (leaving the pool untouched), and ``advance`` reports the
+        starved slots so the caller can shed just those sessions.
     """
 
     def __init__(self, cfg, max_streams: int, max_len: int, dtype=None, *,
@@ -267,7 +278,7 @@ class KVCachePool:
         if not self._free_pages:
             self._evict()
         if not self._free_pages:
-            raise RuntimeError(
+            raise KVPoolExhaustedError(
                 f"paged KV pool exhausted: all {self.n_pages - 1} pages "
                 f"are referenced by live sessions (size n_pages for the "
                 f"working set, or admit fewer concurrent sessions)")
@@ -335,42 +346,61 @@ class KVCachePool:
         p = self.page_tokens
         n_need = min(length // p + 1, self.pages_per_slot)
         n_full = 0 if prompt is None else min(length // p, n_need)
+        # Phase 1 — secure every page BEFORE touching the table, cache,
+        # or counters.  Cache hits are pinned (ref += 1) the moment they
+        # are found: a later _alloc_page may _evict, and eviction takes
+        # exactly the cache-sole-holder (ref == 1) pages, which a hit
+        # whose donor already left would be.  On exhaustion, unwind the
+        # pins/allocations and re-raise — the pool is exactly as it was.
+        hit_ids: list = []                # (j, pid, key) shared pages
+        new_ids: list = []                # (j, pid, key|None) fresh pages
+        try:
+            for j in range(n_need):
+                if j < n_full:
+                    key = self._full_key(prompt, bucket, j, p)
+                    pid = self._cache.get(key)
+                    if pid is not None:
+                        self._ref[pid] += 1        # shared, read-only
+                        hit_ids.append((j, pid, key))
+                        continue
+                    new_ids.append((j, self._alloc_page(), key))
+                else:
+                    key = None
+                    if prompt is not None and j == n_need - 1 \
+                            and length % p:
+                        key = self._rem_key(prompt, bucket, length)
+                    new_ids.append((j, self._alloc_page(), key))
+        except KVPoolExhaustedError:
+            for _, pid, _ in hit_ids + new_ids:
+                self._unref(pid)
+            raise
+        # Phase 2 — infallible bookkeeping.
         row = self.page_table[slot]
         for pid in row[row > 0]:          # re-join: release any previous
-            self._unref(int(pid))         # mapping first
+            self._unref(int(pid))         # mapping
         row[:] = 0
         scatter_ids = np.zeros((self.pages_per_slot,), np.int32)
-        for j in range(n_need):
+        for j, pid, key in hit_ids:
+            row[j] = pid
+            self._lru.move_to_end(key)
+            self.prefix_hits += 1
+        for j, pid, key in new_ids:
+            row[j] = pid
+            scatter_ids[j] = pid
+            if key is None:
+                continue
             if j < n_full:
-                key = self._full_key(prompt, bucket, j, p)
-                pid = self._cache.get(key)
-                if pid is not None:
-                    self._ref[pid] += 1            # shared, read-only
-                    row[j] = pid
-                    self._lru.move_to_end(key)
-                    self.prefix_hits += 1
-                    self._note_usage()
-                    continue
                 self.prefix_misses += 1
-                pid = self._alloc_page()
-                row[j] = pid
-                scatter_ids[j] = pid
                 self._register(key, pid)
-            else:
-                pid = self._alloc_page()
-                row[j] = pid
-                scatter_ids[j] = pid
-                self._note_usage()
-                if prompt is not None and j == n_need - 1 and length % p:
-                    # the remainder page: prompt KV at offsets < length%p
-                    # is append-only (the session decodes at offsets >=
-                    # length%p), so registering the LIVE page is safe —
-                    # hitters copy-on-write before touching it.  Never
-                    # re-register an existing key: overwriting the cache
-                    # entry would strand the old page's cache reference.
-                    key = self._rem_key(prompt, bucket, length)
-                    if key not in self._cache:
-                        self._register(key, pid)
+            elif key not in self._cache:
+                # the remainder page: prompt KV at offsets < length%p is
+                # append-only (the session decodes at offsets >=
+                # length%p), so registering the LIVE page is safe —
+                # hitters copy-on-write before touching it.  Never
+                # re-register an existing key: overwriting the cache
+                # entry would strand the old page's cache reference.
+                self._register(key, pid)
+        self._note_usage()
         self.k, self.v = _scatter_pages(self.k, self.v, k_new, v_new,
                                         jnp.asarray(scatter_ids))
         self.lengths[slot] = length
@@ -382,6 +412,8 @@ class KVCachePool:
         Returns False (mutating nothing) unless every page covering the
         prompt is cached: all full pages by content key, plus the
         remainder page (copied, since this session will write into it).
+        Raises :class:`KVPoolExhaustedError` — also mutating nothing —
+        when the copy-on-write page cannot be allocated.
         """
         if self.layout == "dense":
             return False
@@ -399,40 +431,74 @@ class KVCachePool:
             keys.append(rem_key)
         if any(k not in self._cache for k in keys):
             return False
+        # Pin every cached page BEFORE allocating the write page: the
+        # COW _alloc_page may _evict, and eviction takes exactly the
+        # cache-sole-holder (ref == 1) pages — with the donor session
+        # gone, that includes the very pages this join is mapping (the
+        # remainder page above all: evicting it would free the copy
+        # source out from under _copy_page and drop rem_key from the
+        # LRU mid-join).  ref >= 2 makes _evict skip them.  Nothing
+        # else is mutated until the allocation succeeds, so an
+        # exhaustion error unwinds to the pre-call state.
+        pids = [self._cache[k] for k in keys]
+        for pid in pids:
+            self._ref[pid] += 1
+        new_page = None
+        if n_need > n_full:                   # the session's write page
+            try:
+                new_page = self._alloc_page()
+            except KVPoolExhaustedError:
+                for pid in pids:
+                    self._unref(pid)
+                raise
         row = self.page_table[slot]
         for pid in row[row > 0]:          # re-join: release any previous
-            self._unref(int(pid))         # mapping first
+            self._unref(int(pid))         # mapping
         row[:] = 0
-        for j in range(n_full):
-            pid = self._cache[keys[j]]
-            self._ref[pid] += 1
-            row[j] = pid
+        for j in range(n_full):           # the pin doubles as the
+            row[j] = pids[j]              # session's own reference
             self._lru.move_to_end(keys[j])
         if rem_key is not None:
-            src = self._cache[rem_key]
-            dst = self._alloc_page()          # copy-on-write: this page
+            src = pids[-1]                    # copy-on-write: new_page
             self.k, self.v = _copy_page(      # is the session's write page
-                self.k, self.v, jnp.int32(src), jnp.int32(dst))
-            row[n_full] = dst
+                self.k, self.v, jnp.int32(src), jnp.int32(new_page))
+            self._unref(src)                  # session holds the copy,
+            row[n_full] = new_page            # not the cached original
             self._lru.move_to_end(rem_key)
         elif n_need > n_full:                 # page-aligned prompt: the
-            row[n_full] = self._alloc_page()  # write page starts empty
+            row[n_full] = new_page            # write page starts empty
         self.prefix_hits += len(keys)
         self._note_usage()
         self.lengths[slot] = length
         return True
 
-    def advance(self, slots) -> None:
+    def advance(self, slots) -> list[int]:
         """The fused step wrote one KV per listed slot: bump lengths (and,
-        paged, map the next page when a row crosses a page boundary)."""
+        paged, map the next page when a row crosses a page boundary).
+
+        Returns the (possibly empty) list of slots that crossed a page
+        boundary but could NOT get a page — the arena is exhausted for
+        THEM, not for the batch, so exhaustion must not raise mid-loop
+        (that would leave lengths inconsistent and fail every in-flight
+        session).  Their lengths stay correct (the step's token was
+        written into the still-mapped previous page) and their unmapped
+        entry redirects future writes to the scratch page, but their
+        attention would read scratch zeros past the boundary — the
+        caller must retire them before they decode further."""
+        oom: list[int] = []
         for s in slots:
             self.lengths[s] += 1
             if self.layout == "paged":
                 j, off = divmod(int(self.lengths[s]), self.page_tokens)
                 if off == 0 and j < self.pages_per_slot \
                         and self.page_table[s, j] == 0:
-                    self.page_table[s, j] = self._alloc_page()
+                    try:
+                        self.page_table[s, j] = self._alloc_page()
+                    except KVPoolExhaustedError:
+                        oom.append(int(s))
+                        continue
                     self._note_usage()
+        return oom
 
     # ---------------------------------------------------- step operands --
     def lengths_device(self) -> jax.Array:

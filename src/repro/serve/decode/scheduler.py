@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.decode.kv_pool import KVCachePool
+from repro.serve.decode.kv_pool import KVCachePool, KVPoolExhaustedError
 from repro.serve.decode.sessions import DecodeSession, TokenStream
 from repro.serve.runtime.future import DeadlineExceededError
 
@@ -58,8 +58,11 @@ __all__ = ["DecodeScheduler", "DecodeStats"]
 # trace-time prefill compile counter, keyed (cfg.name, bucket) — the
 # observable that proves bucketing works: O(log max_len) entries per cfg,
 # not O(distinct prompt lengths).  Module-level because _prefill_jit's
-# cache is module-level (shared across schedulers).
+# cache is module-level (shared across schedulers); the lock serializes
+# the read-modify-write against OTHER schedulers' tick threads (tick
+# serialization is per-scheduler) and the stats() iteration.
 _PREFILL_COMPILES: dict[tuple, int] = {}
+_PREFILL_LOCK = threading.Lock()
 
 _MIN_PREFILL_BUCKET = 8
 
@@ -85,7 +88,8 @@ def _prefill_jit(params, prompt, cfg, max_len):
     decode step; one compile per power-of-two bucket removes it."""
     from repro.models import transformer as T
     key = (cfg.name, max_len)                     # trace-time side effect:
-    _PREFILL_COMPILES[key] = _PREFILL_COMPILES.get(key, 0) + 1
+    with _PREFILL_LOCK:
+        _PREFILL_COMPILES[key] = _PREFILL_COMPILES.get(key, 0) + 1
     return T.prefill(params, prompt, cfg, max_len=max_len)
 
 
@@ -119,6 +123,7 @@ class DecodeStats(NamedTuple):
     prefix_hit_rate: float = math.nan   # shared / shareable prompt pages
     kv_pages_in_use: int = 0     # paged layout: pages referenced now
     kv_peak_pages: int = 0       # paged layout: high-water mark
+    n_shed_kv_oom: int = 0       # sessions shed: paged arena exhausted
 
 
 class _Inflight(NamedTuple):
@@ -208,6 +213,7 @@ class DecodeScheduler:
         self._n_sessions = 0
         self._n_finished = 0
         self._n_shed_deadline = 0
+        self._n_shed_kv_oom = 0
         self._n_tokens = 0
         self._n_steps = 0
         self._n_prefill_skipped = 0
@@ -324,7 +330,16 @@ class DecodeScheduler:
                 self._done(sess, "shed_deadline")
                 continue
             slot = self.pool.alloc()
-            tok0 = self._prefill(slot, sess.prompt)
+            try:
+                tok0 = self._prefill(slot, sess.prompt)
+            except KVPoolExhaustedError as exc:
+                # the join could not get pages (it unwound cleanly):
+                # shed this one session, keep admitting/ticking the rest
+                self.pool.free(slot)
+                sess.finished = True
+                sess.stream.fail(exc)
+                self._done(sess, "shed_kv_oom")
+                continue
             self.tok = _set_tok(self.tok, jnp.int32(slot),
                                 jnp.int32(tok0))
             sess.slot = slot
@@ -410,11 +425,21 @@ class DecodeScheduler:
             self.params, self.tok, *self.pool.step_operands())
         self.tok = tok_next                      # device-to-device feedback
         self.pool.k, self.pool.v = k_new, v_new
-        self.pool.advance(active)
+        # snapshot BEFORE any oom shed below nulls a slot: collect skips
+        # finished sessions by flag, not by table lookup
+        snapshot = [(i, self.sessions[i]) for i in active]
+        for s in self.pool.advance(active):
+            # this row crossed a page boundary and the arena had nothing
+            # left: shed THIS session (its next step would read scratch
+            # zeros past the boundary) and keep the rest of the batch
+            # alive.  Freeing the slot mid-flight is the standard retire
+            # pattern — collect skips finished sessions, and the freed
+            # row's lagged write lands on the scratch page.
+            self._shed_oom(self.sessions[s])
         with self._lock:
             self._n_steps += 1
             self._occupancy_sum += len(active) / self.max_streams
-        return _Inflight(ho, [(i, self.sessions[i]) for i in active], t0)
+        return _Inflight(ho, snapshot, t0)
 
     # --------------------------------------------------------------- collect --
     def _collect(self, item: _Inflight) -> None:
@@ -449,10 +474,27 @@ class DecodeScheduler:
             self._itl_s.extend(sess.stream.inter_token_s().tolist())
         self._done(sess, reason)
 
+    def _shed_oom(self, sess: DecodeSession | None) -> None:
+        """Retire ONE session whose row the paged arena could no longer
+        grow (see ``_dispatch``): fail its stream, free its slot, and
+        let the rest of the batch keep decoding."""
+        if sess is None or sess.finished:
+            return
+        sess.finished = True
+        sess.stream.fail(KVPoolExhaustedError(
+            f"decode session {sess.sid} shed at a page boundary: the "
+            f"paged KV arena has no free page (size n_pages for the "
+            f"working set, or admit fewer concurrent sessions)"))
+        self.sessions[sess.slot] = None
+        self.pool.free(sess.slot)
+        self._done(sess, "shed_kv_oom")
+
     def _done(self, sess: DecodeSession, reason: str) -> None:
         with self._lock:
             if reason == "shed_deadline":
                 self._n_shed_deadline += 1
+            elif reason == "shed_kv_oom":
+                self._n_shed_kv_oom += 1
             else:
                 self._n_finished += 1
         cb = self.on_session_done
@@ -507,6 +549,7 @@ class DecodeScheduler:
             self._n_sessions = 0
             self._n_finished = 0
             self._n_shed_deadline = 0
+            self._n_shed_kv_oom = 0
             self._n_tokens = 0
             self._n_steps = 0
             self._n_prefill_skipped = 0
@@ -517,7 +560,9 @@ class DecodeScheduler:
             self._t_last = None
 
     def stats(self) -> DecodeStats:
-        with self._lock:
+        with _PREFILL_LOCK:               # snapshot: another scheduler's
+            prefill_compiles = list(_PREFILL_COMPILES.items())   # tick may
+        with self._lock:                  # be tracing a new bucket
             ttft = _pcts(self._ttft_s)
             itl = _pcts(self._itl_s)
             wall = ((self._t_last - self._t_first)
@@ -538,10 +583,10 @@ class DecodeScheduler:
                 wall_s=wall,
                 n_prefill_skipped=self._n_prefill_skipped,
                 n_prefill_compiles=sum(
-                    n for (name, _), n in _PREFILL_COMPILES.items()
+                    n for (name, _), n in prefill_compiles
                     if name == self.cfg.name),
                 n_prefill_buckets=sum(
-                    1 for (name, _) in _PREFILL_COMPILES
+                    1 for (name, _), _n in prefill_compiles
                     if name == self.cfg.name),
                 prefix_hit_rate=(
                     self.pool.prefix_hits
@@ -551,4 +596,5 @@ class DecodeScheduler:
                     else math.nan),
                 kv_pages_in_use=self.pool.pages_in_use,
                 kv_peak_pages=self.pool.peak_pages_in_use,
+                n_shed_kv_oom=self._n_shed_kv_oom,
             )

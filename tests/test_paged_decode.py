@@ -14,7 +14,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.lss import LSSConfig
 from repro.data.synthetic import lm_dataset
 from repro.models import transformer as T
-from repro.serve import KVCachePool, LMDecoder
+from repro.serve import KVCachePool, KVPoolExhaustedError, LMDecoder
 from repro.serve.decode.scheduler import _PREFILL_COMPILES, _prefill_bucket
 
 VOCAB = 512
@@ -232,6 +232,127 @@ def test_paged_pool_page_exhaustion_raises():
     s1 = pool.alloc()
     with pytest.raises(RuntimeError):
         pool.join(s1, k, v, 5)                       # nothing evictable
+
+
+def test_join_from_cache_cow_alloc_cannot_evict_own_pages():
+    """Regression: the COW _alloc_page inside join_from_cache runs the
+    LRU evictor, which (donor gone, cache the sole holder) used to evict
+    the very remainder page being joined — KeyError mid-mutation.  The
+    pages of the in-progress join are pinned now: eviction must take an
+    UNRELATED cache-only page and the join must complete."""
+    pool = KVCachePool(CFG, max_streams=3, max_len=8, layout="paged",
+                       page_tokens=4, n_pages=4)     # scratch + 3 pages
+    k, v = _dummy_kv(8)
+    pa = np.arange(6, dtype=np.int32)                # 1 full + 1 rem page
+    pb = np.arange(10, 13, dtype=np.int32)           # 1 rem page
+    s = pool.alloc()
+    pool.join(s, k, v, 6, prompt=pa, bucket=8)
+    pool.free(s)                                     # pa pages: cache-only
+    s = pool.alloc()
+    pool.join(s, k, v, 3, prompt=pb, bucket=8)
+    pool.free(s)                                     # pb page: cache-only
+    assert pool.n_free_pages == 0                    # all 3 pages cached
+    s = pool.alloc()
+    assert pool.join_from_cache(s, pa, 6, bucket=8)  # must NOT eat pa
+    row = pool.page_table[s]
+    assert (row[:2] > 0).all() and pool.lengths[s] == 6
+    assert pool._ref[row[0]] == 2                    # full: cache + session
+    assert pool._ref[row[1]] == 1                    # fresh CoW write page
+    # pb's (LRU-evictable, unrelated) page paid for the CoW; pa survives
+    s2 = pool.alloc()
+    assert not pool.join_from_cache(s2, pb, 3, bucket=8)
+
+
+def test_join_from_cache_exhaustion_unwinds_cleanly():
+    """When even eviction cannot produce the CoW page, join_from_cache
+    must raise KVPoolExhaustedError with the pool EXACTLY as it was —
+    no refs bumped, no page-table row half-written, no LRU churn."""
+    pool = KVCachePool(CFG, max_streams=3, max_len=8, layout="paged",
+                       page_tokens=4, n_pages=4)     # scratch + 3 pages
+    k, v = _dummy_kv(8)
+    pa = np.arange(6, dtype=np.int32)
+    s = pool.alloc()
+    pool.join(s, k, v, 6, prompt=pa, bucket=8)
+    pool.free(s)                                     # 2 cache-only pages
+    s1 = pool.alloc()
+    pool.join(s1, k, v, 3)                           # 3rd page: live, no key
+    assert pool.n_free_pages == 0
+    s2 = pool.alloc()
+    ref0 = pool._ref.copy()
+    cache0, lru0 = dict(pool._cache), list(pool._lru)
+    with pytest.raises(KVPoolExhaustedError):
+        pool.join_from_cache(s2, pa, 6, bucket=8)    # pa's pages pinned,
+    np.testing.assert_array_equal(pool._ref, ref0)   # nothing evictable
+    assert pool._cache == cache0 and list(pool._lru) == lru0
+    assert (pool.page_table[s2] == 0).all() and pool.lengths[s2] == 0
+    # join() CAN proceed by evicting pa's rem entry for its write page
+    pool.join(s2, k, v, 6, prompt=pa, bucket=8)
+    assert pool.lengths[s2] == 6
+
+
+def test_join_exhaustion_unwinds_cleanly():
+    """join() securing pages must also be all-or-nothing: on exhaustion
+    nothing is mutated (no stale cache registrations pointing at pages
+    whose KV was never scattered, no leaked refs)."""
+    pool = KVCachePool(CFG, max_streams=3, max_len=8, layout="paged",
+                       page_tokens=4, n_pages=3)     # scratch + 2 pages
+    k, v = _dummy_kv(8)
+    s0 = pool.alloc()
+    pool.join(s0, k, v, 3)                           # 1 page, live
+    s1 = pool.alloc()
+    ref0 = pool._ref.copy()
+    with pytest.raises(KVPoolExhaustedError):
+        pool.join(s1, k, v, 6, prompt=np.arange(6, dtype=np.int32),
+                  bucket=8)                          # needs 2, only 1 left
+    np.testing.assert_array_equal(pool._ref, ref0)
+    assert not pool._cache                           # no stale registration
+    assert (pool.page_table[s1] == 0).all() and pool.lengths[s1] == 0
+    assert pool.n_free_pages == 1
+
+
+def test_advance_reports_starved_slots_without_raising():
+    """advance() on an exhausted arena must not raise mid-loop: every
+    slot's length still advances (the step DID write), and only the
+    slots that could not map their next page are reported back."""
+    pool = KVCachePool(CFG, max_streams=2, max_len=8, layout="paged",
+                       page_tokens=4, n_pages=3)     # scratch + 2 pages
+    k, v = _dummy_kv(8)
+    s0, s1 = pool.alloc(), pool.alloc()
+    pool.join(s0, k, v, 3)
+    pool.join(s1, k, v, 2)
+    assert pool.n_free_pages == 0
+    assert pool.advance([s0, s1]) == [s0]            # s0 hit the boundary
+    assert pool.lengths[s0] == 4 and pool.lengths[s1] == 3
+    assert pool.page_table[s0, 1] == 0               # unmapped -> scratch
+    pool.free(s0)                                    # the starved session
+    pool.free(s1)                                    # is shed; pool drains
+    assert pool.n_free_pages == 2 and pool.pages_in_use == 0
+
+
+def test_scheduler_sheds_only_starved_session(lm):
+    """A session that cannot grow past a page boundary is shed with
+    KVPoolExhaustedError; the OTHER session keeps decoding and its
+    tokens stay bit-identical to the dense blocking reference."""
+    params, toks = lm
+    cfg = CFG._replace(name="tp-oomshed")
+    p2 = T.init_params(jax.random.PRNGKey(3), cfg)
+    mk = lambda layout, pages: LMDecoder(          # noqa: E731
+        p2, cfg, max_streams=2, max_len=16, kv_layout=layout,
+        kv_page_tokens=4, kv_pages=pages)
+    ref = np.asarray(mk("dense", None).generate(
+        jnp.asarray(toks[1:2, :5]), steps=2, head="full"))[0]
+    sched = mk("paged", 4).scheduler(head="full")  # scratch + 3 pages
+    st_a = sched.submit(toks[0, :3], max_new_tokens=10)   # 1 page, grows
+    st_b = sched.submit(toks[1, :5], max_new_tokens=2)    # 2 pages
+    sched.run(timeout=120.0)
+    assert st_a.finish_reason == "error"
+    assert isinstance(st_a.exception(), KVPoolExhaustedError)
+    assert len(st_a) >= 1                          # its landed tokens kept
+    assert st_b.finish_reason == "max_tokens"
+    np.testing.assert_array_equal(st_b.result(), ref)
+    s = sched.stats()
+    assert s.n_shed_kv_oom == 1 and s.n_finished == 1
+    assert sched.pool.n_free == sched.max_streams  # accounting drained
 
 
 def test_evict_lru_cached_pages_under_pressure():

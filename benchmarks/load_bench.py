@@ -17,9 +17,20 @@ Each (head, impl, qps) point reports:
     in flight at a time: the semantics the synchronous Engine offers an
     online caller) — and the async/sync throughput ratio.
 
+A second mode (``--bench obs``) measures the observability tax and
+writes ``BENCH_obs.json``: the same burst workload with obs fully on
+(metric histograms + request tracing + 5% recall audit) vs a no-op
+registry (``obs.set_enabled(False)`` before construction — every
+record/span call hits the shared no-op object), reporting client-side
+throughput and p99 for both plus an ``audit_recall`` row where the
+online auditor at rate 1.0 is checked against an offline brute-force
+rerank of the same requests.  ``--max-overhead-pct`` turns the overhead
+number into a CI guard.
+
 Run:  PYTHONPATH=src python -m benchmarks.load_bench --qps 200,2000
-Env:  BENCH_FAST=1 shrinks sizes (default); BENCH_LOAD_OUT / BENCH_OUT_DIR
-      override the artifact path.
+      PYTHONPATH=src python -m benchmarks.load_bench --bench obs
+Env:  BENCH_FAST=1 shrinks sizes (default); BENCH_LOAD_OUT /
+      BENCH_OBS_OUT / BENCH_OUT_DIR override the artifact paths.
 """
 
 from __future__ import annotations
@@ -28,12 +39,14 @@ import argparse
 import json
 import math
 import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.lss import LSSConfig
 from repro.serve import AsyncRuntime, Engine
 from repro.serve.runtime import submit_open_loop
@@ -138,12 +151,129 @@ def bench_load(*, m: int, n_requests: int, qps_list: list[float],
     }
 
 
+# --------------------------------------------------------- obs bench --
+
+def _client_point(futs: list) -> tuple[float, float]:
+    """(rps, p99_ms) measured entirely client-side from future
+    timestamps — identical instrumentation in obs-on and no-op modes,
+    so the comparison never depends on the registry being live."""
+    done = [f for f in futs if f.exception() is None]
+    lats = np.array([f.t_done - f.t_submit for f in done])
+    span = max(f.t_done for f in done) - min(f.t_submit for f in done)
+    return len(done) / span, float(np.percentile(lats, 99) * 1e3)
+
+
+def _run_obs_mode(*, enabled: bool, audit_rate: float, m: int,
+                  buckets: tuple[int, ...], xs: np.ndarray, reps: int
+                  ) -> tuple[float, float]:
+    """Best-of-``reps`` burst segment with obs force-(en|dis)abled before
+    any component is constructed (registries capture the switch then)."""
+    obs.set_enabled(enabled)
+    eng = build_engine(m, "ref", buckets)
+    if audit_rate > 0:
+        from repro.obs.audit import RecallAuditor
+        eng.auditor = RecallAuditor(eng, audit_rate,
+                                    queue_cap=xs.shape[0])
+    warm(eng, "lss")
+    best_rps, best_p99 = 0.0, math.inf
+    for rep in range(reps + 1):        # rep 0 is an untimed warm-up
+        rt = AsyncRuntime(eng, head="lss", max_queue=xs.shape[0] + 8,
+                          policy="shed")
+        futs, _ = submit_open_loop(rt, xs, 0.0, seed=11 + rep)
+        rt.drain(timeout=120.0)
+        rt.close()
+        if rep == 0:
+            continue
+        rps, p99 = _client_point(futs)
+        best_rps, best_p99 = max(best_rps, rps), min(best_p99, p99)
+    if eng.auditor is not None:
+        eng.auditor.drain()
+        eng.auditor.close()
+    return best_rps, best_p99
+
+
+def _run_audit_point(*, m: int, buckets: tuple[int, ...],
+                     xs: np.ndarray) -> dict:
+    """Auditor at rate 1.0 vs an offline brute-force rerank of the SAME
+    requests through the engine's own full head."""
+    obs.set_enabled(True)
+    eng = build_engine(m, "ref", buckets)
+    from repro.obs.audit import RecallAuditor
+    eng.auditor = RecallAuditor(eng, 1.0, queue_cap=xs.shape[0])
+    warm(eng, "lss")
+    rt = AsyncRuntime(eng, head="lss", max_queue=xs.shape[0] + 8,
+                      policy="shed")
+    futs, _ = submit_open_loop(rt, xs, 0.0, seed=13)
+    rt.drain(timeout=120.0)
+    rt.close()
+    eng.auditor.drain()
+    online = eng.auditor.recall
+    n_rows = eng.auditor.n_rows
+    eng.auditor.close()
+
+    served = np.stack([np.asarray(f.result().ids).reshape(-1)
+                       for f in futs])
+    bmax = max(eng.batcher.buckets)
+    exact = np.concatenate(
+        [np.asarray(eng.rank(xs[i:i + bmax], head="full",
+                             record=False).ids).reshape(len(xs[i:i + bmax]), -1)
+         for i in range(0, xs.shape[0], bmax)], axis=0)
+    hit = (exact[:, :, None] == served[:, None, :]).any(-1)
+    offline = float(hit.mean())
+    return {
+        "kind": "audit_recall",
+        "recall_online": online,
+        "recall_offline": offline,
+        "recall_delta": abs(online - offline),
+        "n_rows": n_rows,
+        "top_k": TOP_K,
+        "audit_rate": 1.0,
+    }
+
+
+def bench_obs(*, m: int, n_requests: int, buckets: tuple[int, ...],
+              audit_rate: float, reps: int) -> dict:
+    rng = np.random.default_rng(3)
+    xs = rng.standard_normal((n_requests, D_MODEL)).astype(np.float32)
+    was_enabled = obs.enabled()
+    try:
+        rps_on, p99_on = _run_obs_mode(
+            enabled=True, audit_rate=audit_rate, m=m, buckets=buckets,
+            xs=xs, reps=reps)
+        rps_off, p99_off = _run_obs_mode(
+            enabled=False, audit_rate=0.0, m=m, buckets=buckets,
+            xs=xs, reps=reps)
+        overhead = {
+            "kind": "overhead",
+            "rps_on": round(rps_on, 1),
+            "rps_off": round(rps_off, 1),
+            "overhead_pct": round((rps_off - rps_on) / rps_off * 100, 3),
+            "p99_on_ms": round(p99_on, 3),
+            "p99_off_ms": round(p99_off, 3),
+            "audit_rate": audit_rate,
+            "n_requests": n_requests,
+            "reps": reps,
+        }
+        audit = _run_audit_point(m=m, buckets=buckets, xs=xs)
+    finally:
+        obs.set_enabled(was_enabled)
+    return {
+        "bench": "obs",
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "buckets": list(buckets),
+        "rows": [overhead, audit],
+    }
+
+
 def write_artifact(record: dict, path: str | None = None) -> str:
-    """Precedence: explicit path > $BENCH_LOAD_OUT > $BENCH_OUT_DIR/
-    BENCH_load.json > ./BENCH_load.json."""
-    path = (path or os.environ.get("BENCH_LOAD_OUT")
+    """Precedence: explicit path > $BENCH_LOAD_OUT / $BENCH_OBS_OUT >
+    $BENCH_OUT_DIR/BENCH_<bench>.json > ./BENCH_<bench>.json."""
+    bench = record.get("bench", "load")
+    env = "BENCH_OBS_OUT" if bench == "obs" else "BENCH_LOAD_OUT"
+    path = (path or os.environ.get(env)
             or os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
-                            "BENCH_load.json"))
+                            f"BENCH_{bench}.json"))
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
     return path
@@ -156,6 +286,18 @@ def _csv_floats(s: str) -> list[float]:
 def main(argv: list[str] | None = None) -> dict:
     fast = os.environ.get("BENCH_FAST", "1") != "0"
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", choices=("load", "obs"), default="load",
+                    help="load: QPS sweep -> BENCH_load.json; obs: "
+                         "observability overhead + online-vs-offline "
+                         "audit recall -> BENCH_obs.json")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="obs bench: best-of-N repetitions per mode")
+    ap.add_argument("--audit-rate", type=float, default=0.05,
+                    help="obs bench: audit sampling rate in the "
+                         "obs-on overhead segment")
+    ap.add_argument("--max-overhead-pct", type=float, default=None,
+                    help="obs bench: fail (exit 1) if obs-on throughput "
+                         "overhead exceeds this percentage")
     ap.add_argument("--qps", type=_csv_floats,
                     default=[200.0, 0.0] if fast
                     else [100.0, 500.0, 2000.0, 0.0],
@@ -176,6 +318,30 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--deadline-ms", type=float, default=None)
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+
+    if args.bench == "obs":
+        rec = bench_obs(
+            m=args.m, n_requests=args.requests, buckets=args.buckets,
+            audit_rate=args.audit_rate, reps=args.reps)
+        path = write_artifact(rec, args.out)
+        print(f"wrote {path}")
+        oh = next(r for r in rec["rows"] if r["kind"] == "overhead")
+        au = next(r for r in rec["rows"] if r["kind"] == "audit_recall")
+        print(f"  obs-on  {oh['rps_on']:>8.1f} rps  "
+              f"p99={oh['p99_on_ms']:>7.2f} ms  "
+              f"(audit rate {oh['audit_rate']})")
+        print(f"  obs-off {oh['rps_off']:>8.1f} rps  "
+              f"p99={oh['p99_off_ms']:>7.2f} ms  (no-op registry)")
+        print(f"  overhead {oh['overhead_pct']:+.2f}%")
+        print(f"  audit recall@{au['top_k']}: online={au['recall_online']:.6f} "
+              f"offline={au['recall_offline']:.6f} "
+              f"delta={au['recall_delta']:.2e} over {au['n_rows']} rows")
+        if (args.max_overhead_pct is not None
+                and oh["overhead_pct"] > args.max_overhead_pct):
+            print(f"OBS OVERHEAD GUARD FAILED: {oh['overhead_pct']:.2f}% "
+                  f"> {args.max_overhead_pct}%", file=sys.stderr)
+            sys.exit(1)
+        return rec
 
     rec = bench_load(
         m=args.m, n_requests=args.requests, qps_list=args.qps,

@@ -154,6 +154,30 @@ def bench_load_rows() -> list[str]:
     ]
 
 
+def bench_obs_rows() -> list[str]:
+    """Observability tax + online-vs-offline audit recall agreement;
+    writes BENCH_obs.json (the obs CI job re-runs this with the
+    overhead guard armed)."""
+    from benchmarks.load_bench import bench_obs, write_artifact
+    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    rec = bench_obs(
+        m=5_000 if fast else 50_000,
+        n_requests=128 if fast else 1024,
+        buckets=(1, 4, 16), audit_rate=0.05,
+        reps=2 if fast else 3)
+    write_artifact(rec)   # honors BENCH_OBS_OUT / BENCH_OUT_DIR itself
+    oh = next(r for r in rec["rows"] if r["kind"] == "overhead")
+    au = next(r for r in rec["rows"] if r["kind"] == "audit_recall")
+    return [
+        f"obs_overhead,{oh['overhead_pct']:.2f},"
+        f"rps_on={oh['rps_on']};rps_off={oh['rps_off']};"
+        f"p99_on={oh['p99_on_ms']};p99_off={oh['p99_off_ms']}",
+        f"obs_audit_recall,{au['recall_online']:.6f},"
+        f"offline={au['recall_offline']:.6f};delta={au['recall_delta']:.2e};"
+        f"rows={au['n_rows']}",
+    ]
+
+
 def bench_decode_rows() -> list[str]:
     """Short streaming-decode load run (burst session arrivals, stream
     sweep, blocking per-prompt generate baseline); writes
@@ -229,6 +253,7 @@ def main() -> None:
     rows = []
     rows += bench_serving_rows()
     rows += bench_load_rows()
+    rows += bench_obs_rows()
     rows += bench_decode_rows()
     kern_rec, kern_rows = bench_kernels()
     _write_artifact("kernels", kern_rec)

@@ -10,10 +10,20 @@ then serve one of three modes:
     sessions/s (0 = burst), N concurrent streams interleaved in one
     fused decode step, per-token TokenStream futures, TTFT/ITL stats.
 
+Observability: ``--metrics-port P`` starts the stdlib ``/metrics``
+endpoint (Prometheus text; ``/metrics.json``, ``/trace`` too — see
+``repro.obs.export``) BEFORE training begins, so a scraper can watch the
+whole run; ``--hold-metrics S`` keeps the process (and endpoint) alive S
+seconds after serving finishes so a one-shot scrape (CI) always lands.
+``--audit-rate F`` samples fraction F of LSS-served scoring requests
+through the online label-recall auditor (``lss_audit_recall_at_k``;
+also settable via ``$REPRO_OBS_AUDIT_RATE``).
+
     python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 16 --steps 32 [--head full|lss|lss-sharded] \
         [--runtime async --qps 500 --deadline-ms 50] \
-        [--mode decode --streams 8 --sessions 32 --qps 0]
+        [--mode decode --streams 8 --sessions 32 --qps 0] \
+        [--metrics-port 9100 --audit-rate 0.25 --hold-metrics 30]
 """
 
 import argparse
@@ -64,8 +74,31 @@ def main() -> None:
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request (or per-session) deadline; "
                          "already-late work is shed, not executed")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text on "
+                         "http://127.0.0.1:PORT/metrics (0 = ephemeral; "
+                         "started before training so the whole run is "
+                         "observable)")
+    ap.add_argument("--audit-rate", type=float, default=None,
+                    help="online label-recall audit: fraction of "
+                         "LSS-served scoring requests re-ranked through "
+                         "the exact full head (default: "
+                         "$REPRO_OBS_AUDIT_RATE, 0 = off)")
+    ap.add_argument("--hold-metrics", type=float, default=0.0,
+                    help="keep the process (and /metrics) alive this many "
+                         "seconds after serving, for one-shot scrapers")
     args = ap.parse_args()
     head = "full" if args.no_lss else args.head
+
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs.export import MetricsServer
+        server = MetricsServer(port=args.metrics_port)
+        print(f"metrics: {server.url}")
+    if args.audit_rate is not None:
+        import os
+        from repro import obs as _obs
+        os.environ[_obs.AUDIT_RATE_ENV] = str(args.audit_rate)
 
     import jax
     import jax.numpy as jnp
@@ -107,17 +140,24 @@ def main() -> None:
         dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:128]))
     prompt = jnp.asarray(toks[500:500 + args.batch, :16])
 
-    if args.mode == "decode":
-        serve_decode(dec, toks, head, args)
-        return
-    if args.runtime == "async":
-        serve_async(dec, prompt, head, args)
-        return
-
-    out = dec.generate(prompt, steps=args.steps, head=head)
-    print(f"decoded {out.shape} tokens; head={head}")
-    print(out[:2])
-    print(f"engine compiles (head, bucket): {dec.engine.compile_counts}")
+    try:
+        if args.mode == "decode":
+            serve_decode(dec, toks, head, args)
+        elif args.runtime == "async":
+            serve_async(dec, prompt, head, args)
+        else:
+            out = dec.generate(prompt, steps=args.steps, head=head)
+            print(f"decoded {out.shape} tokens; head={head}")
+            print(out[:2])
+            print(f"engine compiles (head, bucket): "
+                  f"{dec.engine.compile_counts}")
+    finally:
+        if args.hold_metrics > 0:
+            import time
+            print(f"holding /metrics for {args.hold_metrics}s", flush=True)
+            time.sleep(args.hold_metrics)
+        if server is not None:
+            server.close()
 
 
 def serve_decode(dec, toks, head: str, args) -> None:
@@ -190,6 +230,11 @@ def serve_async(dec, prompt, head: str, args) -> None:
         rt.drain(timeout=300.0)
         s = rt.stats()
     ok = sum(f.exception() is None for f in futs)
+    aud = dec.engine.auditor
+    if aud is not None:
+        aud.drain()
+        print(f"  audit recall@k={aud.recall:.4f} over {aud.n_rows} "
+              f"rows (sampled at {aud.rate})")
     print(f"async runtime: head={head} qps={args.qps} "
           f"{ok}/{len(futs)} served")
     print(f"  throughput={s.throughput_rps:,.0f} rps  "

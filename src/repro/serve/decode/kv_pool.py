@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import registry
 
 __all__ = ["KVCachePool", "KVPoolExhaustedError", "KV_LAYOUTS",
@@ -284,6 +285,7 @@ class KVCachePool:
                 f"working set, or admit fewer concurrent sessions)")
         pid = self._free_pages.pop()
         self._ref[pid] = 1
+        obs.event("page_alloc", pid=pid, free=len(self._free_pages))
         return pid
 
     def _unref(self, pid: int) -> None:
@@ -300,6 +302,7 @@ class KVCachePool:
                 del self._cache[key]
                 del self._lru[key]
                 self._unref(pid)
+                obs.event("evict", pid=pid)
                 return
         # every cached page is also live in a session: nothing to evict
 
@@ -384,6 +387,8 @@ class KVCachePool:
             row[j] = pid
             self._lru.move_to_end(key)
             self.prefix_hits += 1
+        if hit_ids:
+            obs.event("prefix_hit", slot=slot, pages=len(hit_ids))
         for j, pid, key in new_ids:
             row[j] = pid
             scatter_ids[j] = pid
@@ -465,9 +470,11 @@ class KVCachePool:
             self._unref(src)                  # session holds the copy,
             row[n_full] = new_page            # not the cached original
             self._lru.move_to_end(rem_key)
+            obs.event("cow", slot=slot, src=int(src), dst=int(new_page))
         elif n_need > n_full:                 # page-aligned prompt: the
             row[n_full] = new_page            # write page starts empty
         self.prefix_hits += len(keys)
+        obs.event("prefix_hit", slot=slot, pages=len(keys), full=True)
         self._note_usage()
         self.lengths[slot] = length
         return True

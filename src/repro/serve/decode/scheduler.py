@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.serve.decode.kv_pool import KVCachePool, KVPoolExhaustedError
 from repro.serve.decode.sessions import DecodeSession, TokenStream
 from repro.serve.runtime.future import DeadlineExceededError
@@ -132,14 +133,6 @@ class _Inflight(NamedTuple):
     t0: float
 
 
-def _pcts(xs: list[float]) -> tuple[float, float, float]:
-    arr = np.asarray(xs, np.float64) * 1e3
-    if not arr.size:
-        return (math.nan,) * 3
-    p = np.percentile(arr, (50, 95, 99))
-    return float(p[0]), float(p[1]), float(p[2])
-
-
 class DecodeScheduler:
     """Session-based streaming decode over one Engine head.
 
@@ -218,8 +211,12 @@ class DecodeScheduler:
         self._n_steps = 0
         self._n_prefill_skipped = 0
         self._occupancy_sum = 0.0
-        self._ttft_s: list[float] = []
-        self._itl_s: list[float] = []
+        # bounded token-latency telemetry (was: unbounded TTFT/ITL lists)
+        self.obs = obs.MetricsRegistry(scope_prefix="decode")
+        self._h_ttft = self.obs.histogram(
+            "decode_ttft_seconds", "submit -> first token, queue included")
+        self._h_itl = self.obs.histogram(
+            "decode_itl_seconds", "inter-token gap")
         self._t_first: float | None = None
         self._t_last: float | None = None
 
@@ -282,10 +279,19 @@ class DecodeScheduler:
         AsyncRuntime dispatcher owns the same scheduler.
         """
         with self._tick_lock:
+            # only busy ticks get spans: the runtime dispatcher polls
+            # tick() continuously, and idle polls are not work
+            busy = (self._inflight is not None or self.pool.n_active > 0
+                    or bool(self._pending))
+            span = obs.start_span("tick") if busy else None
             self._admit()
             prev, self._inflight = self._inflight, self._dispatch()
             if prev is not None:
                 self._collect(prev)
+            if span is not None:
+                span.end("ok", dispatched=self._inflight is not None,
+                         collected=prev is not None,
+                         active=self.pool.n_active)
             return prev is not None or self._inflight is not None \
                 or not self.idle
 
@@ -330,16 +336,23 @@ class DecodeScheduler:
                 self._done(sess, "shed_deadline")
                 continue
             slot = self.pool.alloc()
+            pspan = obs.start_span("prefill", sid=sess.sid, slot=slot,
+                                   plen=int(sess.prompt.shape[0]))
             try:
                 tok0 = self._prefill(slot, sess.prompt)
             except KVPoolExhaustedError as exc:
                 # the join could not get pages (it unwound cleanly):
                 # shed this one session, keep admitting/ticking the rest
+                pspan.end_from_exc(exc)
+                obs.event("shed_kv_oom", sid=sess.sid, at="join")
                 self.pool.free(slot)
                 sess.finished = True
                 sess.stream.fail(exc)
                 self._done(sess, "shed_kv_oom")
                 continue
+            pspan.end("ok")
+            if sess.stream.span is not None:
+                sess.stream.span.event("join", slot=slot)
             self.tok = _set_tok(self.tok, jnp.int32(slot),
                                 jnp.int32(tok0))
             sess.slot = slot
@@ -372,6 +385,7 @@ class DecodeScheduler:
             self._tok0_cache.move_to_end(key)
             with self._lock:
                 self._n_prefill_skipped += 1
+            obs.event("prefill_skip", plen=plen, bucket=bucket)
             return memo[1]
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :plen] = prompt_np
@@ -467,11 +481,11 @@ class DecodeScheduler:
         if sess.slot is not None:
             self.sessions[sess.slot] = None
             self.pool.free(sess.slot)
-        with self._lock:
-            ttft = sess.stream.ttft_s()
-            if ttft is not None:
-                self._ttft_s.append(ttft)
-            self._itl_s.extend(sess.stream.inter_token_s().tolist())
+        ttft = sess.stream.ttft_s()
+        if ttft is not None:
+            self._h_ttft.record(ttft)
+        for gap in sess.stream.inter_token_s():
+            self._h_itl.record(gap)
         self._done(sess, reason)
 
     def _shed_oom(self, sess: DecodeSession | None) -> None:
@@ -481,6 +495,7 @@ class DecodeScheduler:
         if sess is None or sess.finished:
             return
         sess.finished = True
+        obs.event("shed_kv_oom", sid=sess.sid, at="page_boundary")
         sess.stream.fail(KVPoolExhaustedError(
             f"decode session {sess.sid} shed at a page boundary: the "
             f"paged KV arena has no free page (size n_pages for the "
@@ -554,17 +569,19 @@ class DecodeScheduler:
             self._n_steps = 0
             self._n_prefill_skipped = 0
             self._occupancy_sum = 0.0
-            self._ttft_s = []
-            self._itl_s = []
+            self._h_ttft.reset()
+            self._h_itl.reset()
             self._t_first = None
             self._t_last = None
 
     def stats(self) -> DecodeStats:
         with _PREFILL_LOCK:               # snapshot: another scheduler's
             prefill_compiles = list(_PREFILL_COMPILES.items())   # tick may
+        # quantiles off the bounded reservoirs, OUTSIDE self._lock —
+        # a stats() poll never stalls the tick thread
+        ttft = tuple(v * 1e3 for v in self._h_ttft.quantile((50, 95, 99)))
+        itl = tuple(v * 1e3 for v in self._h_itl.quantile((50, 95, 99)))
         with self._lock:                  # be tracing a new bucket
-            ttft = _pcts(self._ttft_s)
-            itl = _pcts(self._itl_s)
             wall = ((self._t_last - self._t_first)
                     if self._t_first is not None and self._t_last is not None
                     else 0.0)

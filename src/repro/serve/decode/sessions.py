@@ -49,6 +49,10 @@ class TokenStream:
         self.t_submit = (time.perf_counter() if t_submit is None
                          else t_submit)
         self.deadline = deadline          # absolute perf_counter, or None
+        # observability span (set by the submitting front-end); closed
+        # here at finish/fail so EVERY terminal path — eos, max_tokens,
+        # deadline shed, shed_kv_oom, runtime close — closes it
+        self.span = None
         self._tokens: list[int] = []
         self._times: list[float] = []     # perf_counter per appended token
         self._finish_reason: str | None = None
@@ -62,7 +66,10 @@ class TokenStream:
                 f"stream {self.sid} appended after finish"
             self._tokens.append(int(token))
             self._times.append(time.perf_counter() if t is None else t)
+            first = len(self._tokens) == 1
             self._cond.notify_all()
+        if first and self.span is not None:
+            self.span.event("first_token")
 
     def finish(self, reason: str) -> None:
         assert reason in FINISH_REASONS, reason
@@ -70,7 +77,10 @@ class TokenStream:
             assert self._finish_reason is None, \
                 f"stream {self.sid} finished twice"
             self._finish_reason = reason
+            n = len(self._tokens)
             self._cond.notify_all()
+        if self.span is not None:         # outside _cond: span lock is leaf
+            self.span.end("ok", reason=reason, n_tokens=n)
 
     def fail(self, exc: BaseException) -> None:
         with self._cond:
@@ -78,7 +88,11 @@ class TokenStream:
                 return                    # already terminal; keep tokens
             self._exc = exc
             self._finish_reason = "error"
+            n = len(self._tokens)
             self._cond.notify_all()
+        if self.span is not None:
+            self.span.set(n_tokens=n)
+            self.span.end_from_exc(exc)
 
     # -- consumer side -----------------------------------------------------
     def done(self) -> bool:

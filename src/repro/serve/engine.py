@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import simhash
 from repro.core.iul import fit_lss
 from repro.core.lss import LSSConfig, LSSIndex, build_index
@@ -119,7 +120,8 @@ class Engine:
                  model_axis: str = "model",
                  impl: str | None = None,
                  dedup: str | None = None,
-                 slab_dtype: str | None = None):
+                 slab_dtype: str | None = None,
+                 audit_rate: float | None = None):
         if head not in HEAD_KINDS:
             raise ValueError(f"head must be one of {HEAD_KINDS}, got {head}")
         if impl is not None and impl not in registry.IMPLS:
@@ -156,6 +158,23 @@ class Engine:
         self._results: list[RankResult] = []
         self._next_rid = 0
         self.lock = threading.RLock()
+        # bounded latency telemetry (was: unbounded self._lat list)
+        self.obs = obs.MetricsRegistry(scope_prefix="engine")
+        self._h_lat = self.obs.histogram(
+            "engine_request_latency_seconds",
+            "submit -> result per ranked request")
+        self.obs.collect(self._collect_gauges)
+        # online label-recall auditor (ISSUE: the paper's LSS-recall
+        # claim as a live gauge); rate 0 = off, env-tunable
+        if audit_rate is None:
+            audit_rate = obs.audit_rate_from_env(0.0)
+        self.auditor = None
+        if audit_rate > 0:
+            # offers are gated per request group on kind != "full" (an
+            # exact head needs no audit), so the default head doesn't
+            # matter here — LSS traffic through any engine gets sampled
+            from repro.obs.audit import RecallAuditor
+            self.auditor = RecallAuditor(self, audit_rate)
         self.reset_metrics()
 
     @property
@@ -355,6 +374,8 @@ class Engine:
             jax.block_until_ready(out.logits)
             wall = time.perf_counter() - t0
             self._record(out, n, wall, [wall] * n, labels)
+            if self.auditor is not None and kind != "full":
+                self.auditor.offer(x, np.asarray(out.ids))
         return out
 
     # --------------------------------------------------- request queue --
@@ -417,6 +438,8 @@ class Engine:
         self._record(out, n, t1 - t0, lats, labels)
         logits = np.asarray(out.logits)
         ids = np.asarray(out.ids)
+        if self.auditor is not None and kind != "full":
+            self.auditor.offer(x, ids)
         return [RankResult(g.rid, logits[i], ids[i])
                 for i, g in enumerate(group)]
 
@@ -438,7 +461,7 @@ class Engine:
         with self.lock:
             self._n = 0
             self._wall = 0.0
-            self._lat: list[float] = []
+            self._h_lat.reset()
             self._sample_sum = 0.0
             self._recall_hit = 0
             self._recall_tot = 0
@@ -452,7 +475,8 @@ class Engine:
                        lats: list[float], labels) -> None:
         self._n += n
         self._wall += wall
-        self._lat.extend(lats)
+        for v in lats:
+            self._h_lat.record(v)
         self._sample_sum += float(jnp.sum(out.sample_size[:n]))
         if labels is not None:
             lab = jnp.asarray(labels)[:n]
@@ -464,14 +488,26 @@ class Engine:
             self._recall_hit += int(jnp.sum(hit & valid))
             self._recall_tot += int(jnp.sum(valid))
 
-    def metrics(self) -> ServeMetrics:
-        with self.lock:
-            return self._metrics_locked()
+    def _collect_gauges(self, reg) -> None:
+        """Exporter hook: surface the ServeMetrics window as gauges at
+        snapshot time (no double bookkeeping on the record path)."""
+        m = self.metrics()
+        reg.gauge("engine_requests_total").set(m.n_requests)
+        reg.gauge("engine_throughput_rps").set(m.throughput_rps)
+        reg.gauge("engine_avg_sample_size").set(m.avg_sample_size)
+        reg.gauge("engine_label_recall").set(m.label_recall)
+        reg.gauge("engine_compiles_total").set(m.n_compiles)
 
-    def _metrics_locked(self) -> ServeMetrics:
-        lat_ms = np.asarray(self._lat, np.float64) * 1e3
-        p50, p95, p99 = (np.percentile(lat_ms, (50, 95, 99))
-                         if lat_ms.size else (math.nan,) * 3)
+    def metrics(self) -> ServeMetrics:
+        # quantiles come off the histogram's own bounded reservoir, not
+        # under self.lock — a metrics() poll never stalls flush()
+        p50, p95, p99 = self._h_lat.quantile((50, 95, 99))
+        p50, p95, p99 = p50 * 1e3, p95 * 1e3, p99 * 1e3
+        with self.lock:
+            return self._metrics_locked(p50, p95, p99)
+
+    def _metrics_locked(self, p50: float, p95: float,
+                        p99: float) -> ServeMetrics:
         return ServeMetrics(
             n_requests=self._n,
             wall_s=self._wall,

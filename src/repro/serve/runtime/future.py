@@ -17,6 +17,7 @@ dispatcher can shed already-late work without a side table.
 from __future__ import annotations
 
 import threading
+import time
 from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:                                   # pragma: no cover
@@ -48,27 +49,39 @@ class RuntimeClosedError(ShedError):
 class RankFuture:
     """Write-once future for one submitted request."""
 
-    __slots__ = ("rid", "t_submit", "deadline", "_done", "_result", "_exc")
+    __slots__ = ("rid", "t_submit", "deadline", "t_done", "span",
+                 "_done", "_result", "_exc")
 
     def __init__(self, rid: int, t_submit: float,
                  deadline: float | None = None):
         self.rid = rid
         self.t_submit = t_submit          # perf_counter at admission
         self.deadline = deadline          # absolute perf_counter, or None
+        self.t_done: float | None = None  # perf_counter at resolution
+        self.span = None                  # obs span; closed at resolution
         self._done = threading.Event()
         self._result: RankResult | None = None
         self._exc: BaseException | None = None
 
     # -- producer side (runtime internals) --------------------------------
+    # the future is the one object every terminal path goes through, so
+    # resolution is where the request's span closes — a shed, a chunk
+    # fault, or a close can never leak an open span
     def set_result(self, result: "RankResult") -> None:
         assert not self._done.is_set(), f"future {self.rid} resolved twice"
         self._result = result
+        self.t_done = time.perf_counter()
         self._done.set()
+        if self.span is not None:
+            self.span.end("ok")
 
     def set_exception(self, exc: BaseException) -> None:
         assert not self._done.is_set(), f"future {self.rid} resolved twice"
         self._exc = exc
+        self.t_done = time.perf_counter()
         self._done.set()
+        if self.span is not None:
+            self.span.end_from_exc(exc)
 
     # -- consumer side -----------------------------------------------------
     def done(self) -> bool:

@@ -62,6 +62,8 @@ from typing import Any, NamedTuple
 import jax
 import numpy as np
 
+from repro import obs
+from repro.kernels.registry import dispatch_log
 from repro.serve.batcher import MicroBatcher
 from repro.serve.engine import Engine, RankResult
 from repro.serve.runtime.future import (DeadlineExceededError, QueueFullError,
@@ -255,8 +257,16 @@ class AsyncRuntime:
         self._n_decode_shed_deadline = 0
         self._n_batches = 0
         self._occupancy_sum = 0.0
-        self._lat_s: list[float] = []
-        self._device_s: list[float] = []
+        # bounded telemetry (was: unbounded list[float] + np.percentile
+        # over full history per stats() call) — O(1) memory under any load
+        self.obs = obs.MetricsRegistry(scope_prefix="runtime")
+        self._h_lat = self.obs.histogram(
+            "runtime_request_latency_seconds",
+            "submit -> resolve, queue wait included")
+        self._h_device = self.obs.histogram(
+            "runtime_device_seconds_per_batch",
+            "non-overlapping device wall per dispatched chunk")
+        self.obs.collect(self._collect_gauges)
         self._t_first: float | None = None
         self._t_last: float | None = None
         if start:
@@ -360,6 +370,9 @@ class AsyncRuntime:
             if self._t_first is None:
                 self._t_first = t_sub
         fut = RankFuture(rid, t_sub, deadline)
+        # the span closes wherever the future resolves (set_result /
+        # set_exception), so every shed/fault path closes it for free
+        fut.span = obs.start_span("request", rid=rid, head=self.head)
         if self._closed:
             fut.set_exception(RuntimeClosedError("runtime closed"))
             with self._mu:
@@ -422,6 +435,11 @@ class AsyncRuntime:
             prompt, max_new_tokens, eos_id=eos_id, t_submit=t_sub,
             deadline=deadline)
         session.owner = self
+        # closes in TokenStream.finish/fail — every terminal decode path
+        session.stream.span = obs.start_span(
+            "decode_session", sid=session.sid,
+            prompt_len=int(session.prompt.shape[0]),
+            max_new_tokens=max_new_tokens)
         with self._mu:
             self._n_decode_submitted += 1
             if self._t_first is None:
@@ -501,26 +519,44 @@ class AsyncRuntime:
                 live = self._shed_late(works)
                 if not live:
                     continue
+                span = obs.start_span("chunk", head=self.head,
+                                      n=len(live))
                 try:
                     # host side: stack rows and pad to the bucket in
                     # numpy — this is the work that overlaps the device
                     # executing the PREVIOUS chunk (whose dispatch below
                     # did not block).
                     bucket = batcher.bucket_for(len(live))
+                    span.set(bucket=bucket)
+                    for w in live:
+                        w.future.span.event("dispatch", bucket=bucket)
                     x = jax.tree.map(lambda *rows: np.stack(rows),
                                      *[w.x for w in live])
                     padded = MicroBatcher.pad_rows(x, bucket)
                     step = self.engine._step(self.head, bucket)
+                    n_disp = len(dispatch_log())
+                    n_comp = sum(self.engine.compile_counts.values())
                     t0 = time.perf_counter()
                     out = step(padded)          # async dispatch, no block
+                    # kernel attribution: which registry impls this chunk
+                    # dispatched, and whether it paid a (head, bucket)
+                    # compile (both non-empty only on first trace)
+                    new = dispatch_log()[n_disp:]
+                    d_comp = (sum(self.engine.compile_counts.values())
+                              - n_comp)
+                    if new or d_comp:
+                        span.set(dispatches=[f"{op}:{impl}"
+                                             for op, impl in new],
+                                 compile_delta=d_comp)
                 except Exception as e:
                     # chunk-local failure (malformed request, trace
                     # error): fail THIS chunk's futures, keep serving —
                     # one bad request must not take down the front-end
+                    span.end_from_exc(e)
                     for w in live:
                         self._fail(w.future, e)
                     continue
-                self._put_done((live, out, bucket, t0))
+                self._put_done((live, out, bucket, t0, span))
         except BaseException as e:              # fail loudly, not silently
             self._abort(e)
             if self.scheduler is not None:
@@ -540,6 +576,7 @@ class AsyncRuntime:
                 pass
 
     def _fail_chunk(self, item) -> None:
+        item[4].end("error", error="runtime worker died")
         for w in item[0]:
             self._fail(w.future, RuntimeError("runtime worker died"))
 
@@ -587,7 +624,7 @@ class AsyncRuntime:
                 item = self._done_q.get()
                 if item is _SENTINEL:
                     break
-                works, out, bucket, t0 = item
+                works, out, bucket, t0, span = item
                 jax.block_until_ready(out.logits)
                 t1 = time.perf_counter()
                 # chunks overlap under pipelining (chunk k+1 is dispatched
@@ -602,15 +639,24 @@ class AsyncRuntime:
                 lats = [t1 - w.future.t_submit for w in works]
                 labels = Engine._stack_labels([w.labels for w in works])
                 self.engine._record(out, n, wall, lats, labels)
+                aud = getattr(self.engine, "auditor", None)
+                if aud is not None and self.head != "full":
+                    # thunk: the unpadded re-stack is only paid when the
+                    # auditor's coin flip samples this chunk
+                    aud.offer(lambda ws=works: jax.tree.map(
+                        lambda *rows: np.stack(rows), *[w.x for w in ws]),
+                        ids)
+                span.end("ok", device_s=wall)
                 for i, w in enumerate(works):
                     w.future.set_result(
                         RankResult(w.future.rid, logits[i], ids[i]))
+                for v in lats:
+                    self._h_lat.record(v)
+                self._h_device.record(wall)
                 with self._drained:
                     self._n_completed += n
                     self._n_batches += 1
                     self._occupancy_sum += n / bucket
-                    self._lat_s.extend(lats)
-                    self._device_s.append(wall)
                     self._t_last = t1
                     self._drained.notify_all()
         except BaseException as e:
@@ -659,17 +705,38 @@ class AsyncRuntime:
             except _queue.Empty:
                 break
             if item is not _SENTINEL:
-                for w in item[0]:
-                    self._fail(w.future, RuntimeError("runtime worker died"))
+                self._fail_chunk(item)
         with self._drained:
             self._drained.notify_all()
 
+    def _collect_gauges(self, reg) -> None:
+        """Exporter hook: refresh control-flow gauges from stats() so the
+        Prometheus exposition carries them without double bookkeeping."""
+        s = self.stats()
+        reg.gauge("runtime_queue_depth").set(s.queue_depth)
+        reg.gauge("runtime_submitted_total").set(s.n_submitted)
+        reg.gauge("runtime_completed_total").set(s.n_completed)
+        reg.gauge("runtime_shed_queue_total").set(s.n_shed_queue)
+        reg.gauge("runtime_shed_deadline_total").set(s.n_shed_deadline)
+        reg.gauge("runtime_batch_occupancy").set(s.avg_batch_occupancy)
+        reg.gauge("runtime_throughput_rps").set(s.throughput_rps)
+        if self.scheduler is not None:
+            reg.gauge("decode_sessions_total").set(s.n_decode_sessions)
+            reg.gauge("decode_tokens_total").set(s.n_decode_tokens)
+            reg.gauge("decode_tokens_per_s").set(s.decode_tokens_per_s)
+            reg.gauge("decode_slot_occupancy").set(s.decode_slot_occupancy)
+            reg.gauge("decode_prefix_hit_rate").set(s.prefix_hit_rate)
+            reg.gauge("decode_kv_pages_in_use").set(s.kv_pages_in_use)
+
     def stats(self) -> RuntimeStats:
         ds = None if self.scheduler is None else self.scheduler.stats()
+        # quantile math runs on the histograms' own bounded reservoirs —
+        # NEVER under self._mu, so a stats() poll cannot stall the
+        # dispatcher/completion threads no matter the window size
+        # (tests/test_obs.py pins the bound)
+        p50, p95, p99 = self._h_lat.quantile((50, 95, 99))
+        device_ms = self._h_device.mean() * 1e3
         with self._mu:
-            lat_ms = np.asarray(self._lat_s, np.float64) * 1e3
-            p50, p95, p99 = (np.percentile(lat_ms, (50, 95, 99))
-                             if lat_ms.size else (math.nan,) * 3)
             wall = ((self._t_last - self._t_first)
                     if self._t_first is not None and self._t_last is not None
                     else 0.0)
@@ -699,11 +766,10 @@ class AsyncRuntime:
                 n_batches=self._n_batches,
                 avg_batch_occupancy=(self._occupancy_sum
                                      / max(self._n_batches, 1)),
-                latency_p50_ms=float(p50),
-                latency_p95_ms=float(p95),
-                latency_p99_ms=float(p99),
-                device_ms_per_batch=(float(np.mean(self._device_s)) * 1e3
-                                     if self._device_s else math.nan),
+                latency_p50_ms=p50 * 1e3,
+                latency_p95_ms=p95 * 1e3,
+                latency_p99_ms=p99 * 1e3,
+                device_ms_per_batch=device_ms,
                 wall_s=wall,
                 throughput_rps=(self._n_completed / wall if wall > 0
                                 else 0.0),

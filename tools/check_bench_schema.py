@@ -1,5 +1,5 @@
-"""Schema check for the CI bench artifacts (``BENCH_kernels.json`` and
-``BENCH_decode.json``).
+"""Schema check for the CI bench artifacts (``BENCH_kernels.json``,
+``BENCH_decode.json`` and ``BENCH_obs.json``).
 
 Both artifacts mix row kinds (per-kernel timings, the dedup C-sweep, the
 slab_dtype storage sweep; decode sweep points and the paged-KV capacity
@@ -10,7 +10,10 @@ per-kind required fields; in particular a ``slab_dtype`` row without its
 can never silently stop reporting its accuracy cost), and a decode
 artifact missing any of the three capacity kinds — ``sessions_per_gb``,
 ``long_context``, ``prefix_cache`` — fails CI (the paged-KV memory story
-can never silently drop out of the bench).
+can never silently drop out of the bench).  The obs artifact must carry
+both an ``overhead`` row (obs-on vs no-op throughput/p99) and an
+``audit_recall`` row whose online recall agrees with the offline brute
+force within ``OBS_AUDIT_TOL``.
 
 Usage: ``python tools/check_bench_schema.py [path]`` (default
 ``BENCH_kernels.json``; the artifact's own ``bench`` field selects the
@@ -114,9 +117,59 @@ def check_decode(rec: dict) -> list[str]:
     return errors
 
 
+# --------------------------------------------------------- obs schema --
+OBS_OVERHEAD_FIELDS = (
+    "rps_on", "rps_off", "overhead_pct", "p99_on_ms", "p99_off_ms",
+    "audit_rate", "n_requests")
+OBS_AUDIT_FIELDS = (
+    "recall_online", "recall_offline", "recall_delta", "n_rows",
+    "top_k", "audit_rate")
+OBS_AUDIT_TOL = 1e-3
+
+
+def check_obs(rec: dict) -> list[str]:
+    errors = []
+    rows = rec.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return ["artifact has no rows"]
+    seen_kinds: set[str] = set()
+    for i, r in enumerate(rows):
+        kind = r.get("kind")
+        seen_kinds.add(kind)
+        if kind == "overhead":
+            required = OBS_OVERHEAD_FIELDS
+        elif kind == "audit_recall":
+            required = OBS_AUDIT_FIELDS
+        else:
+            errors.append(f"row {i}: unknown obs row kind {kind!r}")
+            continue
+        missing = [f for f in required if f not in r]
+        if missing:
+            errors.append(f"row {i} (kind={kind}): missing required "
+                          f"fields {missing}")
+    for kind in ("overhead", "audit_recall"):
+        if kind not in seen_kinds:
+            errors.append(f"obs artifact has no {kind!r} row (the "
+                          f"{kind} story was silently dropped)")
+    for r in rows:
+        if r.get("kind") != "audit_recall":
+            continue
+        delta = abs(r.get("recall_online", 0.0)
+                    - r.get("recall_offline", 1.0))
+        if delta > OBS_AUDIT_TOL:
+            errors.append(
+                f"audit_recall row: online recall "
+                f"{r.get('recall_online')} disagrees with offline "
+                f"brute force {r.get('recall_offline')} by {delta:.2e} "
+                f"(> {OBS_AUDIT_TOL}) — the auditor is lying")
+    return errors
+
+
 def check(rec: dict) -> list[str]:
     if rec.get("bench") == "decode":
         return check_decode(rec)
+    if rec.get("bench") == "obs":
+        return check_obs(rec)
     return check_kernels(rec)
 
 
@@ -133,7 +186,11 @@ def main() -> int:
     for e in errors:
         print(f"SCHEMA CHECK FAILED: {e}", file=sys.stderr)
     if not errors:
-        if rec.get("bench") == "decode":
+        if rec.get("bench") == "obs":
+            oh = next(r for r in rec["rows"] if r["kind"] == "overhead")
+            print(f"schema ok: {len(rec['rows'])} obs rows (overhead "
+                  f"{oh['overhead_pct']:.2f}%)")
+        elif rec.get("bench") == "decode":
             kinds = [r.get("kind", "sweep") for r in rec["rows"]]
             print(f"schema ok: {len(rec['rows'])} decode rows "
                   f"({sum(k == 'sweep' for k in kinds)} sweep, "

@@ -1,0 +1,166 @@
+"""Scrape-and-validate for the ``/metrics`` endpoint (stdlib only).
+
+CI starts ``launch/serve.py --metrics-port`` against the synthetic WOL,
+then runs this check: poll the endpoint until it answers (``--wait``
+bounds the poll — the launcher trains briefly before serving), parse the
+Prometheus text exposition with a small stdlib parser, and fail unless
+
+  * every line is well-formed (``# HELP``/``# TYPE`` comments, or
+    ``name{labels} value`` samples with a parseable float value),
+  * every sample's metric family has a ``# TYPE`` line (histogram
+    samples match their family via the ``_bucket``/``_sum``/``_count``
+    suffixes),
+  * every ``--require`` name is present as a metric family (default:
+    ``lss_audit_recall_at_k`` — the online recall auditor must be live,
+    not just importable).
+
+Usage::
+
+    python tools/check_metrics.py --url http://127.0.0.1:9100/metrics \
+        --wait 120 --require lss_audit_recall_at_k
+
+Exit 0 on success, 1 on any violation (with the offending lines).
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+import time
+import urllib.error
+import urllib.request
+
+# one sample line: name, optional {labels}, a float value
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?P<labels>\{[^}]*\})?"
+    r" (?P<value>[^ ]+)$")
+LABEL_RE = re.compile(r'^[a-zA-Z_][a-zA-Z0-9_]*="[^"]*"$')
+TYPE_RE = re.compile(
+    r"^# TYPE (?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*) "
+    r"(?P<kind>counter|gauge|histogram|summary|untyped)$")
+HELP_RE = re.compile(r"^# HELP [a-zA-Z_:][a-zA-Z0-9_:]* .*$")
+
+HIST_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def _parse_value(raw: str) -> float:
+    if raw in ("+Inf", "-Inf", "NaN"):
+        return {"+Inf": float("inf"), "-Inf": float("-inf"),
+                "NaN": float("nan")}[raw]
+    return float(raw)
+
+
+def parse_exposition(text: str) -> tuple[dict, list[str]]:
+    """Parse Prometheus text format.  Returns ``(families, errors)``
+    where ``families`` maps family name -> {"type": kind, "samples":
+    [(name, labels_str, value)]}."""
+    families: dict[str, dict] = {}
+    errors: list[str] = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        m = TYPE_RE.match(line)
+        if m:
+            families.setdefault(m["name"], {"type": m["kind"],
+                                            "samples": []})
+            families[m["name"]]["type"] = m["kind"]
+            continue
+        if line.startswith("#"):
+            if not HELP_RE.match(line):
+                errors.append(f"line {lineno}: malformed comment: {line!r}")
+            continue
+        m = SAMPLE_RE.match(line)
+        if m is None:
+            errors.append(f"line {lineno}: malformed sample: {line!r}")
+            continue
+        try:
+            value = _parse_value(m["value"])
+        except ValueError:
+            errors.append(f"line {lineno}: bad value in {line!r}")
+            continue
+        labels = m["labels"]
+        if labels:
+            inner = labels[1:-1]
+            if inner and not all(LABEL_RE.match(p)
+                                 for p in inner.split(",")):
+                errors.append(f"line {lineno}: malformed labels: {line!r}")
+                continue
+        name = m["name"]
+        fam = name
+        if fam not in families:                  # histogram child sample?
+            for suf in HIST_SUFFIXES:
+                if name.endswith(suf) and name[:-len(suf)] in families:
+                    fam = name[:-len(suf)]
+                    break
+        if fam not in families:
+            errors.append(f"line {lineno}: sample {name!r} has no "
+                          f"# TYPE line")
+            continue
+        families[fam]["samples"].append((name, labels or "", value))
+    for fam, rec in families.items():
+        if not rec["samples"]:
+            errors.append(f"family {fam!r} has a # TYPE line but no "
+                          f"samples")
+    return families, errors
+
+
+def fetch(url: str, wait_s: float, require: list[str]) -> str:
+    """Poll ``url`` until it answers AND every required family is
+    present (the launcher trains before serving; the auditor publishes
+    once traffic flows), or ``wait_s`` elapses — then return the last
+    body (validation reports what was missing)."""
+    deadline = time.monotonic() + wait_s
+    body, last_err = "", None
+    while True:
+        try:
+            with urllib.request.urlopen(url, timeout=5.0) as r:
+                body = r.read().decode()
+            fams, _ = parse_exposition(body)
+            if all(any(f == req or f.startswith(req) for f in fams)
+                   for req in require):
+                return body
+            last_err = f"required families not yet present in {url}"
+        except (urllib.error.URLError, ConnectionError, OSError) as e:
+            last_err = str(e)
+        if time.monotonic() >= deadline:
+            if body:
+                return body               # validate what we got
+            print(f"FAIL: no scrape from {url} within {wait_s}s "
+                  f"({last_err})", file=sys.stderr)
+            sys.exit(1)
+        time.sleep(1.0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--url", default="http://127.0.0.1:9100/metrics")
+    ap.add_argument("--wait", type=float, default=120.0,
+                    help="seconds to poll for the endpoint + required "
+                         "families before validating whatever arrived")
+    ap.add_argument("--require", nargs="*",
+                    default=["lss_audit_recall_at_k"],
+                    help="metric families that must be present "
+                         "(prefix match)")
+    args = ap.parse_args()
+
+    body = fetch(args.url, args.wait, args.require)
+    families, errors = parse_exposition(body)
+    for req in args.require:
+        if not any(f == req or f.startswith(req) for f in families):
+            errors.append(f"required metric family {req!r} not present")
+    n_samples = sum(len(f["samples"]) for f in families.values())
+    if errors:
+        print(f"FAIL: {len(errors)} violation(s) in {args.url} "
+              f"({len(families)} families, {n_samples} samples):",
+              file=sys.stderr)
+        for e in errors[:20]:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"ok: {args.url} — {len(families)} families, "
+          f"{n_samples} samples, required: {args.require}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,272 @@
+"""Multi-host vocab-sharded serving scaling bench -> BENCH_multihost.json.
+
+Spawns real ``jax.distributed`` process fleets on localhost (gloo CPU
+collectives; ``--local-devices`` fake XLA devices per process) and
+measures the two scaling stories ROADMAP direction 2 names:
+
+  * **qps_scaling** rows — aggregate query throughput through the
+    hierarchical multihost predict, at (a) fixed per-host m with m and
+    QPS both growing with hosts, and (b) equal TOTAL m, where the
+    1->2-process ratio is the actual speedup of splitting one
+    vocabulary across two hosts (``qps_ratio_1_to_2`` in the summary
+    row; ~2x with real cores, ~1x when processes timeshare one core —
+    ``n_cpus`` is recorded so the CI gate only binds where parallel
+    hardware exists).
+  * **capacity** rows — measured index bytes/vocab row per host, and
+    the max total m a fixed PER-HOST memory budget admits as hosts grow
+    (no process ever materializes the full [m, d] weight: every worker
+    builds only its ``shard_range`` via
+    ``shard_index(..., shard_range=...)``).
+
+All processes run the timed loop in SPMD lockstep (the collectives
+inside the jitted predict are the synchronization); process 0 reports.
+
+Usage::
+
+    python -m benchmarks.multihost_bench [--per-host-m 60000]
+        [--procs 1,2] [--local-devices 2] [--min-ratio 1.7]
+
+``--min-ratio`` makes the equal-total-m 1->2 ratio a hard gate (CI
+passes 1.7; it is skipped with a note when the machine has < 2 CPUs,
+where the ratio is physically unattainable).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+
+RESULT_MARK = "MULTIHOST_RESULT "
+
+
+# ---------------------------------------------------------------- worker --
+def _rows_for_range(seed: int, r0: int, r1: int, d: int):
+    """Rows [r0, r1) of a global weight matrix defined block-by-block
+    (4096-row blocks, one fold_in per block) — the SAME matrix for every
+    fleet size, without any process generating rows it does not own."""
+    import jax
+    import jax.numpy as jnp
+    block = 4096
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    b0, b1 = r0 // block, -(-r1 // block)
+    for b in range(b0, b1):
+        rows = jax.random.normal(jax.random.fold_in(key, b), (block, d),
+                                 jnp.float32)
+        lo = max(r0 - b * block, 0)
+        hi = min(r1 - b * block, block)
+        parts.append(rows[lo:hi])
+    return jnp.concatenate(parts, axis=0)
+
+
+def worker(args) -> None:
+    from repro.xla_env import force_host_device_count
+    force_host_device_count(args.local_devices)
+
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import simhash
+    from repro.core.lss import LSSConfig
+    from repro.core.sharded import make_multihost_predict
+    from repro.serve.heads import shard_index
+    from repro.serve.multihost import (MultihostContext, assemble_global_stack,
+                                       init_multihost)
+    from repro.utils import compat
+
+    ctx = init_multihost(args.coordinator, args.num_processes,
+                         args.process_id)
+    if ctx is None:                       # single-process fleet
+        ctx = MultihostContext(compat.make_global_mesh())
+
+    m, d, k = args.m_total, args.d, args.top_k
+    cfg = LSSConfig(k_bits=args.k_bits, n_tables=2, use_bucket_major=True,
+                    slab_dtype=args.slab_dtype)
+    theta = simhash.init_hyperplanes(jax.random.PRNGKey(1), d + 1,
+                                     cfg.k_bits, cfg.n_tables)
+    r0, r1 = ctx.row_range(m)
+    w_local = _rows_for_range(0, r0, r1, d)
+    w_aug_local = simhash.augment_neurons(w_local, None)
+    local_stack, local_w, m_local = shard_index(
+        w_aug_local, theta, cfg, ctx.n_shards,
+        shard_range=ctx.shard_range(), m_total=m)
+    index_bytes = sum(np.asarray(x).nbytes
+                      for x in jax.tree.leaves(local_stack))
+    stack = assemble_global_stack(ctx, local_stack, ctx.n_shards)
+    w_stack = (None if local_w is None
+               else assemble_global_stack(ctx, local_w, ctx.n_shards))
+
+    fwd = make_multihost_predict(ctx.mesh, ctx.host_axis, ctx.model_axis,
+                                 cfg, m_local, k)
+    q = jax.random.normal(jax.random.PRNGKey(2), (args.batch, d),
+                          jnp.float32)
+    q = compat.broadcast_one_to_all(np.asarray(q))
+
+    # the stacks ride as jit ARGUMENTS: multi-process jit forbids
+    # closing over arrays that span non-addressable devices
+    jfwd = jax.jit(fwd)
+    fn = lambda qq: jfwd(qq, stack, w_stack)            # noqa: E731
+    jax.block_until_ready(fn(q))          # compile + warm (lockstep)
+    jax.block_until_ready(fn(q))
+    t0 = time.perf_counter()
+    for _ in range(args.iters):
+        out = fn(q)
+    jax.block_until_ready(out)
+    wall = time.perf_counter() - t0
+
+    if ctx.is_leader:
+        n_queries = args.batch * args.iters
+        print(RESULT_MARK + json.dumps({
+            "backend": jax.default_backend(),
+            "processes": ctx.n_processes,
+            "local_devices": ctx.shards_per_host,
+            "n_shards": ctx.n_shards,
+            "total_m": m,
+            "per_host_m": r1 - r0,
+            "batch": args.batch,
+            "iters": args.iters,
+            "qps": n_queries / wall,
+            "us_per_query": wall / n_queries * 1e6,
+            "index_bytes_per_host": int(index_bytes),
+            "bytes_per_row": index_bytes / max(r1 - r0, 1),
+        }), flush=True)
+
+
+# ---------------------------------------------------------------- parent --
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def run_fleet(n_procs: int, m_total: int, args) -> dict:
+    """One fleet at one vocab size; returns the leader's RESULT dict."""
+    coord = f"127.0.0.1:{_free_port()}"
+    cmd_base = [sys.executable, "-m", "benchmarks.multihost_bench",
+                "--worker", "--coordinator", coord,
+                "--num-processes", str(n_procs),
+                "--m-total", str(m_total),
+                "--per-host-m", str(args.per_host_m),
+                "--local-devices", str(args.local_devices),
+                "--d", str(args.d), "--batch", str(args.batch),
+                "--iters", str(args.iters), "--top-k", str(args.top_k),
+                "--k-bits", str(args.k_bits),
+                "--slab-dtype", args.slab_dtype]
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    procs = [subprocess.Popen(cmd_base + ["--process-id", str(i)],
+                              stdout=subprocess.PIPE, text=True, env=env)
+             for i in range(n_procs)]
+    outs = [p.communicate(timeout=900)[0] for p in procs]
+    for i, p in enumerate(procs):
+        if p.returncode != 0:
+            raise RuntimeError(f"worker {i}/{n_procs} failed "
+                               f"(rc={p.returncode}):\n{outs[i]}")
+    for out in outs:
+        for line in out.splitlines():
+            if line.startswith(RESULT_MARK):
+                return json.loads(line[len(RESULT_MARK):])
+    raise RuntimeError(f"no RESULT line from fleet n={n_procs}:\n"
+                       + "\n".join(outs))
+
+
+def main() -> int:
+    fast = bool(int(os.environ.get("BENCH_FAST", "0")))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    ap.add_argument("--m-total", type=int, default=0)
+    ap.add_argument("--per-host-m", type=int,
+                    default=20_000 if fast else 60_000)
+    ap.add_argument("--procs", default="1,2",
+                    help="fleet sizes to sweep (comma-separated)")
+    ap.add_argument("--local-devices", type=int, default=2,
+                    help="fake XLA devices per process (= shards/host)")
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16 if fast else 32)
+    ap.add_argument("--iters", type=int, default=20 if fast else 50)
+    ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--k-bits", type=int, default=6)
+    ap.add_argument("--slab-dtype", default="int8",
+                    choices=("fp32", "bf16", "int8"))
+    ap.add_argument("--budget-gb", type=float, default=1.0,
+                    help="per-host index memory budget for capacity rows")
+    ap.add_argument("--min-ratio", type=float, default=None,
+                    help="fail unless the equal-total-m 1->2 QPS ratio "
+                         "reaches this (skipped, with a note, on < 2 "
+                         "CPUs where it is physically unattainable)")
+    ap.add_argument("--out", default=os.environ.get(
+        "BENCH_MULTIHOST_OUT", "BENCH_multihost.json"))
+    args = ap.parse_args()
+
+    if args.worker:
+        worker(args)
+        return 0
+
+    fleet_sizes = [int(s) for s in args.procs.split(",")]
+    m_host = args.per_host_m
+    rows, results = [], {}
+    # (a) fixed per-host m: m and QPS both scale with hosts
+    for n in fleet_sizes:
+        r = run_fleet(n, n * m_host, args)
+        results[(n, n * m_host)] = r
+        rows.append({"kind": "qps_scaling", "fixed": "per_host_m", **r})
+        print(f"[multihost] n={n} m={n * m_host}: "
+              f"{r['qps']:,.0f} qps ({r['us_per_query']:.0f} us/q)")
+    # (b) equal total m: the 1->2 split speedup the summary row records
+    m_eq = 2 * m_host
+    for n in (1, 2):
+        if (n, m_eq) not in results:
+            r = run_fleet(n, m_eq, args)
+            results[(n, m_eq)] = r
+            rows.append({"kind": "qps_scaling", "fixed": "total_m", **r})
+            print(f"[multihost] n={n} m={m_eq}: {r['qps']:,.0f} qps")
+    # capacity: measured bytes/row -> max m under a per-host budget
+    budget = args.budget_gb * 2 ** 30
+    for n in fleet_sizes:
+        r = results[(n, n * m_host)]
+        rows.append({
+            "kind": "capacity", "processes": n,
+            "budget_gb_per_host": args.budget_gb,
+            "index_bytes_per_host": r["index_bytes_per_host"],
+            "bytes_per_row": r["bytes_per_row"],
+            "max_m_total": int(n * budget // max(r["bytes_per_row"], 1)),
+        })
+    ratio = results[(2, m_eq)]["qps"] / results[(1, m_eq)]["qps"]
+    n_cpus = os.cpu_count() or 1
+    rows.append({"kind": "summary", "qps_ratio_1_to_2": ratio,
+                 "total_m": m_eq, "per_host_m": m_host,
+                 "n_cpus": n_cpus,
+                 "min_ratio": args.min_ratio})
+    payload = {"bench": "multihost",
+               "backend": results[(1, m_host)].get("backend", "cpu")
+               if (1, m_host) in results
+               else results[(1, m_eq)]["backend"],
+               "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+    print(f"[multihost] equal-total-m qps ratio 1->2 procs: "
+          f"{ratio:.2f}x on {n_cpus} cpus")
+    if args.min_ratio is not None:
+        if n_cpus < 2:
+            print(f"[multihost] NOTE: --min-ratio {args.min_ratio} "
+                  f"skipped: only {n_cpus} CPU (two processes timeshare "
+                  f"one core; the gate needs parallel hardware)")
+        elif ratio < args.min_ratio:
+            print(f"[multihost] FAIL: ratio {ratio:.2f} < "
+                  f"--min-ratio {args.min_ratio}", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

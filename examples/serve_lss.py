@@ -14,6 +14,10 @@
 4. Async path — the same Engine behind an ``AsyncRuntime``: open-loop
    Poisson traffic with per-request futures, then a burst segment, and
    an exact-equality check against the synchronous ``flush`` path.
+5. Vocab-sharded path — the same Engine with ``head="lss-sharded"``:
+   single-process here (where the hierarchical merge IS the flat
+   merge), plus the exact launch lines that scale the identical code
+   to a multi-host ``jax.distributed`` fleet.
 
 Run:  PYTHONPATH=src python examples/serve_lss.py
 """
@@ -174,11 +178,67 @@ def async_path() -> None:
     print(f"  bit-identical to synchronous flush: {exact}")
 
 
+def sharded_multihost_path() -> None:
+    print("== vocab-sharded path: head='lss-sharded' + fleet recipe ==")
+    from repro.core import simhash
+    from repro.serve.heads import shard_index
+
+    m, d = 4096, 32
+    w = jax.random.normal(jax.random.PRNGKey(0), (m, d))
+    cfg = LSSConfig(k_bits=5, n_tables=2)
+    eng = Engine(None, w, None, cfg, top_k=5, head="lss-sharded",
+                 buckets=(16,))
+    eng.fit_random(jax.random.PRNGKey(1))
+    q = jnp.asarray(np.random.default_rng(3).standard_normal((16, d)),
+                    jnp.float32)
+    out = eng.rank(q)
+    out2 = eng.rank(q)
+    exact = (np.array_equal(np.asarray(out.ids), np.asarray(out2.ids))
+             and np.array_equal(np.asarray(out.logits),
+                                np.asarray(out2.logits)))
+    print(f"  lss-sharded over {jax.local_device_count()} local "
+          f"device(s): top-{out.ids.shape[1]} of {m}, "
+          f"deterministic={exact}")
+
+    # What each FLEET member would build — only its own shards.  Here:
+    # process 1 of a 2-process fleet, 2 shards per host, so shards
+    # [2, 4) of 4.  No process ever materializes the full [m, d] head;
+    # serve.multihost.assemble_global_stack stitches these local stacks
+    # into the global (host, model)-sharded arrays metadata-only.
+    w_aug = simhash.augment_neurons(w, None)
+    theta = simhash.init_hyperplanes(jax.random.PRNGKey(1), d + 1,
+                                     cfg.k_bits, cfg.n_tables)
+    lo, hi = 2, 4
+    m_local = -(-m // 4)
+    local_rows = w_aug[lo * m_local:min(hi * m_local, m)]
+    stack, _, _ = shard_index(local_rows, theta, cfg, 4,
+                              shard_range=(lo, hi), m_total=m)
+    n_built = jax.tree.leaves(stack)[0].shape[0]
+    print(f"  process 1/2 builds shards [{lo}, {hi}): "
+          f"{n_built} local shard(s) over rows "
+          f"[{lo * m_local}, {min(hi * m_local, m)}) — "
+          f"never the full [{m}, {d}] weight")
+
+    # The same Engine code runs a real jax.distributed fleet (gloo CPU
+    # collectives work on plain multi-process localhost too) — process 0
+    # owns admission/results, the rest mirror via follower_loop:
+    print("  scale out (one line per host/process):")
+    for pid in range(2):
+        print("    python -m repro.launch.serve --arch qwen2-0.5b "
+              "--reduced --head lss-sharded \\\n"
+              "        --coordinator HOST0:1234 --num-processes 2 "
+              f"--process-id {pid}")
+    print("  (exact single-vs-multi-process parity: "
+          "tests/test_multihost.py; scaling rows: "
+          "python -m benchmarks.multihost_bench)")
+
+
 def main() -> None:
     score_path()
     dec, toks = decode_path()
     streaming_decode_path(dec, toks)
     async_path()
+    sharded_multihost_path()
 
 
 if __name__ == "__main__":

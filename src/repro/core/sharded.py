@@ -30,7 +30,9 @@ from repro.core.lss import LSSConfig, LSSIndex, build_index, lss_forward
 from repro.utils import compat
 
 __all__ = ["build_local_index", "local_topk", "sharded_lss_predict",
-           "sharded_lss_forward", "make_sharded_predict"]
+           "sharded_lss_forward", "make_sharded_predict",
+           "hierarchical_topk_merge", "multihost_lss_predict",
+           "multihost_lss_forward", "make_multihost_predict"]
 
 
 def build_local_index(w_aug_local: jax.Array, theta: jax.Array,
@@ -99,6 +101,134 @@ def sharded_lss_forward(q: jax.Array, index: LSSIndex,
     top_ids = jnp.take_along_axis(all_ids, pos, axis=-1)
     sample = jax.lax.psum(local_sample, axis_name)              # [B]
     return top_logits, top_ids, sample
+
+
+def hierarchical_topk_merge(logits: jax.Array, gids: jax.Array, k: int, *,
+                            model_axis: str, host_axis: str, n_hosts: int
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Two-stage top-k merge for a (host, model) mesh.
+
+    Stage 1 all-gathers the k candidates per shard over the fast
+    intra-host ``model_axis`` and reduces to k per host; stage 2
+    all-gathers only those k per host over the slow ``host_axis``, so
+    cross-host traffic is O(n_hosts * k) per query — independent of both
+    m and the per-host shard count.
+
+    Bit-identical to the flat single-stage merge: ``jax.lax.top_k`` is
+    stable (ties resolve to the lowest position), shard blocks are
+    host-contiguous in the gather order, and every sub-k shard slot
+    carries (NEG_INF, -1), so any candidate the intra-host stage drops
+    already had k better-or-equal-earlier candidates on its own host and
+    could never enter the flat global top-k either.  With ``n_hosts == 1``
+    stage 2 is skipped and this IS the flat merge.
+    """
+    b = logits.shape[0]
+    all_logits = jax.lax.all_gather(logits, model_axis, axis=1)
+    all_ids = jax.lax.all_gather(gids, model_axis, axis=1)
+    host_logits, pos = jax.lax.top_k(all_logits.reshape(b, -1), k)
+    host_ids = jnp.take_along_axis(all_ids.reshape(b, -1), pos, axis=-1)
+    if n_hosts == 1:
+        return host_logits, host_ids
+    x_logits = jax.lax.all_gather(host_logits, host_axis, axis=1)
+    x_ids = jax.lax.all_gather(host_ids, host_axis, axis=1)
+    top_logits, pos = jax.lax.top_k(x_logits.reshape(b, -1), k)
+    top_ids = jnp.take_along_axis(x_ids.reshape(b, -1), pos, axis=-1)
+    return top_logits, top_ids
+
+
+def _global_shard_ids(ids: jax.Array, *, model_axis: str, host_axis: str,
+                      shards_per_host: int, m_local: int) -> jax.Array:
+    shard = (jax.lax.axis_index(host_axis) * shards_per_host
+             + jax.lax.axis_index(model_axis))
+    return jnp.where(ids >= 0, ids + shard * m_local, -1)
+
+
+def multihost_lss_predict(q: jax.Array, index: LSSIndex,
+                          w_aug_local: jax.Array | None, *, k: int,
+                          model_axis: str, host_axis: str, n_hosts: int,
+                          shards_per_host: int, m_local: int,
+                          impl: str | None = None, dedup: str | None = None
+                          ) -> tuple[jax.Array, jax.Array]:
+    """``sharded_lss_predict`` for a (host, model) mesh: shard-local
+    retrieve + top-k, then the hierarchical merge.  Global neuron id =
+    (host * shards_per_host + model) * m_local + local id."""
+    logits, ids = local_topk(q, index, w_aug_local, k,
+                             impl=impl, dedup=dedup)
+    gids = _global_shard_ids(ids, model_axis=model_axis,
+                             host_axis=host_axis,
+                             shards_per_host=shards_per_host,
+                             m_local=m_local)
+    return hierarchical_topk_merge(logits, gids, k, model_axis=model_axis,
+                                   host_axis=host_axis, n_hosts=n_hosts)
+
+
+def multihost_lss_forward(q: jax.Array, index: LSSIndex,
+                          w_aug_local: jax.Array | None, *, k: int,
+                          model_axis: str, host_axis: str, n_hosts: int,
+                          shards_per_host: int, m_local: int,
+                          impl: str | None = None, dedup: str | None = None
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``multihost_lss_predict`` + global per-query sample size (psum
+    over BOTH mesh axes) from the single retrieval pass."""
+    logits, ids, local_sample = local_topk(q, index, w_aug_local, k,
+                                           with_aux=True, impl=impl,
+                                           dedup=dedup)
+    gids = _global_shard_ids(ids, model_axis=model_axis,
+                             host_axis=host_axis,
+                             shards_per_host=shards_per_host,
+                             m_local=m_local)
+    top_logits, top_ids = hierarchical_topk_merge(
+        logits, gids, k, model_axis=model_axis, host_axis=host_axis,
+        n_hosts=n_hosts)
+    sample = jax.lax.psum(local_sample, (host_axis, model_axis))
+    return top_logits, top_ids, sample
+
+
+def make_multihost_predict(mesh: jax.sharding.Mesh, host_axis: str,
+                           model_axis: str, cfg: LSSConfig, m_local: int,
+                           k: int, with_aux: bool = False,
+                           impl: str | None = None,
+                           dedup: str | None = None):
+    """:func:`make_sharded_predict` for a 2-axis (host, model) mesh.
+
+    Stacked per-shard pytrees carry a leading [n_shards] dim sharded
+    over BOTH axes (``P((host_axis, model_axis))``); shard s lives on
+    host ``s // shards_per_host`` — build the stack with
+    ``serve.heads.shard_index(..., shard_range=...)`` plus
+    ``compat.make_global_array`` so no process materializes remote
+    shards.  q and the outputs are replicated.  On a mesh whose host
+    axis is 1 the merge reduces to the flat single-stage path
+    bit-identically.
+    """
+    n_hosts = mesh.shape[host_axis]
+    shards_per_host = mesh.shape[model_axis]
+    body = partial(
+        multihost_lss_forward if with_aux else multihost_lss_predict,
+        k=k, model_axis=model_axis, host_axis=host_axis, n_hosts=n_hosts,
+        shards_per_host=shards_per_host, m_local=m_local, impl=impl,
+        dedup=dedup)
+    stack_spec = P((host_axis, model_axis))
+
+    def unstacked_body(q, index_stack, w_stack):
+        index = jax.tree.map(lambda x: x[0], index_stack)
+        w = None if w_stack is None else w_stack[0]
+        return body(q, index, w)
+
+    out_specs = (P(), P(), P()) if with_aux else (P(), P())
+
+    def fn(q, index_stack, w_stack=None):
+        in_specs = (
+            P(),
+            jax.tree.map(lambda _: stack_spec, index_stack),
+            None if w_stack is None
+            else jax.tree.map(lambda _: stack_spec, w_stack),
+        )
+        mapped = compat.shard_map(
+            unstacked_body, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs)
+        return mapped(q, index_stack, w_stack)
+
+    return fn
 
 
 def make_sharded_predict(mesh: jax.sharding.Mesh, model_axis: str,

@@ -1,10 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.xla_env import force_host_device_count
+
+force_host_device_count(512)
 
 """Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
 
 The ONLY entry point that fakes 512 devices (set above, before any jax
-import).  Produces one JSON record per cell under --out with:
+import; user-set XLA_FLAGS are preserved, not clobbered).  Produces one JSON record per cell under --out with:
 memory_analysis (bytes/device), cost_analysis (FLOPs, bytes), the parsed
 collective schedule, and the three roofline terms.
 

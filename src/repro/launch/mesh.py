@@ -29,6 +29,16 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
         shape, axes, axis_types=compat.auto_axis_types(len(axes)))
 
 
+def make_serving_mesh(host_axis: str = "host", model_axis: str = "model"
+                      ) -> jax.sharding.Mesh:
+    """The multi-host SERVING mesh: (host, model) over every process's
+    devices — rows are processes, so vocab shards land host-contiguous
+    (what the hierarchical top-k merge assumes).  Requires
+    ``compat.distributed_initialize`` (or single-process, where the host
+    axis is 1 and the hierarchical merge reduces to the flat one)."""
+    return compat.make_global_mesh((host_axis, model_axis))
+
+
 # v5e hardware constants for the roofline (per chip / per link)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

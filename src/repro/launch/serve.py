@@ -87,6 +87,18 @@ def main() -> None:
     ap.add_argument("--hold-metrics", type=float, default=0.0,
                     help="keep the process (and /metrics) alive this many "
                          "seconds after serving, for one-shot scrapers")
+    ap.add_argument("--coordinator", default=None,
+                    help="multi-host serving: jax.distributed coordinator "
+                         "host:port (default: $REPRO_DIST_COORDINATOR); "
+                         "run one launcher per process with the same "
+                         "flags, distinct --process-id")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="multi-host serving: fleet size (default: "
+                         "$REPRO_DIST_NUM_PROCESSES; <= 1 = single-host)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="multi-host serving: this process's rank "
+                         "(default: $REPRO_DIST_PROCESS_ID; 0 owns "
+                         "admission, others mirror in follower_loop)")
     args = ap.parse_args()
     head = "full" if args.no_lss else args.head
 
@@ -99,6 +111,20 @@ def main() -> None:
         import os
         from repro import obs as _obs
         os.environ[_obs.AUDIT_RATE_ENV] = str(args.audit_rate)
+
+    # BEFORE any jax computation: gloo selection + distributed init
+    # (None on every arg falls back to the REPRO_DIST_COORDINATOR-family
+    # env vars)
+    from repro.serve.multihost import (follower_loop, init_multihost,
+                                       stop_followers)
+    ctx = init_multihost(args.coordinator, args.num_processes,
+                         args.process_id)
+    if ctx is not None:
+        from repro.obs.export import set_global_labels
+        set_global_labels(process=str(ctx.process_id))
+        print(f"multihost: process {ctx.process_id}/{ctx.n_processes} "
+              f"({'leader' if ctx.is_leader else 'follower'}), "
+              f"{ctx.n_shards} vocab shards")
 
     import jax
     import jax.numpy as jnp
@@ -135,16 +161,28 @@ def main() -> None:
     dec = LMDecoder(state.params, cfg, lss_cfg, impl=args.impl,
                     max_streams=n_slots,
                     max_len=16 + max(args.steps, 2), dedup=args.dedup,
-                    slab_dtype=args.slab_dtype)
+                    slab_dtype=args.slab_dtype, spmd=ctx)
     if head != "full":
         dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:128]))
     prompt = jnp.asarray(toks[500:500 + args.batch, :16])
 
     try:
-        if args.mode == "decode":
+        if ctx is not None and not ctx.is_leader:
+            # followers mirrored the (deterministic) train + fit above,
+            # so their engine state matches the leader's; now replay the
+            # leader's opcode stream until it stops us
+            n = follower_loop(dec.engine, ctx, decoder=dec)
+            print(f"follower {ctx.process_id}: {n} ops served")
+        elif args.mode == "decode":
             serve_decode(dec, toks, head, args)
         elif args.runtime == "async":
             serve_async(dec, prompt, head, args)
+        elif ctx is not None:
+            from repro.serve.multihost import leader_generate
+            out = leader_generate(ctx, dec, prompt, args.steps, head)
+            print(f"decoded {out.shape} tokens on {ctx.n_processes} "
+                  f"processes; head={head}")
+            print(out[:2])
         else:
             out = dec.generate(prompt, steps=args.steps, head=head)
             print(f"decoded {out.shape} tokens; head={head}")
@@ -152,6 +190,8 @@ def main() -> None:
             print(f"engine compiles (head, bucket): "
                   f"{dec.engine.compile_counts}")
     finally:
+        if ctx is not None and ctx.is_leader:
+            stop_followers(ctx)
         if args.hold_metrics > 0:
             import time
             print(f"holding /metrics for {args.hold_metrics}s", flush=True)

@@ -10,7 +10,6 @@ Auto-resumes from the newest valid checkpoint; survives preemption.
 """
 
 import argparse
-import os
 import sys
 
 
@@ -30,8 +29,8 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.devices:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.devices}")
+        from repro.xla_env import force_host_device_count
+        force_host_device_count(args.devices)
 
     import jax
     import jax.numpy as jnp

@@ -31,9 +31,27 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                all_registries)
 
-__all__ = ["prometheus_text", "json_snapshot", "MetricsServer"]
+__all__ = ["prometheus_text", "json_snapshot", "MetricsServer",
+           "set_global_labels"]
 
 _NAME_OK = re.compile(r"[^a-zA-Z0-9_:]")
+
+# process-wide labels stamped on EVERY exported sample — multi-host
+# serving sets process="<rank>" here so each host's /metrics stays
+# attributable after aggregation (this module stays jax-free: the
+# launcher passes the process index in)
+_GLOBAL_LABELS: dict[str, str] = {}
+
+
+def set_global_labels(**labels: str) -> None:
+    """Attach labels to every sample this process exports (e.g.
+    ``set_global_labels(process="0")`` on a multi-host fleet).  Repeated
+    calls merge; a None value removes the label."""
+    for k, v in labels.items():
+        if v is None:
+            _GLOBAL_LABELS.pop(k, None)
+        else:
+            _GLOBAL_LABELS[k] = str(v)
 
 
 def _prom_name(name: str) -> str:
@@ -52,6 +70,8 @@ def _fmt(v: float) -> str:
 
 def _labels(scope: str | None, extra: dict | None = None) -> str:
     parts = []
+    for k, v in _GLOBAL_LABELS.items():
+        parts.append(f'{k}="{v}"')
     if scope:
         parts.append(f'scope="{scope}"')
     for k, v in (extra or {}).items():
@@ -107,8 +127,9 @@ def prometheus_text(registries: list[MetricsRegistry] | None = None) -> str:
 def json_snapshot(registries: list[MetricsRegistry] | None = None) -> dict:
     if registries is None:
         registries = all_registries()
-    return {"registries": [reg.snapshot() for reg in sorted(
-        registries, key=lambda r: (r.scope or ""))]}
+    return {"labels": dict(_GLOBAL_LABELS),
+            "registries": [reg.snapshot() for reg in sorted(
+                registries, key=lambda r: (r.scope or ""))]}
 
 
 class _Handler(BaseHTTPRequestHandler):

@@ -12,6 +12,10 @@ the async serving runtime.
     :class:`DecodeScheduler` over a slot-based :class:`KVCachePool`,
     per-token :class:`TokenStream` futures, token-exact with the
     blocking ``LMDecoder.generate`` path (which is now a facade over it).
+  * ``multihost`` — multi-process SPMD serving over ``jax.distributed``:
+    :class:`MultihostContext`, the leader's opcode broadcast seam, and
+    ``follower_loop`` (process 0 owns admission; every process builds
+    only its own vocab shards).
 """
 
 from repro.serve.batcher import DEFAULT_BUCKETS, Chunk, MicroBatcher
@@ -21,8 +25,10 @@ from repro.serve.decode import (DecodeScheduler, DecodeSession, DecodeStats,
 from repro.serve.engine import (Engine, LMDecoder, RankResult, ServeMetrics,
                                 WOLServer)
 from repro.serve.heads import (HEAD_KINDS, HeadOutput, make_full_head,
-                               make_lss_head, make_sharded_lss_head,
-                               shard_index)
+                               make_lss_head, make_multihost_lss_head,
+                               make_sharded_lss_head, shard_index)
+from repro.serve.multihost import (MultihostContext, follower_loop,
+                                   init_multihost, stop_followers)
 from repro.serve.runtime import (AdmissionQueue, AsyncRuntime,
                                  DeadlineExceededError, QueueFullError,
                                  RankFuture, RuntimeClosedError,
@@ -33,7 +39,9 @@ __all__ = [
     "DEFAULT_BUCKETS", "Chunk", "MicroBatcher",
     "Engine", "LMDecoder", "RankResult", "ServeMetrics", "WOLServer",
     "HEAD_KINDS", "HeadOutput", "make_full_head", "make_lss_head",
-    "make_sharded_lss_head", "shard_index",
+    "make_sharded_lss_head", "make_multihost_lss_head", "shard_index",
+    "MultihostContext", "init_multihost", "follower_loop",
+    "stop_followers",
     "AsyncRuntime", "RuntimeStats", "RankFuture", "AdmissionQueue",
     "ShedError", "QueueFullError", "DeadlineExceededError",
     "RuntimeClosedError", "submit_open_loop", "submit_decode_open_loop",

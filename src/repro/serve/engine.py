@@ -103,6 +103,16 @@ class Engine:
     so ``fit`` and each IUL refit (re)quantize through the same knob;
     None defers to the ``lss_topk.slab_dtype`` registry strategy.
 
+    ``spmd`` (a ``serve.multihost.MultihostContext``) runs the
+    lss-sharded head over the multi-process (host, model) mesh: the
+    index stack is built from ONLY this process's shards and stitched
+    into global arrays, and — on the leader — every score step is
+    wrapped to broadcast its opcode + batch first, so followers sitting
+    in ``multihost.follower_loop`` enter the same collective program.
+    Admission (``submit``/``rank``/the AsyncRuntime) happens on the
+    leader only; the wrapped seam is ``_step``, which both the sync
+    paths and the runtime dispatcher fetch from.
+
     Thread safety: every mutation of engine state — the pending request
     queue, finished results, the metrics window, and the jitted step
     cache — happens under ``self.lock`` (an RLock), so one Engine can be
@@ -121,7 +131,8 @@ class Engine:
                  impl: str | None = None,
                  dedup: str | None = None,
                  slab_dtype: str | None = None,
-                 audit_rate: float | None = None):
+                 audit_rate: float | None = None,
+                 spmd=None):
         if head not in HEAD_KINDS:
             raise ValueError(f"head must be one of {HEAD_KINDS}, got {head}")
         if impl is not None and impl not in registry.IMPLS:
@@ -146,6 +157,7 @@ class Engine:
         self.batcher = MicroBatcher(buckets)
         self.mesh = mesh
         self.model_axis = model_axis
+        self.spmd = spmd
         self.index: LSSIndex | None = None
         self._w_aug_cache: jax.Array | None = None
         self._sharded = None          # (index_stack, w_stack, m_local)
@@ -222,6 +234,8 @@ class Engine:
 
     # ------------------------------------------------------ head lookup --
     def _get_mesh(self):
+        if self.spmd is not None:
+            return self.spmd.mesh
         if self.mesh is None:
             self.mesh = compat.make_mesh(
                 (len(jax.devices()),), (self.model_axis,),
@@ -243,6 +257,8 @@ class Engine:
                     else self._w_aug
                 head = make_lss_head(self.index, w_aug, self.top_k,
                                      impl=self.impl, dedup=self.dedup)
+            elif self.spmd is not None:
+                head = self._multihost_head()
             else:
                 mesh = self._get_mesh()
                 tp = mesh.shape[self.model_axis]
@@ -258,6 +274,34 @@ class Engine:
                                              dedup=self.dedup)
         self._heads[kind] = head
         return head
+
+    def _multihost_head(self) -> Callable:
+        """lss-sharded over the multi-process mesh: build ONLY the
+        shards this process addresses (its ``row_range`` slice of W —
+        the only place the full weight is even indexed), stitch the
+        local stacks into global (host, model)-sharded arrays, and rank
+        through the hierarchical O(hosts*k) merge."""
+        from repro.serve.heads import make_multihost_lss_head
+        from repro.serve.multihost import assemble_global_stack
+        ctx = self.spmd
+        if self._sharded is None:
+            m = self.w.shape[0]
+            lo, hi = ctx.shard_range()
+            r0, r1 = ctx.row_range(m)
+            w_aug_local = simhash.augment_neurons(self.w[r0:r1],
+                                                  self.b[r0:r1])
+            local_stack, local_w, m_local = shard_index(
+                w_aug_local, self.index.theta, self.lss_cfg,
+                ctx.n_shards, shard_range=(lo, hi), m_total=m)
+            stack = assemble_global_stack(ctx, local_stack, ctx.n_shards)
+            w_stack = (None if local_w is None else
+                       assemble_global_stack(ctx, local_w, ctx.n_shards))
+            self._sharded = (stack, w_stack, m_local)
+        stack, w_stack, m_local = self._sharded
+        return make_multihost_lss_head(
+            stack, w_stack, ctx.mesh, self.lss_cfg, m_local, self.top_k,
+            ctx.host_axis, ctx.model_axis, impl=self.impl,
+            dedup=self.dedup)
 
     # ------------------------------------------------------ jitted steps --
     def _step(self, kind: str, bucket: int) -> Callable:
@@ -277,14 +321,33 @@ class Engine:
             if key not in self._steps:
                 head = self._head(kind)
                 embed = self.embed_fn
+                operands = getattr(head, "global_operands", None)
 
-                def raw_step(x):
+                def raw_step(x, *ops):
                     self.compile_counts[key] = \
                         self.compile_counts.get(key, 0) + 1
                     q = embed(x) if embed is not None else x
+                    if ops:
+                        return head.with_operands(q, *ops)
                     return head(q)
 
-                self._steps[key] = jax.jit(raw_step)
+                jitted = jax.jit(raw_step)
+                if operands is None:
+                    step = jitted
+                else:
+                    # multi-process jit cannot CLOSE OVER the global
+                    # (host, model)-sharded stacks — thread them as
+                    # explicit arguments, keeping the step(x) seam
+                    def step(x, _j=jitted, _ops=operands):
+                        return _j(x, *_ops)
+                if self.spmd is not None and self.spmd.is_leader:
+                    # the SPMD seam: sync rank/flush AND the runtime
+                    # dispatcher all fetch from here, so wrapping the
+                    # leader's step makes every admission path broadcast
+                    # to the follower_loop processes first
+                    from repro.serve.multihost import make_leader_step
+                    step = make_leader_step(self.spmd, step, kind, bucket)
+                self._steps[key] = step
             return self._steps[key]
 
     def decode_logits(self, kind: str, tag: str, body: Callable) -> Callable:
@@ -320,18 +383,44 @@ class Engine:
         with self.lock:
             if key not in self._steps:
                 head = self._head(kind)
+                operands = getattr(head, "global_operands", None)
+                n_ops = 0 if operands is None else len(operands)
 
-                def raw_step(params, tok, *state):
+                def raw_step(params, tok, *rest):
                     self.compile_counts[key] = \
                         self.compile_counts.get(key, 0) + 1
+                    state = rest[:len(rest) - n_ops] if n_ops else rest
                     hidden, k_new, v_new = body(params, tok, *state)
-                    ho = head(hidden.astype(jnp.float32))
+                    h = hidden.astype(jnp.float32)
+                    if n_ops:
+                        ho = head.with_operands(h, *rest[len(rest) - n_ops:])
+                    else:
+                        ho = head(h)
                     tok_next = jnp.maximum(ho.ids[:, 0], 0).astype(jnp.int32)
                     return tok_next, ho, k_new, v_new
 
                 donate = ((2, 3) if jax.default_backend() == "tpu"
-                          else ())
-                self._steps[key] = jax.jit(raw_step, donate_argnums=donate)
+                          and not n_ops else ())
+                jitted = jax.jit(raw_step, donate_argnums=donate)
+                if operands is None:
+                    self._steps[key] = jitted
+                else:
+                    # same operand threading as _step: the global stacks
+                    # ride as trailing jit arguments, and every local
+                    # operand is promoted to a mesh-replicated global
+                    # array (metadata-only: each process holds the same
+                    # mirrored value) so the fused decode program runs
+                    # SPMD across the fleet
+                    from repro.utils import compat
+                    mesh = self.spmd.mesh
+
+                    def step(params, tok, *state, _j=jitted,
+                             _ops=operands):
+                        params, tok, state = compat.replicate_global(
+                            (params, tok, state), mesh)
+                        return _j(params, tok, *state, *_ops)
+
+                    self._steps[key] = step
             return self._steps[key]
 
     def _pad_to_bucket(self, x, bucket: int):
@@ -579,7 +668,7 @@ class LMDecoder:
                  max_len: int | None = None, dedup: str | None = None,
                  slab_dtype: str | None = None, kv_layout: str | None = None,
                  kv_page_tokens: int | None = None,
-                 kv_pages: int | None = None):
+                 kv_pages: int | None = None, spmd=None):
         from repro.models import transformer as T
         self.T = T
         self.params = params
@@ -597,7 +686,7 @@ class LMDecoder:
         self.engine = Engine(None, self.head_weights().astype(jnp.float32),
                              None, lss_cfg or LSSConfig(), top_k=1,
                              head="full", impl=impl, dedup=dedup,
-                             slab_dtype=slab_dtype)
+                             slab_dtype=slab_dtype, spmd=spmd)
 
     @property
     def index(self):

@@ -22,11 +22,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lss import NEG_INF, LSSConfig, LSSIndex, lss_forward
-from repro.core.sharded import build_local_index, make_sharded_predict
+from repro.core.sharded import (build_local_index, make_multihost_predict,
+                                make_sharded_predict)
 from repro.core.tables import LSSTables
 
 __all__ = ["HeadOutput", "HEAD_KINDS", "make_full_head", "make_lss_head",
-           "make_sharded_lss_head", "shard_index"]
+           "make_sharded_lss_head", "make_multihost_lss_head",
+           "shard_index"]
 
 HEAD_KINDS = ("full", "lss", "lss-sharded")
 
@@ -83,16 +85,25 @@ def _mask_index_tail(index: LSSIndex, n_valid: int) -> LSSIndex:
     tables = LSSTables(ids, t.n_dropped, t.k_bits, t.n_tables, t.capacity)
     wb = index.w_bucketed
     if wb is not None:
-        # zeroing works for every slab_dtype: an int8 zero code (and its
-        # untouched scale) dequantizes to exactly 0, same as fp32/bf16
+        # zeroing works for every slab_dtype: an int8 zero code (and a
+        # zeroed scale) dequantizes to exactly 0, same as fp32/bf16
         wb = jnp.where((ids >= 0)[..., None], wb, jnp.zeros_like(wb))
-    return LSSIndex(index.theta, tables, wb, index.w_scale)
+    ws = index.w_scale
+    if ws is not None:
+        # pad rows carry the NEG_INF sentinel bias, so their per-row
+        # scale is a huge garbage value; mask it like the weight rows so
+        # a masked slot is all-zero in BOTH leaves (0 * scale is already
+        # exactly 0 in fp32, but interpret-mode buffers and dumps must
+        # not carry the sentinel through)
+        ws = jnp.where(ids >= 0, ws, jnp.zeros_like(ws))
+    return LSSIndex(index.theta, tables, wb, ws)
 
 
 def shard_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig,
-                n_shards: int):
+                n_shards: int, *, shard_range: tuple[int, int] | None = None,
+                m_total: int | None = None):
     """Split the WOL rows into ``n_shards`` contiguous vocab shards, build
-    one local index per shard, and stack the leaves ([TP, ...]).
+    one local index per shard, and stack the leaves ([n_built, ...]).
 
     When ``m % n_shards != 0`` the rows are padded up to the next multiple
     and the padded ids are masked out of the final shard's tables
@@ -103,19 +114,50 @@ def shard_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig,
     augmented with 0, so a bias never reaches a logit; the table masking
     is what excludes padding, not the sentinel.
 
+    ``shard_range=(lo, hi)`` builds ONLY shards [lo, hi): ``w_aug`` then
+    holds just the global rows those shards cover —
+    ``[lo * m_local, min(hi * m_local, m_total))`` — and ``m_total``
+    (the full vocab size) is required for the pad/mask math.  This is
+    the multi-host build path: each process constructs the shards it
+    addresses from its own row slice and no process ever materializes
+    the full ``[m, d]`` weight.  The per-shard indexes (including the
+    int8 ``w_scale`` leaf) are bit-identical to the same shards of a
+    full-range build.
+
     Returns (stacked_index, stacked_w_aug or None, m_local).
     """
-    m = w_aug.shape[0]
+    if shard_range is None:
+        if m_total is not None and m_total != w_aug.shape[0]:
+            raise ValueError(f"m_total={m_total} disagrees with "
+                             f"w_aug rows {w_aug.shape[0]}")
+        m_total = w_aug.shape[0]
+        shard_range = (0, n_shards)
+    elif m_total is None:
+        raise ValueError("shard_range requires m_total (the FULL vocab "
+                         "size; w_aug holds only the range's rows)")
+    lo, hi = shard_range
+    if not (0 <= lo < hi <= n_shards):
+        raise ValueError(f"shard_range {shard_range} outside "
+                         f"[0, {n_shards})")
+    m = m_total
     m_pad = -(-m // n_shards) * n_shards
-    if m_pad != m:
-        pad_rows = jnp.zeros((m_pad - m, w_aug.shape[-1]), w_aug.dtype)
-        pad_rows = pad_rows.at[:, -1].set(NEG_INF)   # sentinel bias column
-        w_aug = jnp.concatenate([w_aug, pad_rows], axis=0)
     m_local = m_pad // n_shards
+    row0 = lo * m_local
+    n_rows_need = min(hi * m_local, m) - row0
+    if w_aug.shape[0] != n_rows_need:
+        raise ValueError(
+            f"shard_range {shard_range} of m={m} needs rows "
+            f"[{row0}, {row0 + n_rows_need}) = {n_rows_need} rows, "
+            f"got {w_aug.shape[0]}")
+    if hi * m_local > row0 + n_rows_need:         # padded vocab tail
+        pad_rows = jnp.zeros((hi * m_local - row0 - n_rows_need,
+                              w_aug.shape[-1]), w_aug.dtype)
+        pad_rows = pad_rows.at[:, -1].set(NEG_INF)  # sentinel bias column
+        w_aug = jnp.concatenate([w_aug, pad_rows], axis=0)
     locals_ = []
-    for i in range(n_shards):
-        idx = build_local_index(w_aug[i * m_local:(i + 1) * m_local],
-                                theta, cfg)
+    for i in range(lo, hi):
+        idx = build_local_index(
+            w_aug[(i - lo) * m_local:(i - lo + 1) * m_local], theta, cfg)
         n_valid = min(max(m - i * m_local, 0), m_local)
         if n_valid < m_local:
             idx = _mask_index_tail(idx, n_valid)
@@ -123,7 +165,7 @@ def shard_index(w_aug: jax.Array, theta: jax.Array, cfg: LSSConfig,
     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
     w_stack = None
     if not cfg.use_bucket_major:
-        w_stack = w_aug.reshape(n_shards, m_local, w_aug.shape[-1])
+        w_stack = w_aug.reshape(hi - lo, m_local, w_aug.shape[-1])
     return stack, w_stack, m_local
 
 
@@ -147,4 +189,42 @@ def make_sharded_lss_head(index_stack, w_stack, mesh, cfg: LSSConfig,
                                   w_stack)
         return HeadOutput(logits, ids, sample, None)
 
+    return head
+
+
+def make_multihost_lss_head(index_stack, w_stack, mesh, cfg: LSSConfig,
+                            m_local: int, top_k: int,
+                            host_axis: str = "host",
+                            model_axis: str = "model",
+                            impl: str | None = None,
+                            dedup: str | None = None
+                            ) -> Callable[[jax.Array], HeadOutput]:
+    """:func:`make_sharded_lss_head` over a multi-process (host, model)
+    mesh: per-shard retrieve, hierarchical O(hosts*k) cross-host merge
+    (``core.sharded.make_multihost_predict``), sample size psum'd over
+    the whole fleet.  ``index_stack`` leaves are GLOBAL arrays sharded
+    ``P((host_axis, model_axis))`` on the leading [n_shards] dim — build
+    them with ``shard_index(..., shard_range=...)`` +
+    ``compat.make_global_array``.
+    """
+    fwd = make_multihost_predict(mesh, host_axis, model_axis, cfg,
+                                 m_local, top_k, with_aux=True,
+                                 impl=impl, dedup=dedup)
+
+    # Multi-process jit forbids CLOSING OVER arrays spanning
+    # non-addressable devices, so the stacks cannot ride into a jitted
+    # step as closure constants: the head exposes them on
+    # ``head.global_operands`` plus the operand-threading form
+    # ``head.with_operands(q, *operands)``, and Engine._step /
+    # decode_logits pass them as explicit jit arguments instead.
+    def with_operands(q: jax.Array, index_stack, w_stack) -> HeadOutput:
+        logits, ids, sample = fwd(q.astype(jnp.float32), index_stack,
+                                  w_stack)
+        return HeadOutput(logits, ids, sample, None)
+
+    def head(q: jax.Array) -> HeadOutput:
+        return with_operands(q, index_stack, w_stack)
+
+    head.global_operands = (index_stack, w_stack)
+    head.with_operands = with_operands
     return head

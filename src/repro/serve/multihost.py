@@ -1,0 +1,249 @@
+"""Multi-host SPMD serving: process 0 owns admission, followers mirror.
+
+Topology (see ``compat.make_global_mesh``): one global (host, model)
+mesh — rows are processes, columns each process's local devices — so a
+stacked shard pytree sharded ``P(("host", "model"))`` puts contiguous
+vocab-shard blocks on each host, exactly what the hierarchical top-k
+merge's global-id offset math assumes.  Every process builds ONLY the
+shards it addresses (``heads.shard_index(..., shard_range=...)``) and
+:func:`assemble_global_stack` stitches the local stacks into global
+arrays without any process materializing remote shards.
+
+Control plane: the AsyncRuntime, the admission queue, deadlines, and
+result futures live on process 0 only.  The jitted score steps are SPMD
+collective programs, so before the leader runs one, every follower must
+enter the same program with the same replicated batch.  The seam is
+``Engine._step`` — the ONE choke point both ``Engine.rank``/``flush``
+and the AsyncRuntime dispatcher fetch steps from — which on the leader
+returns a :func:`make_leader_step` wrapper that first broadcasts a
+fixed [4]-int32 header ``(opcode, head, rows, dim)`` and then the
+padded batch; followers sit in :func:`follower_loop` replaying the
+opcode stream until ``OP_STOP``.
+
+Decode rides the same opcode channel at session granularity:
+``OP_DECODE`` broadcasts the prompt block once, then EVERY process runs
+the same deterministic blocking ``LMDecoder.generate`` — the fused
+decode steps (which embed the multihost head's collectives) execute in
+lockstep without per-token broadcasts, because blocking generate has no
+wall-clock-dependent control flow.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.utils import compat
+
+__all__ = ["MultihostContext", "init_multihost", "assemble_global_stack",
+           "make_leader_step", "leader_generate", "follower_loop",
+           "stop_followers", "mirrored_region", "in_mirrored_region",
+           "OP_STOP", "OP_SCORE", "OP_DECODE"]
+
+OP_STOP, OP_SCORE, OP_DECODE = 0, 1, 2
+_HEADER_LEN = 4
+_HEAD_IDS = {"full": 0, "lss": 1, "lss-sharded": 2}
+_ID_HEADS = {v: k for k, v in _HEAD_IDS.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class MultihostContext:
+    """The fleet's shape, shared by engine, launcher, and bench."""
+
+    mesh: jax.sharding.Mesh
+    host_axis: str = "host"
+    model_axis: str = "model"
+
+    @property
+    def process_id(self) -> int:
+        return compat.process_index()
+
+    @property
+    def n_processes(self) -> int:
+        return int(self.mesh.shape[self.host_axis])
+
+    @property
+    def shards_per_host(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def n_shards(self) -> int:
+        return self.n_processes * self.shards_per_host
+
+    @property
+    def is_leader(self) -> bool:
+        return self.process_id == 0
+
+    def shard_range(self) -> tuple[int, int]:
+        """[lo, hi) shard ids this process addresses (host-contiguous)."""
+        tpl = self.shards_per_host
+        return self.process_id * tpl, (self.process_id + 1) * tpl
+
+    def row_range(self, m: int) -> tuple[int, int]:
+        """Global weight rows [r0, r1) this process's shards cover for a
+        vocab of m — the ONLY rows it needs to hold."""
+        m_local = -(-m // self.n_shards)
+        lo, hi = self.shard_range()
+        return lo * m_local, min(hi * m_local, m)
+
+    def stack_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh,
+                             P((self.host_axis, self.model_axis)))
+
+
+def init_multihost(coordinator: str | None = None,
+                   num_processes: int | None = None,
+                   process_id: int | None = None, *,
+                   host_axis: str = "host", model_axis: str = "model"
+                   ) -> MultihostContext | None:
+    """Initialize ``jax.distributed`` (CPU collectives included; see
+    ``compat.distributed_initialize`` — args default to the
+    ``REPRO_DIST_COORDINATOR``-family env vars) and build the global
+    serving mesh.
+    Returns None in the single-process case: callers branch once and the
+    whole single-host path stays untouched."""
+    if not compat.distributed_initialize(coordinator, num_processes,
+                                         process_id):
+        return None
+    mesh = compat.make_global_mesh((host_axis, model_axis))
+    return MultihostContext(mesh, host_axis, model_axis)
+
+
+def assemble_global_stack(ctx: MultihostContext, local_tree, n_shards: int):
+    """Stitch each process's locally built shard stack (leading dim =
+    shards_per_host) into global [n_shards, ...] arrays sharded over
+    (host, model) — metadata only, no cross-process copies."""
+    sharding = ctx.stack_sharding()
+
+    def leaf(x):
+        x = np.asarray(x)
+        return compat.make_global_array(sharding, x,
+                                        (n_shards,) + x.shape[1:])
+
+    return jax.tree.map(leaf, local_tree)
+
+
+# ------------------------------------------------------ opcode channel --
+_MIRROR = threading.local()
+
+
+def in_mirrored_region() -> bool:
+    return getattr(_MIRROR, "depth", 0) > 0
+
+
+@contextlib.contextmanager
+def mirrored_region():
+    """Marks a region EVERY process executes in lockstep (mirrored
+    decode): inside it the leader's broadcast step wrapper stands down —
+    nobody is waiting on the opcode channel, because the followers are
+    running this very region themselves.  Without this, the decode
+    prefill's ``engine.rank`` on the leader would broadcast OP_SCORE at
+    a follower that is inside its own mirrored ``generate`` — a
+    deadlock."""
+    _MIRROR.depth = getattr(_MIRROR, "depth", 0) + 1
+    try:
+        yield
+    finally:
+        _MIRROR.depth -= 1
+
+
+def _bcast(arr: np.ndarray) -> np.ndarray:
+    return np.asarray(compat.broadcast_one_to_all(np.asarray(arr)))
+
+
+def _bcast_header(vals=None) -> np.ndarray:
+    if vals is None:                       # follower: receive
+        vals = np.zeros((_HEADER_LEN,), np.int32)
+    return _bcast(np.asarray(vals, np.int32))
+
+
+def make_leader_step(ctx: MultihostContext, jitted, kind: str,
+                     bucket: int):
+    """Wrap a jitted score step for the leader: broadcast the opcode +
+    replicated batch so every follower enters the same collective
+    program, run it, and hand back HOST results (numpy) — the engine's
+    slicing/metrics must not launch new device programs on global
+    arrays outside the SPMD seam."""
+    kind_id = _HEAD_IDS[kind]
+
+    def step(padded):
+        if in_mirrored_region():
+            # every process is already running this same code in
+            # lockstep — no broadcast, the batch is identical everywhere
+            # (uncommitted/local inputs are treated as replicated)
+            return jax.tree.map(lambda l: np.asarray(l), jitted(padded))
+        x = np.asarray(padded, np.float32)
+        if x.ndim != 2:
+            raise ValueError(
+                "multihost serving scores raw [B, d] embedding batches "
+                f"(embed_fn=None engines); got shape {x.shape}")
+        _bcast_header([OP_SCORE, kind_id, x.shape[0], x.shape[1]])
+        q = compat.broadcast_one_to_all(x)
+        out = jitted(q)
+        return jax.tree.map(lambda l: np.asarray(l), out)
+
+    return step
+
+
+def leader_generate(ctx: MultihostContext, decoder, prompt, steps: int,
+                    head: str):
+    """Blocking decode on the whole fleet: broadcast the session block,
+    then run the same deterministic ``generate`` everywhere (followers
+    pick it up via OP_DECODE in :func:`follower_loop`)."""
+    prompt = np.asarray(prompt, np.int32)
+    _bcast_header([OP_DECODE, _HEAD_IDS[head], prompt.shape[0],
+                   prompt.shape[1]])
+    _bcast(np.asarray([steps], np.int32))
+    _bcast(prompt)
+    with mirrored_region():
+        return decoder.generate(prompt, steps=steps, head=head)
+
+
+def stop_followers(ctx: MultihostContext) -> None:
+    """Leader: release every follower_loop (call once, when done)."""
+    _bcast_header([OP_STOP, 0, 0, 0])
+
+
+def follower_loop(engine, ctx: MultihostContext, decoder=None,
+                  max_ops: int | None = None) -> int:
+    """Run on every non-leader process: replay the leader's opcode
+    stream — entering the same jitted steps with the same replicated
+    payloads — until OP_STOP (or ``max_ops``).  Returns ops executed.
+
+    The engine (and decoder, when decode traffic is expected) must be
+    constructed identically to the leader's — same weights, same fitted
+    index — which deterministic seeds give for free; the index stack
+    itself is assembled from LOCAL shards, so "identical" never means
+    shipping the full [m, d] weight anywhere.
+    """
+    if ctx.is_leader:
+        raise RuntimeError("follower_loop on the leader would deadlock "
+                           "waiting for its own broadcast")
+    n_ops = 0
+    while max_ops is None or n_ops < max_ops:
+        op, kind_id, rows, dim = (int(v) for v in _bcast_header())
+        if op == OP_STOP:
+            break
+        n_ops += 1
+        kind = _ID_HEADS[kind_id]
+        if op == OP_SCORE:
+            q = compat.broadcast_one_to_all(
+                np.zeros((rows, dim), np.float32))
+            out = engine._step(kind, rows)(q)
+            jax.block_until_ready(out.logits)
+        elif op == OP_DECODE:
+            steps = int(_bcast(np.zeros((1,), np.int32))[0])
+            prompt = _bcast(np.zeros((rows, dim), np.int32))
+            if decoder is None:
+                raise RuntimeError("OP_DECODE received but follower has "
+                                   "no decoder to mirror generate on")
+            with mirrored_region():
+                decoder.generate(prompt, steps=steps, head=kind)
+        else:
+            raise RuntimeError(f"unknown multihost opcode {op}")
+    return n_ops

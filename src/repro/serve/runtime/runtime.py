@@ -533,6 +533,10 @@ class AsyncRuntime:
                     x = jax.tree.map(lambda *rows: np.stack(rows),
                                      *[w.x for w in live])
                     padded = MicroBatcher.pad_rows(x, bucket)
+                    # the engine's step seam: on a multi-process engine
+                    # (Engine(spmd=...)) this is the leader-side wrapper
+                    # that broadcasts the chunk to every follower_loop
+                    # first — the runtime needs no multihost awareness
                     step = self.engine._step(self.head, bucket)
                     n_disp = len(dispatch_log())
                     n_comp = sum(self.engine.compile_counts.values())

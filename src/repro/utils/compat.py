@@ -17,11 +17,18 @@ runs on the pinned jax and on current releases.
 from __future__ import annotations
 
 import inspect
+import os
 
 import jax
 
 __all__ = ["get_abstract_mesh", "set_mesh", "make_mesh", "shard_map",
-           "auto_axis_types", "cost_analysis"]
+           "auto_axis_types", "cost_analysis",
+           "distributed_initialize", "is_distributed", "process_index",
+           "process_count", "make_global_mesh", "make_global_array",
+           "broadcast_one_to_all", "process_allgather",
+           "replicate_global",
+           "DIST_COORDINATOR_ENV", "DIST_NUM_PROCESSES_ENV",
+           "DIST_PROCESS_ID_ENV"]
 
 
 def get_abstract_mesh():
@@ -89,3 +96,152 @@ def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check)
+
+
+# ===================================================== multi-process ==
+# jax.distributed moved less than the sharding API, but the pieces a
+# multi-host serving mesh needs still differ across releases (the CPU
+# collectives flag, make_array_from_process_local_data's signature), so
+# every multi-process call site routes through here too.
+
+DIST_COORDINATOR_ENV = "REPRO_DIST_COORDINATOR"
+DIST_NUM_PROCESSES_ENV = "REPRO_DIST_NUM_PROCESSES"
+DIST_PROCESS_ID_ENV = "REPRO_DIST_PROCESS_ID"
+
+_dist_initialized = False
+
+
+def distributed_initialize(coordinator_address: str | None = None,
+                           num_processes: int | None = None,
+                           process_id: int | None = None) -> bool:
+    """Idempotent ``jax.distributed.initialize`` with CPU collectives.
+
+    Arguments default to ``$REPRO_DIST_COORDINATOR`` /
+    ``$REPRO_DIST_NUM_PROCESSES`` / ``$REPRO_DIST_PROCESS_ID``, so a
+    launcher wrapper can configure a whole fleet through the
+    environment.  Returns True when a multi-process runtime is (now)
+    active, False for the single-process case (``num_processes`` <= 1 or
+    unset) — callers can branch on it without re-reading the env.
+
+    MUST run before any jax computation: on the CPU backend the
+    cross-process collective implementation (gloo) has to be selected
+    before the backend initializes, or every collective fails with
+    "Multiprocess computations aren't implemented on the CPU backend".
+    """
+    global _dist_initialized
+    if coordinator_address is None:
+        coordinator_address = os.environ.get(DIST_COORDINATOR_ENV)
+    if num_processes is None:
+        num_processes = int(os.environ.get(DIST_NUM_PROCESSES_ENV, "1"))
+    if process_id is None:
+        process_id = int(os.environ.get(DIST_PROCESS_ID_ENV, "0"))
+    if num_processes <= 1 or coordinator_address is None:
+        return _dist_initialized
+    if _dist_initialized:
+        return True
+    try:
+        # renamed/absent on some releases; non-CPU backends don't need it
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    try:
+        # the mirrored-decode path runs eager (non-jit) ops on
+        # replicated global arrays in lockstep on every process; jax
+        # guards those behind spmd_mode (flag absent on newer releases)
+        jax.config.update("jax_spmd_mode", "allow_all")
+    except Exception:
+        pass
+    _dist_initialized = True
+    return True
+
+
+def is_distributed() -> bool:
+    """True iff :func:`distributed_initialize` activated a fleet."""
+    return _dist_initialized
+
+
+def process_index() -> int:
+    return jax.process_index()
+
+
+def process_count() -> int:
+    return jax.process_count()
+
+
+def make_global_mesh(axis_names: tuple[str, str] = ("host", "model")
+                     ) -> jax.sharding.Mesh:
+    """Global (host, model) mesh over every process's devices.
+
+    Rows are processes (devices sorted by ``(process_index, id)``), so
+    the host axis is exactly the process grid and anything sharded over
+    ``(host, model)`` lands contiguous shard blocks on each host — the
+    layout the hierarchical top-k merge's offset math assumes.
+    """
+    import numpy as np
+    devs = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    n_proc = jax.process_count()
+    grid = np.asarray(devs).reshape(n_proc, len(devs) // n_proc)
+    return jax.sharding.Mesh(grid, axis_names)
+
+
+def make_global_array(sharding, local_data, global_shape: tuple
+                      ) -> jax.Array:
+    """A global array from this process's slice of it (leading-axis
+    sharded).  ``jax.make_array_from_process_local_data`` where present,
+    else assembled per-device via ``make_array_from_single_device_arrays``.
+    """
+    fn = getattr(jax, "make_array_from_process_local_data", None)
+    if fn is not None:
+        try:
+            return fn(sharding, local_data, global_shape)
+        except TypeError:       # older signature: no global_shape arg
+            return fn(sharding, local_data)
+    import numpy as np
+    local_devs = [d for d in sharding.mesh.devices.flat
+                  if d.process_index == jax.process_index()]
+    chunks = np.split(np.asarray(local_data), len(local_devs), axis=0)
+    shards = [jax.device_put(c, d) for c, d in zip(chunks, local_devs)]
+    return jax.make_array_from_single_device_arrays(
+        global_shape, sharding, shards)
+
+
+def broadcast_one_to_all(x):
+    """Process 0's pytree on every process (identity single-process)."""
+    if jax.process_count() == 1:
+        return x
+    from jax.experimental import multihost_utils
+    return multihost_utils.broadcast_one_to_all(x)
+
+
+def process_allgather(x):
+    """Stack each process's pytree along a new leading axis (identity
+    reshape single-process)."""
+    if jax.process_count() == 1:
+        import jax.numpy as jnp
+        return jax.tree.map(lambda l: jnp.asarray(l)[None], x)
+    from jax.experimental import multihost_utils
+    return multihost_utils.process_allgather(x)
+
+
+def replicate_global(tree, mesh) -> object:
+    """Promote every LOCAL leaf of a pytree to a mesh-replicated global
+    array, assuming each process already holds the same mirrored value
+    (so no cross-process copy happens — each process just stamps its
+    local copy onto its own devices).  Leaves that already span
+    non-addressable devices pass through untouched; a multi-process jit
+    can then take the tree as arguments next to (host, model)-sharded
+    operands."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    sharding = NamedSharding(mesh, PartitionSpec())
+
+    def leaf(v):
+        if isinstance(v, jax.Array) and not v.is_fully_addressable:
+            return v
+        import numpy as np
+        v = np.asarray(v)
+        return make_global_array(sharding, v, v.shape)
+
+    return jax.tree.map(leaf, tree)

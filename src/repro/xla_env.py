@@ -1,0 +1,28 @@
+"""XLA environment knobs that must be set BEFORE jax is imported.
+
+Deliberately a top-level jax-free module (``repro/__init__`` is too):
+``XLA_FLAGS`` is parsed once at backend initialization, so launchers
+edit it first and import jax after — importing this helper must not
+drag jax in transitively.
+"""
+
+from __future__ import annotations
+
+import os
+
+__all__ = ["force_host_device_count"]
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int, env=os.environ) -> str:
+    """Set ``--xla_force_host_platform_device_count=n`` in ``XLA_FLAGS``,
+    PRESERVING every other flag already there (a user's
+    ``--xla_cpu_enable_fast_math`` etc. must survive the launcher).
+    Replaces an existing device-count flag.  Returns the new value.
+    """
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith(f"{_FLAG}=") and f != _FLAG]
+    flags.append(f"{_FLAG}={int(n)}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    return env["XLA_FLAGS"]

@@ -123,6 +123,47 @@ def test_query_block_padding_parity(b):
     assert grid_steps(b) == -(-b // bq)
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=3, max_value=40),
+       st.integers(min_value=2, max_value=4))
+def test_shard_index_padding_masks_w_scale(m, n_shards):
+    """int8 slab: the padded tail's ``w_scale`` rows are zeroed exactly
+    like the marker weight rows.  The pad rows carry a NEG_INF sentinel
+    bias column, so quantizing them would otherwise bake a garbage
+    (inf-derived) scale into the slab — the mask keeps every marker
+    slot's (weight, scale) pair identically zero, and the padded shard
+    still ranks bit-identically on the ref and fused interpret paths."""
+    cfg = LSSConfig(k_bits=3, n_tables=2, use_bucket_major=True,
+                    slab_dtype="int8")
+    w = jax.random.normal(jax.random.PRNGKey(m * 13 + n_shards), (m, D))
+    w_aug = simhash.augment_neurons(w, None)
+    theta = simhash.init_hyperplanes(jax.random.PRNGKey(1), D + 1,
+                                     cfg.k_bits, cfg.n_tables)
+    stack, _, m_local = shard_index(w_aug, theta, cfg, n_shards)
+    for s in range(n_shards):
+        idx = jax.tree.map(lambda x, s=s: x[s], stack)
+        ids_tab = np.asarray(idx.tables.table_ids)
+        ws = np.asarray(idx.w_scale)
+        assert ws.shape == ids_tab.shape
+        # real slots keep a usable (finite) scale everywhere
+        assert np.isfinite(ws[ids_tab >= 0]).all()
+    if m % n_shards:                       # the tail shard got masked:
+        last = jax.tree.map(lambda x: x[-1], stack)
+        ids_tab = np.asarray(last.tables.table_ids)
+        ws = np.asarray(last.w_scale)
+        # EVERY empty slot's scale is zeroed exactly like the weight
+        # rows (no NEG_INF-derived garbage survives the mask)
+        assert (ws[ids_tab < 0] == 0).all()
+        assert (np.asarray(last.w_bucketed)[ids_tab < 0] == 0).all()
+    q = jax.random.normal(jax.random.PRNGKey(2), (N_QUERIES, D))
+    last = jax.tree.map(lambda x: x[-1], stack)      # the padded shard
+    ref_l, ref_i = local_topk(q, last, None, TOP_K, impl="ref")
+    out_l, out_i = local_topk(q, last, None, TOP_K,
+                              impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(ref_i), np.asarray(out_i))
+    np.testing.assert_array_equal(np.asarray(ref_l), np.asarray(out_l))
+
+
 @settings(max_examples=4, deadline=None)
 @given(st.integers(min_value=5, max_value=23),
        st.integers(min_value=2, max_value=3))

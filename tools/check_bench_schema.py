@@ -13,7 +13,13 @@ artifact missing any of the three capacity kinds — ``sessions_per_gb``,
 can never silently drop out of the bench).  The obs artifact must carry
 both an ``overhead`` row (obs-on vs no-op throughput/p99) and an
 ``audit_recall`` row whose online recall agrees with the offline brute
-force within ``OBS_AUDIT_TOL``.
+force within ``OBS_AUDIT_TOL``.  The multihost artifact
+(``BENCH_multihost.json``) must keep its 1- and 2-process qps_scaling
+rows, a capacity row, and a summary row recording the equal-total-m
+1->2 aggregate-QPS ratio — which must reach ``MULTIHOST_MIN_RATIO``
+whenever the machine had >= 2 CPUs (on one core two processes
+timeshare and the ratio is physically meaningless, so it is recorded
+but not gated).
 
 Usage: ``python tools/check_bench_schema.py [path]`` (default
 ``BENCH_kernels.json``; the artifact's own ``bench`` field selects the
@@ -117,6 +123,67 @@ def check_decode(rec: dict) -> list[str]:
     return errors
 
 
+# --------------------------------------------------- multihost schema --
+MULTIHOST_QPS_FIELDS = (
+    "processes", "local_devices", "n_shards", "total_m", "per_host_m",
+    "batch", "iters", "qps", "us_per_query")
+MULTIHOST_CAP_FIELDS = (
+    "processes", "budget_gb_per_host", "index_bytes_per_host",
+    "bytes_per_row", "max_m_total")
+MULTIHOST_SUMMARY_FIELDS = ("qps_ratio_1_to_2", "total_m", "per_host_m",
+                            "n_cpus")
+MULTIHOST_MIN_RATIO = 1.7
+
+
+def check_multihost(rec: dict) -> list[str]:
+    errors = []
+    rows = rec.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return ["artifact has no rows"]
+    seen_kinds: set[str] = set()
+    qps_procs: set[int] = set()
+    for i, r in enumerate(rows):
+        kind = r.get("kind")
+        seen_kinds.add(kind)
+        if kind == "qps_scaling":
+            required = MULTIHOST_QPS_FIELDS
+            qps_procs.add(r.get("processes"))
+        elif kind == "capacity":
+            required = MULTIHOST_CAP_FIELDS
+        elif kind == "summary":
+            required = MULTIHOST_SUMMARY_FIELDS
+        else:
+            errors.append(f"row {i}: unknown multihost row kind {kind!r}")
+            continue
+        missing = [f for f in required if f not in r]
+        if missing:
+            errors.append(f"row {i} (kind={kind}): missing required "
+                          f"fields {missing}")
+    for kind in ("qps_scaling", "capacity", "summary"):
+        if kind not in seen_kinds:
+            errors.append(f"multihost artifact has no {kind!r} row (a "
+                          f"scaling row was silently dropped)")
+    if "qps_scaling" in seen_kinds and not {1, 2} <= qps_procs:
+        errors.append(f"qps_scaling rows cover processes "
+                      f"{sorted(qps_procs)}; the 1- and 2-process points "
+                      f"are both required (the scaling story can never "
+                      f"silently drop a fleet size)")
+    for r in rows:
+        if r.get("kind") != "summary":
+            continue
+        ratio = r.get("qps_ratio_1_to_2")
+        if not isinstance(ratio, (int, float)):
+            errors.append("summary row: qps_ratio_1_to_2 is not recorded "
+                          "as a number")
+        elif r.get("n_cpus", 0) >= 2 and ratio < MULTIHOST_MIN_RATIO:
+            errors.append(
+                f"summary row: equal-total-m qps ratio 1->2 processes is "
+                f"{ratio:.2f} < {MULTIHOST_MIN_RATIO} on "
+                f"{r.get('n_cpus')} cpus — splitting the vocab across "
+                f"two hosts is not paying for itself")
+    return errors
+
+
 # --------------------------------------------------------- obs schema --
 OBS_OVERHEAD_FIELDS = (
     "rps_on", "rps_off", "overhead_pct", "p99_on_ms", "p99_off_ms",
@@ -170,6 +237,8 @@ def check(rec: dict) -> list[str]:
         return check_decode(rec)
     if rec.get("bench") == "obs":
         return check_obs(rec)
+    if rec.get("bench") == "multihost":
+        return check_multihost(rec)
     return check_kernels(rec)
 
 
@@ -190,6 +259,11 @@ def main() -> int:
             oh = next(r for r in rec["rows"] if r["kind"] == "overhead")
             print(f"schema ok: {len(rec['rows'])} obs rows (overhead "
                   f"{oh['overhead_pct']:.2f}%)")
+        elif rec.get("bench") == "multihost":
+            s = next(r for r in rec["rows"] if r["kind"] == "summary")
+            print(f"schema ok: {len(rec['rows'])} multihost rows "
+                  f"(1->2 qps ratio {s['qps_ratio_1_to_2']:.2f} on "
+                  f"{s['n_cpus']} cpus)")
         elif rec.get("bench") == "decode":
             kinds = [r.get("kind", "sweep") for r in rec["rows"]]
             print(f"schema ok: {len(rec['rows'])} decode rows "

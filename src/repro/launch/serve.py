@@ -91,7 +91,8 @@ def main() -> None:
                     help="multi-host serving: jax.distributed coordinator "
                          "host:port (default: $REPRO_DIST_COORDINATOR); "
                          "run one launcher per process with the same "
-                         "flags, distinct --process-id")
+                         "flags, distinct --process-id; --mode decode "
+                         "is not supported on a fleet")
     ap.add_argument("--num-processes", type=int, default=None,
                     help="multi-host serving: fleet size (default: "
                          "$REPRO_DIST_NUM_PROCESSES; <= 1 = single-host)")
@@ -117,6 +118,25 @@ def main() -> None:
     # env vars)
     from repro.serve.multihost import (follower_loop, init_multihost,
                                        stop_followers)
+    import os
+    from repro.utils.compat import (DIST_COORDINATOR_ENV,
+                                    DIST_NUM_PROCESSES_ENV)
+    n_proc = (args.num_processes if args.num_processes is not None
+              else int(os.environ.get(DIST_NUM_PROCESSES_ENV, "1")))
+    coord = args.coordinator or os.environ.get(DIST_COORDINATOR_ENV)
+    if args.mode == "decode" and n_proc > 1 and coord:
+        # streaming decode sessions are not routed through the OP_DECODE
+        # opcode channel: the leader's fused decode steps embed fleet
+        # collectives the followers would never enter, deadlocking at
+        # the first generate.  Checked BEFORE distributed init (which
+        # blocks until the whole fleet connects) from the same
+        # flag/env defaults init_multihost resolves, so every process
+        # fails fast and consistently instead of hanging.
+        raise SystemExit(
+            "--mode decode is not supported with multi-host serving "
+            "(--coordinator/--num-processes): use --mode generate for "
+            "blocking fleet decode, or --runtime async for open-loop "
+            "scoring")
     ctx = init_multihost(args.coordinator, args.num_processes,
                          args.process_id)
     if ctx is not None:

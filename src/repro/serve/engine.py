@@ -26,6 +26,7 @@ Request flow::
 
 from __future__ import annotations
 
+import contextlib
 import math
 import threading
 import time
@@ -135,6 +136,16 @@ class Engine:
                  spmd=None):
         if head not in HEAD_KINDS:
             raise ValueError(f"head must be one of {HEAD_KINDS}, got {head}")
+        if spmd is not None and embed_fn is not None:
+            # fail here, not inside the hot step: the opcode channel
+            # broadcasts raw [B, d] float32 embedding batches, and an
+            # embed_fn engine's [B, T] int token batch is also 2-D — it
+            # would be silently cast to float and fed to embed().  A
+            # mid-stream raise would also leave followers parked.
+            raise ValueError(
+                "multihost serving (spmd=...) requires embed_fn=None: "
+                "requests must already be [B, d] embeddings; run the "
+                "model body before submission")
         if impl is not None and impl not in registry.IMPLS:
             raise ValueError(
                 f"impl must be one of {registry.IMPLS} or None, got {impl}")
@@ -413,12 +424,29 @@ class Engine:
                     # SPMD across the fleet
                     from repro.utils import compat
                     mesh = self.spmd.mesh
+                    # params replicate ONCE per weight tree, not per
+                    # token: re-stamping every fully-addressable weight
+                    # leaf each fused step is a host->device device_put
+                    # of the whole model per token.  The cache pins the
+                    # source tree so its id can't be recycled; the k/v
+                    # state leaves come back from the previous step as
+                    # global arrays and pass through replicate_global
+                    # untouched, so only tok (and the first step's
+                    # state) get stamped per call.
+                    params_cache: dict = {}
 
                     def step(params, tok, *state, _j=jitted,
                              _ops=operands):
-                        params, tok, state = compat.replicate_global(
-                            (params, tok, state), mesh)
-                        return _j(params, tok, *state, *_ops)
+                        cached = params_cache.get(id(params))
+                        if cached is None or cached[0] is not params:
+                            params_cache.clear()
+                            params_cache[id(params)] = (
+                                params,
+                                compat.replicate_global(params, mesh))
+                        params_g = params_cache[id(params)][1]
+                        tok, state = compat.replicate_global(
+                            (tok, state), mesh)
+                        return _j(params_g, tok, *state, *_ops)
 
                     self._steps[key] = step
             return self._steps[key]
@@ -468,10 +496,21 @@ class Engine:
         return out
 
     # --------------------------------------------------- request queue --
+    def _channel_lock(self):
+        """The multihost opcode-channel lock when this process is the
+        leader (a no-op context otherwise).  Entry points that hold
+        ``self.lock`` across a leader-wrapped step (submit/flush) take
+        it FIRST, so lock order is always channel -> engine — the same
+        order ``multihost.leader_generate`` (channel) -> decode-step
+        build (engine) uses.  Both locks are reentrant."""
+        if self.spmd is not None and self.spmd.is_leader:
+            return self.spmd.lock
+        return contextlib.nullcontext()
+
     def submit(self, x, labels=None) -> int:
         """Enqueue one example (leaves WITHOUT the batch dim).  Returns a
         request id; auto-flushes once a full max bucket is waiting."""
-        with self.lock:
+        with self._channel_lock(), self.lock:
             rid = self._next_rid
             self._next_rid += 1
             self._queue.append(_Pending(rid, x, _as_label_row(labels),
@@ -485,7 +524,7 @@ class Engine:
         xb_np = jax.tree.map(np.asarray, xb)     # one device->host copy
         n = jax.tree.leaves(xb_np)[0].shape[0]
         lab = None if labels is None else np.asarray(labels)
-        with self.lock:                          # rids stay contiguous
+        with self._channel_lock(), self.lock:    # rids stay contiguous
             return [self.submit(jax.tree.map(lambda l: l[i], xb_np),
                                 None if lab is None else lab[i])
                     for i in range(n)]
@@ -499,7 +538,7 @@ class Engine:
     def flush(self, head: str | None = None) -> list[RankResult]:
         """Drain the queue through bucketed steps; return all finished
         results (including auto-flushed ones) in submit order."""
-        with self.lock:
+        with self._channel_lock(), self.lock:
             while self._queue:
                 take = min(len(self._queue), self.batcher.max_bucket)
                 group = self._queue[:take]

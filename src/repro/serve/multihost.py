@@ -18,7 +18,12 @@ and the AsyncRuntime dispatcher fetch steps from — which on the leader
 returns a :func:`make_leader_step` wrapper that first broadcasts a
 fixed [4]-int32 header ``(opcode, head, rows, dim)`` and then the
 padded batch; followers sit in :func:`follower_loop` replaying the
-opcode stream until ``OP_STOP``.
+opcode stream until ``OP_STOP``.  The follower side of the channel is
+a single thread, so every leader-side broadcast sequence holds
+``MultihostContext.lock`` end to end (header + payload + step) —
+without it two leader threads (the AsyncRuntime dispatcher and, say,
+the RecallAuditor's background ``rank(head="full")``) could interleave
+their header/payload pairs and desync the whole fleet.
 
 Decode rides the same opcode channel at session granularity:
 ``OP_DECODE`` broadcasts the prompt block once, then EVERY process runs
@@ -53,11 +58,20 @@ _ID_HEADS = {v: k for k, v in _HEAD_IDS.items()}
 
 @dataclasses.dataclass(frozen=True)
 class MultihostContext:
-    """The fleet's shape, shared by engine, launcher, and bench."""
+    """The fleet's shape, shared by engine, launcher, and bench.
+
+    ``lock`` serializes the leader's opcode channel: the single-threaded
+    ``follower_loop`` pairs each header with the payload that follows
+    it, so a leader-side broadcast sequence must never interleave with
+    another thread's.  Reentrant, because a mirrored decode holds it
+    across ``generate`` while the inner prefill re-enters the step
+    wrapper on the same thread."""
 
     mesh: jax.sharding.Mesh
     host_axis: str = "host"
     model_axis: str = "model"
+    lock: threading.RLock = dataclasses.field(
+        default_factory=threading.RLock, repr=False, compare=False)
 
     @property
     def process_id(self) -> int:
@@ -168,24 +182,31 @@ def make_leader_step(ctx: MultihostContext, jitted, kind: str,
     replicated batch so every follower enters the same collective
     program, run it, and hand back HOST results (numpy) — the engine's
     slicing/metrics must not launch new device programs on global
-    arrays outside the SPMD seam."""
+    arrays outside the SPMD seam.  The whole header+payload+step
+    sequence runs under ``ctx.lock`` so concurrent leader threads (the
+    AsyncRuntime dispatcher, the RecallAuditor, user threads) can never
+    interleave broadcasts on the single-threaded follower channel."""
     kind_id = _HEAD_IDS[kind]
 
     def step(padded):
         if in_mirrored_region():
             # every process is already running this same code in
             # lockstep — no broadcast, the batch is identical everywhere
-            # (uncommitted/local inputs are treated as replicated)
+            # (uncommitted/local inputs are treated as replicated); on
+            # the leader, ctx.lock is already held by leader_generate
             return jax.tree.map(lambda l: np.asarray(l), jitted(padded))
         x = np.asarray(padded, np.float32)
         if x.ndim != 2:
             raise ValueError(
                 "multihost serving scores raw [B, d] embedding batches "
                 f"(embed_fn=None engines); got shape {x.shape}")
-        _bcast_header([OP_SCORE, kind_id, x.shape[0], x.shape[1]])
-        q = compat.broadcast_one_to_all(x)
-        out = jitted(q)
-        return jax.tree.map(lambda l: np.asarray(l), out)
+        with ctx.lock:
+            _bcast_header([OP_SCORE, kind_id, x.shape[0], x.shape[1]])
+            q = compat.broadcast_one_to_all(x)
+            out = jitted(q)
+            # materialize INSIDE the lock: the next opcode must not be
+            # broadcast until this SPMD program has fully dispatched
+            return jax.tree.map(lambda l: np.asarray(l), out)
 
     return step
 
@@ -196,17 +217,23 @@ def leader_generate(ctx: MultihostContext, decoder, prompt, steps: int,
     then run the same deterministic ``generate`` everywhere (followers
     pick it up via OP_DECODE in :func:`follower_loop`)."""
     prompt = np.asarray(prompt, np.int32)
-    _bcast_header([OP_DECODE, _HEAD_IDS[head], prompt.shape[0],
-                   prompt.shape[1]])
-    _bcast(np.asarray([steps], np.int32))
-    _bcast(prompt)
-    with mirrored_region():
-        return decoder.generate(prompt, steps=steps, head=head)
+    with ctx.lock:
+        _bcast_header([OP_DECODE, _HEAD_IDS[head], prompt.shape[0],
+                       prompt.shape[1]])
+        _bcast(np.asarray([steps], np.int32))
+        _bcast(prompt)
+        # hold the lock across the mirrored generate too: its fused
+        # decode steps run fleet-wide collectives, so another leader
+        # thread broadcasting OP_SCORE mid-decode would interleave
+        # collective programs across processes
+        with mirrored_region():
+            return decoder.generate(prompt, steps=steps, head=head)
 
 
 def stop_followers(ctx: MultihostContext) -> None:
     """Leader: release every follower_loop (call once, when done)."""
-    _bcast_header([OP_STOP, 0, 0, 0])
+    with ctx.lock:
+        _bcast_header([OP_STOP, 0, 0, 0])
 
 
 def follower_loop(engine, ctx: MultihostContext, decoder=None,

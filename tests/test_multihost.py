@@ -143,6 +143,25 @@ else:
     assert n_ops == 2, n_ops
     print("MH-FOLLOWER-OK", flush=True)
 
+# ---- 2b. concurrent leader threads serialize on the opcode channel ----
+# (the auditor-vs-dispatcher race: without ctx.lock the two threads'
+# header+payload sequences interleave and the fleet desyncs/hangs)
+if ctx.is_leader:
+    import threading
+    res = {}
+    t = threading.Thread(target=lambda: res.update(
+        full=eng.rank(Q, head="full", record=False)))
+    t.start()
+    out3 = eng.rank(Q, record=False)
+    t.join(timeout=600)
+    assert not t.is_alive(), "concurrent full-head rank hung"
+    np.testing.assert_array_equal(np.asarray(out3.ids), ref["e_ids"])
+    assert res["full"].ids.shape == (BATCH, K), res["full"].ids.shape
+    print("MH-CONCURRENT-OK", flush=True)
+else:
+    n_ops = follower_loop(eng, ctx, max_ops=2)
+    assert n_ops == 2, n_ops
+
 # ---- 3. mirrored decode: leader_generate == single-process generate ---
 dec = make_decoder(spmd=ctx)
 if ctx.is_leader:
@@ -198,4 +217,5 @@ def test_multihost_fleet_matches_single_process(tmp_path):
         assert "MH-PREDICT-OK" in outs[i], outs[i][-3000:]
         assert "MH-ALL-OK" in outs[i], outs[i][-3000:]
     assert "MH-ENGINE-OK" in outs[0] and "MH-DECODE-OK" in outs[0]
+    assert "MH-CONCURRENT-OK" in outs[0]
     assert "MH-FOLLOWER-OK" in outs[1]

@@ -1,0 +1,308 @@
+"""Zero-downtime index refresh benchmark -> ``BENCH_refresh.json``.
+
+Three rows, one per question the online-refresh story has to answer:
+
+  * ``swap_latency`` — open-loop load (Poisson arrivals, ``block``
+    policy so nothing can hide in a shed) against an ``AsyncRuntime``
+    while a background thread swaps freshly refit indexes into the
+    Engine mid-run.  Requests whose in-flight interval overlaps a swap
+    window form the "during swap" population; the row reports their p99
+    against the steady-state p99 (``p99_swap_ratio`` is the CI gate),
+    the count of failed futures (must be 0 — a swap may never fail a
+    request), and a bit-exactness probe: after the run, the serving
+    engine's output must equal a cold engine built directly on the
+    final index.
+  * ``recall_staleness`` — start from a SimHash-initialised (stale)
+    index, let :class:`IndexRefresher` cycles re-learn the hash online,
+    and compare against an OFFLINE ``fit_lss`` on the same calibration
+    set: the claim is that refreshing in place reaches the same recall
+    as taking the server down to refit.  (On this synthetic isotropic
+    WOL, IUL has no structure to exploit, so both recalls sit near the
+    SimHash baseline — the row pins online ≈ offline, not an absolute
+    gain; the gain story lives in the paper's real-activation runs.)
+  * ``rollback`` — guarded-swap drill: live traffic feeds the recall
+    auditor, a fault injection corrupts the probation recall to 0, and
+    the row records that the refresher rolled back and how long the
+    probation took to decide.
+
+Run:  PYTHONPATH=src python -m benchmarks.refresh_bench
+Env:  BENCH_FAST=1 shrinks sizes (default); BENCH_REFRESH_OUT /
+      BENCH_OUT_DIR override the artifact path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import iul, simhash
+from repro.core.lss import LSSConfig
+from repro.serve import AsyncRuntime, Engine
+from repro.serve.refresh import IndexRefresher, RefreshConfig
+from repro.serve.runtime import submit_open_loop
+from repro.testing import faults
+
+D_MODEL = 32
+TOP_K = 10
+SWAP_WINDOW_MARGIN_S = 0.05     # swap effects tail past the flip itself
+
+
+def build_engine(m: int, buckets: tuple[int, ...], *, n_calib: int,
+                 audit_rate: float = 0.0, trained: bool = True) -> Engine:
+    """Engine on a synthetic WOL with TRUE top-k calibration labels, so
+    refit recall is meaningful (random labels would make IUL chase
+    noise).  ``trained=False`` leaves the SimHash init in place but
+    still attaches the calibration snapshot the refresher needs."""
+    cfg = LSSConfig(k_bits=6, n_tables=2, use_bucket_major=True)
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (m, D_MODEL), jnp.float32)
+    q = np.asarray(jax.random.normal(jax.random.PRNGKey(2),
+                                     (n_calib, D_MODEL), jnp.float32))
+    scores = q @ np.asarray(w).T
+    labels = np.argpartition(-scores, TOP_K, axis=1)[:, :TOP_K]
+    eng = Engine(None, w, None, cfg, top_k=TOP_K, head="lss",
+                 buckets=buckets, audit_rate=audit_rate)
+    if trained:
+        eng.fit_from_queries(jax.random.PRNGKey(1), jnp.asarray(q),
+                             jnp.asarray(labels))
+    else:
+        eng.fit_random(jax.random.PRNGKey(1))
+        eng.calib = (jnp.asarray(q), jnp.asarray(labels))
+    return eng
+
+
+def warm(eng: Engine) -> None:
+    for b in eng.batcher.buckets:
+        eng.rank(np.zeros((b, D_MODEL), np.float32), record=False)
+
+
+def _refit_candidates(eng: Engine, n: int) -> list:
+    """Pre-run ``n`` IUL refit epochs so the load segment measures the
+    SWAP, not the refit (the refit is off the hot path by construction;
+    on a shared-CPU bench box it would just add noise)."""
+    q, labels = eng.calib
+    q_aug = simhash.augment_queries(np.asarray(q, np.float32))
+    state = iul.iul_init(jax.random.PRNGKey(3), q_aug, labels,
+                         eng._w_aug, eng.lss_cfg, theta=eng.index.theta)
+    idx, cands = eng.index, []
+    for _ in range(n):
+        state, idx, _ = iul.iul_refit_epoch(state, q_aug, labels,
+                                            eng._w_aug, idx, eng.lss_cfg)
+        cands.append(idx)
+    return cands
+
+
+def bench_swap_latency(*, m: int, n_requests: int, qps: float,
+                       n_swaps: int, buckets: tuple[int, ...]) -> dict:
+    eng = build_engine(m, buckets, n_calib=512)
+    warm(eng)
+    cands = _refit_candidates(eng, n_swaps)
+
+    windows: list[tuple[float, float]] = []     # perf_counter spans
+    duration = n_requests / qps
+    spacing = duration / (n_swaps + 1)
+
+    def swapper(t_start: float) -> None:
+        for k, cand in enumerate(cands):
+            wake = t_start + (k + 1) * spacing
+            time.sleep(max(0.0, wake - time.perf_counter()))
+            t0 = time.perf_counter()
+            eng.swap_index(cand, warm=True)
+            windows.append((t0, time.perf_counter()))
+
+    rng = np.random.default_rng(5)
+    xs = rng.standard_normal((n_requests, D_MODEL)).astype(np.float32)
+    rt = AsyncRuntime(eng, head="lss", max_queue=n_requests + 8,
+                      policy="block")
+    th = threading.Thread(target=swapper, args=(time.perf_counter(),),
+                          daemon=True)
+    th.start()
+    futs, _ = submit_open_loop(rt, xs, qps, seed=9)
+    rt.drain(timeout=600.0)
+    s = rt.stats()
+    rt.close()
+    th.join(timeout=60.0)
+    assert not th.is_alive(), "swapper wedged"
+
+    n_failed = sum(f.exception() is not None for f in futs)
+    done = [f for f in futs if f.exception() is None]
+
+    def in_swap(f) -> bool:
+        return any(f.t_submit < t1 + SWAP_WINDOW_MARGIN_S and f.t_done > t0
+                   for t0, t1 in windows)
+
+    swap_lat = np.array([(f.t_done - f.t_submit) * 1e3
+                         for f in done if in_swap(f)])
+    steady_lat = np.array([(f.t_done - f.t_submit) * 1e3
+                           for f in done if not in_swap(f)])
+    p99_steady = float(np.percentile(steady_lat, 99))
+    p99_swap = (float(np.percentile(swap_lat, 99)) if swap_lat.size
+                else p99_steady)
+
+    # bit-exactness probe: the engine after N online swaps must equal a
+    # cold engine built directly on the final candidate index
+    cold = build_engine(m, buckets, n_calib=512, trained=False)
+    cold._set_index(cands[-1])
+    probe = xs[: max(buckets)]
+    exact = bool(np.array_equal(
+        np.asarray(eng.rank(probe, record=False).logits),
+        np.asarray(cold.rank(probe, record=False).logits)))
+    return {
+        "kind": "swap_latency",
+        "head": "lss", "m": m, "d": D_MODEL,
+        "qps": qps, "n_requests": n_requests, "n_swaps": n_swaps,
+        "p50_steady_ms": round(float(np.percentile(steady_lat, 50)), 3),
+        "p99_steady_ms": round(p99_steady, 3),
+        "p99_swap_ms": round(p99_swap, 3),
+        "p99_swap_ratio": round(p99_swap / p99_steady, 3),
+        "swap_window_n": int(swap_lat.size),
+        "swap_ms_mean": round(float(np.mean(
+            [(t1 - t0) * 1e3 for t0, t1 in windows])), 3),
+        "n_failed": n_failed,
+        "n_shed": s.n_shed_queue + s.n_shed_deadline,
+        "exact_after_swaps": exact,
+        "n_cpus": os.cpu_count() or 1,
+    }
+
+
+def bench_recall_staleness(*, m: int, n_cycles: int,
+                           buckets: tuple[int, ...]) -> dict:
+    eng = build_engine(m, buckets, n_calib=512, trained=False)
+    q, labels = eng.calib
+    q_aug = simhash.augment_queries(np.asarray(q, np.float32))
+    stale = iul.calib_recall(eng.index, q_aug, labels)
+    r = IndexRefresher(eng, auditor=None,
+                       cfg=RefreshConfig(warm=False))
+    for _ in range(n_cycles):
+        outcome = r.refresh_once()
+        assert outcome == "swapped", outcome
+    online = iul.calib_recall(eng.index, q_aug, labels)
+    offline_index, _ = iul.fit_lss(jax.random.PRNGKey(4), q, labels,
+                                   eng.w, eng.b, eng.lss_cfg)
+    offline = iul.calib_recall(offline_index, q_aug, labels)
+    return {
+        "kind": "recall_staleness",
+        "m": m, "d": D_MODEL, "n_cycles": n_cycles,
+        "n_calib": int(q_aug.shape[0]), "top_k": TOP_K,
+        "recall_stale": round(stale, 4),
+        "recall_refreshed": round(online, 4),
+        "recall_offline_refit": round(offline, 4),
+        "gap_to_offline": round(offline - online, 4),
+    }
+
+
+def bench_rollback(*, m: int, buckets: tuple[int, ...]) -> dict:
+    cfg = RefreshConfig(probation_s=30.0, min_audit_rows=64,
+                        probation_poll_s=0.02, warm=False)
+    eng = build_engine(m, buckets, n_calib=512, audit_rate=1.0)
+    warm(eng)
+    xs = np.asarray(eng.calib[0], np.float32)
+    b = max(buckets)
+    for i in range(12):                         # pre-swap audit baseline
+        eng.rank(xs[b * i % len(xs):][:b])
+    eng.auditor.drain()
+
+    stop = threading.Event()
+
+    def traffic() -> None:
+        # record=True feeds the auditor (record=False bypasses it); the
+        # 50 ms pacing keeps a 1-CPU bench box from starving the refit
+        # (16 rows / 50 ms = 320 audited rows/s, probation needs 64)
+        i = 0
+        while not stop.is_set():
+            eng.rank(xs[b * i % len(xs):][:b])
+            i += 1
+            time.sleep(0.05)
+
+    th = threading.Thread(target=traffic, daemon=True)
+    th.start()
+    r = IndexRefresher(eng, cfg=cfg)
+    try:
+        t0 = time.perf_counter()
+        with faults.injected(faults.REFRESH_PROBATION,
+                             lambda ctx: ctx.__setitem__("recall", 0.0)):
+            outcome = r.refresh_once()
+        dt = time.perf_counter() - t0
+    finally:
+        stop.set()
+        th.join()
+        eng.auditor.close()
+    return {
+        "kind": "rollback",
+        "m": m, "d": D_MODEL,
+        "outcome": outcome,
+        "rollback_total": r.n_rollbacks,
+        "time_to_rollback_s": round(dt, 3),
+        "probation_s": cfg.probation_s,
+        "min_audit_rows": cfg.min_audit_rows,
+        "rollback_delta": cfg.rollback_delta,
+    }
+
+
+def write_artifact(record: dict, path: str | None = None) -> str:
+    path = (path or os.environ.get("BENCH_REFRESH_OUT")
+            or os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
+                            "BENCH_refresh.json"))
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return path
+
+
+def main(argv: list[str] | None = None) -> dict:
+    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--m", type=int, default=20_000 if fast else 100_000)
+    ap.add_argument("--requests", type=int, default=900 if fast else 4000)
+    ap.add_argument("--qps", type=float, default=300.0 if fast else 500.0)
+    ap.add_argument("--swaps", type=int, default=3 if fast else 8)
+    ap.add_argument("--cycles", type=int, default=2 if fast else 8,
+                    help="recall_staleness refresh cycles")
+    ap.add_argument("--buckets", type=lambda s: tuple(
+        int(x) for x in s.split(",")), default=(1, 4, 16))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    rows = [
+        bench_swap_latency(m=args.m, n_requests=args.requests,
+                           qps=args.qps, n_swaps=args.swaps,
+                           buckets=args.buckets),
+        bench_recall_staleness(m=args.m, n_cycles=args.cycles,
+                               buckets=args.buckets),
+        bench_rollback(m=args.m, buckets=args.buckets),
+    ]
+    rec = {
+        "bench": "refresh",
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "buckets": list(args.buckets),
+        "rows": rows,
+    }
+    path = write_artifact(rec, args.out)
+    print(f"wrote {path}")
+    sw, st, rb = rows
+    print(f"  swap_latency: p99 steady={sw['p99_steady_ms']:.2f} ms  "
+          f"during-swap={sw['p99_swap_ms']:.2f} ms  "
+          f"ratio={sw['p99_swap_ratio']:.2f}  "
+          f"({sw['swap_window_n']} in-window reqs, "
+          f"{sw['n_swaps']} swaps @ {sw['swap_ms_mean']:.1f} ms, "
+          f"failed={sw['n_failed']}, exact={sw['exact_after_swaps']})")
+    print(f"  recall_staleness: stale={st['recall_stale']:.4f} "
+          f"refreshed={st['recall_refreshed']:.4f} "
+          f"offline-refit={st['recall_offline_refit']:.4f} "
+          f"(gap {st['gap_to_offline']:+.4f} over "
+          f"{st['n_cycles']} cycles)")
+    print(f"  rollback: {rb['outcome']} in {rb['time_to_rollback_s']:.2f}s "
+          f"(probation {rb['probation_s']}s, "
+          f"rollbacks={rb['rollback_total']})")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,7 @@ expectation without data-dependent shapes.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,8 @@ from repro.core.lss import (LSSConfig, LSSIndex, build_index, retrieve,
 from repro.optim import adamw_init, adamw_update
 
 __all__ = ["MinedPairs", "mine_pairs", "calibrate_thresholds", "iul_loss",
-           "iul_train_epoch", "fit_lss", "collision_prob"]
+           "iul_train_epoch", "fit_lss", "collision_prob",
+           "IULState", "iul_init", "iul_refit_epoch", "calib_recall"]
 
 
 class MinedPairs(NamedTuple):
@@ -152,6 +153,78 @@ def iul_train_epoch(theta, opt_state, q_aug_all, labels_all, w_aug, index,
     return theta, opt_state, hist
 
 
+# ----------------------------------------------- snapshot-based entry --
+# Module-level jitted programs shared by the offline fit AND the online
+# refresher: jax.jit caches per function object, so per-call jax.jit
+# wrappers would retrace every refresh cycle.  ``cfg`` (a hashable
+# NamedTuple) is the static argument.
+_EPOCH_JIT = jax.jit(iul_train_epoch, static_argnames=("cfg",))
+_REBUILD_JIT = jax.jit(build_index, static_argnames=("cfg",))
+
+
+class IULState(NamedTuple):
+    """Resumable IUL training state over one calibration snapshot.
+
+    Everything an epoch step needs besides the (immutable) snapshot
+    arrays: the hyperplanes being trained, the Adam moments, the mined
+    thresholds, and the RNG key.  A background refresher carries this
+    across refresh cycles so training CONTINUES from the serving
+    hyperplanes instead of restarting cold each interval."""
+
+    theta: jax.Array
+    opt_state: Any
+    t1: jax.Array
+    t2: jax.Array
+    key: jax.Array
+
+
+def iul_init(key, q_aug: jax.Array, labels_all: jax.Array,
+             w_aug: jax.Array, cfg: LSSConfig,
+             theta: jax.Array | None = None) -> IULState:
+    """Seed an IUL training stream against a calibration snapshot.
+
+    ``theta=None`` draws fresh hyperplanes (the offline ``fit_lss``
+    path, preserving its exact RNG sequence); passing the SERVING
+    index's theta resumes training from it (the online refresh path:
+    the snapshot is new, the hash is warm)."""
+    if theta is None:
+        k0, key = jax.random.split(key)
+        theta = simhash.init_hyperplanes(k0, w_aug.shape[1], cfg.k_bits,
+                                         cfg.n_tables)
+    t1, t2 = calibrate_thresholds(q_aug, w_aug, labels_all, cfg)
+    return IULState(theta, adamw_init(theta), t1, t2, key)
+
+
+def iul_refit_epoch(state: IULState, q_aug: jax.Array,
+                    labels_all: jax.Array, w_aug: jax.Array,
+                    index: LSSIndex, cfg: LSSConfig
+                    ) -> tuple[IULState, LSSIndex, dict]:
+    """ONE training epoch + rebuild against a frozen snapshot — the
+    online refresher's unit of work (pure jax, no engine state, safe
+    entirely off the serving hot path).  Mines against ``index`` (the
+    previous rebuild, per Algorithm 1), returns the advanced state, the
+    candidate index, and the epoch's metrics."""
+    key, ke = jax.random.split(state.key)
+    theta, opt_state, (loss, cp, cn) = _EPOCH_JIT(
+        state.theta, state.opt_state, q_aug, labels_all, w_aug, index,
+        state.t1, state.t2, cfg, ke)
+    new_index = _REBUILD_JIT(w_aug, theta, cfg)
+    info = {"loss": float(loss.mean()),
+            "p_collide_pos": float(cp.mean()),
+            "p_collide_neg": float(cn.mean()),
+            "recall": calib_recall(new_index, q_aug, labels_all)}
+    return state._replace(theta=theta, opt_state=opt_state, key=key), \
+        new_index, info
+
+
+def calib_recall(index: LSSIndex, q_aug: jax.Array, labels_all: jax.Array,
+                 n: int = 1024) -> float:
+    """Calibration-set label recall of ``index`` (first ``n`` rows) —
+    the model-selection metric fit_lss and the refresher share."""
+    cand, _ = retrieve(q_aug[: min(n, q_aug.shape[0])], index)
+    return float(label_recall(cand, labels_all[: cand.shape[0]]))
+
+
 def fit_lss(key, q_all: jax.Array, labels_all: jax.Array, w: jax.Array,
             b: jax.Array | None, cfg: LSSConfig,
             verbose: bool = False):
@@ -161,40 +234,32 @@ def fit_lss(key, q_all: jax.Array, labels_all: jax.Array, w: jax.Array,
     """
     w_aug = simhash.augment_neurons(w, b)
     q_aug = simhash.augment_queries(q_all)
-    k0, key = jax.random.split(key)
-    theta = simhash.init_hyperplanes(k0, w_aug.shape[1], cfg.k_bits,
-                                     cfg.n_tables)
-    opt_state = adamw_init(theta)
-    t1, t2 = calibrate_thresholds(q_aug, w_aug, labels_all, cfg)
+    state = iul_init(key, q_aug, labels_all, w_aug, cfg)
 
     hist = {"loss": [], "p_collide_pos": [], "p_collide_neg": [],
             "recall": []}
-    # One compiled rebuild reused every epoch: hash all m neurons, build
-    # all L tables (vmapped), and re-bucketize the weight slabs in a
-    # single XLA program instead of re-dispatching the whole op chain
-    # eagerly per epoch — the dominant fit_lss cost at m >= 1M on CPU.
-    rebuild = jax.jit(lambda w_aug, theta: build_index(w_aug, theta, cfg))
-    index = rebuild(w_aug, theta)
+    # One compiled rebuild reused every epoch (module-level _REBUILD_JIT):
+    # hash all m neurons, build all L tables (vmapped), and re-bucketize
+    # the weight slabs in a single XLA program instead of re-dispatching
+    # the whole op chain eagerly per epoch — the dominant fit_lss cost at
+    # m >= 1M on CPU.
+    index = _REBUILD_JIT(w_aug, state.theta, cfg)
     best_index, best_rec = index, -1.0
-    epoch_fn = jax.jit(iul_train_epoch, static_argnames=("cfg",))
     for ep in range(cfg.iul_epochs):
-        key, ke = jax.random.split(key)
-        theta, opt_state, (loss, cp, cn) = epoch_fn(
-            theta, opt_state, q_aug, labels_all, w_aug, index, t1, t2, cfg, ke)
-        index = rebuild(w_aug, theta)              # rebuild (Alg. 1 line 15)
-        cand, _ = retrieve(q_aug[: min(1024, q_aug.shape[0])], index)
-        rec = float(label_recall(cand, labels_all[: cand.shape[0]]))
+        state, index, info = iul_refit_epoch(state, q_aug, labels_all,
+                                             w_aug, index, cfg)
+        rec = info["recall"]
         # model selection: IUL's mining distribution shifts every rebuild,
         # so individual epochs can regress — serve the best epoch's index
         # (calibration recall), not the last one.
         if rec > best_rec:
             best_rec, best_index = rec, index
-        hist["loss"].append(float(loss.mean()))
-        hist["p_collide_pos"].append(float(cp.mean()))
-        hist["p_collide_neg"].append(float(cn.mean()))
+        hist["loss"].append(info["loss"])
+        hist["p_collide_pos"].append(info["p_collide_pos"])
+        hist["p_collide_neg"].append(info["p_collide_neg"])
         hist["recall"].append(rec)
         if verbose:
-            print(f"[iul] epoch {ep}: loss={float(loss.mean()):.4f} "
-                  f"P+collide={float(cp.mean()):.3f} "
-                  f"P-collide={float(cn.mean()):.3f} recall={rec:.3f}")
+            print(f"[iul] epoch {ep}: loss={info['loss']:.4f} "
+                  f"P+collide={info['p_collide_pos']:.3f} "
+                  f"P-collide={info['p_collide_neg']:.3f} recall={rec:.3f}")
     return best_index, hist

@@ -87,6 +87,20 @@ def main() -> None:
     ap.add_argument("--hold-metrics", type=float, default=0.0,
                     help="keep the process (and /metrics) alive this many "
                          "seconds after serving, for one-shot scrapers")
+    ap.add_argument("--refresh-interval", type=float, default=None,
+                    help="online index refresh: re-run IUL on the "
+                         "calibration snapshot every S seconds and swap "
+                         "the new index in without a serving pause "
+                         "(default: off; $REPRO_REFRESH_INTERVAL sets "
+                         "the cadence once enabled)")
+    ap.add_argument("--refresh-probation", type=float, default=None,
+                    help="seconds the recall auditor watches a freshly "
+                         "swapped index before trusting it "
+                         "($REPRO_REFRESH_PROBATION)")
+    ap.add_argument("--refresh-rollback-delta", type=float, default=None,
+                    help="roll the swap back if audited recall drops "
+                         "more than this below the pre-swap baseline "
+                         "($REPRO_REFRESH_ROLLBACK_DELTA)")
     ap.add_argument("--coordinator", default=None,
                     help="multi-host serving: jax.distributed coordinator "
                          "host:port (default: $REPRO_DIST_COORDINATOR); "
@@ -186,6 +200,21 @@ def main() -> None:
         dec.fit_lss(jax.random.PRNGKey(1), jnp.asarray(toks[:128]))
     prompt = jnp.asarray(toks[500:500 + args.batch, :16])
 
+    refresher = None
+    if (args.refresh_interval is not None and head != "full"
+            and (ctx is None or ctx.is_leader)):
+        from repro.serve.refresh import IndexRefresher, RefreshConfig
+        rcfg = RefreshConfig.from_env(interval_s=args.refresh_interval)
+        if args.refresh_probation is not None:
+            rcfg = rcfg._replace(probation_s=args.refresh_probation)
+        if args.refresh_rollback_delta is not None:
+            rcfg = rcfg._replace(
+                rollback_delta=args.refresh_rollback_delta)
+        refresher = IndexRefresher(dec.engine, cfg=rcfg).start()
+        print(f"index refresh: every {rcfg.interval_s}s, probation "
+              f"{rcfg.probation_s}s, rollback delta "
+              f"{rcfg.rollback_delta}")
+
     try:
         if ctx is not None and not ctx.is_leader:
             # followers mirrored the (deterministic) train + fit above,
@@ -210,14 +239,23 @@ def main() -> None:
             print(f"engine compiles (head, bucket): "
                   f"{dec.engine.compile_counts}")
     finally:
-        if ctx is not None and ctx.is_leader:
-            stop_followers(ctx)
-        if args.hold_metrics > 0:
-            import time
-            print(f"holding /metrics for {args.hold_metrics}s", flush=True)
-            time.sleep(args.hold_metrics)
-        if server is not None:
-            server.close()
+        # the exporter teardown gets its own finally: a wedged runtime
+        # close (TimeoutError), a follower-stop failure, or an
+        # interrupted hold must still release the /metrics port — a
+        # leaked HTTP thread otherwise outlives the whole launch
+        try:
+            if refresher is not None:
+                refresher.close()
+            if ctx is not None and ctx.is_leader:
+                stop_followers(ctx)
+            if args.hold_metrics > 0:
+                import time
+                print(f"holding /metrics for {args.hold_metrics}s",
+                      flush=True)
+                time.sleep(args.hold_metrics)
+        finally:
+            if server is not None:
+                server.close()
 
 
 def serve_decode(dec, toks, head: str, args) -> None:
@@ -242,7 +280,7 @@ def serve_decode(dec, toks, head: str, args) -> None:
                   else args.deadline_ms / 1e3)
     with AsyncRuntime(dec.engine, head=head, policy="shed",
                       default_deadline_s=deadline_s,
-                      scheduler=sched) as rt:
+                      scheduler=sched, close_timeout_s=600.0) as rt:
         streams, _ = submit_decode_open_loop(
             rt, list(prompts), args.qps, max_new_tokens=args.steps, seed=0)
         rt.drain(timeout=600.0)
@@ -285,7 +323,8 @@ def serve_async(dec, prompt, head: str, args) -> None:
     deadline_s = (None if args.deadline_ms is None
                   else args.deadline_ms / 1e3)
     with AsyncRuntime(dec.engine, head=head, policy="shed",
-                      default_deadline_s=deadline_s) as rt:
+                      default_deadline_s=deadline_s,
+                      close_timeout_s=300.0) as rt:
         futs, _ = submit_open_loop(rt, reqs, args.qps, seed=0)
         rt.drain(timeout=300.0)
         s = rt.stats()

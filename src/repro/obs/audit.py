@@ -157,6 +157,13 @@ class RecallAuditor:
         with self._mu:
             return self._top1_total
 
+    def snapshot(self) -> tuple[int, int]:
+        """Atomic ``(hits, total)`` — windowed consumers (the refresher's
+        probation watch) subtract two snapshots to get recall over just
+        the rows audited in between, instead of the cumulative gauge."""
+        with self._mu:
+            return self._hits, self._total
+
     def drain(self, timeout: float = 30.0) -> None:
         """Block until every enqueued group has been audited (tests use
         this to read a settled gauge)."""

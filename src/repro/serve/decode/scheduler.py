@@ -193,6 +193,12 @@ class DecodeScheduler:
         # cannot accumulate.
         self._tok0_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._tok0_cache_cap = 1024
+        # index-epoch pin for the CURRENT generation: one fused program
+        # serves every active slot, so the whole generation (first admit
+        # until the pool drains) ranks through one engine epoch — an
+        # online index swap changes what the NEXT generation pins, never
+        # what in-flight sessions see.  Mutated only under _tick_lock.
+        self._epoch: int | None = None
         self._lock = threading.Lock()
         # serializes tick(): a blocking generate() may drive the same
         # scheduler an AsyncRuntime dispatcher is ticking — two ticks
@@ -288,6 +294,12 @@ class DecodeScheduler:
             prev, self._inflight = self._inflight, self._dispatch()
             if prev is not None:
                 self._collect(prev)
+            if self._epoch is not None and self.idle:
+                # generation drained: release the pinned index epoch so
+                # a superseded index can be dropped (the next admit pins
+                # whatever epoch is serving then)
+                e, self._epoch = self._epoch, None
+                self.engine.unpin_epoch(e)
             if span is not None:
                 span.end("ok", dispatched=self._inflight is not None,
                          collected=prev is not None,
@@ -335,6 +347,11 @@ class DecodeScheduler:
                     f"for a slot"))
                 self._done(sess, "shed_deadline")
                 continue
+            if self._epoch is None and self.head != "full":
+                # first admit of a generation pins the serving epoch;
+                # later joins inherit it so one fused program stays
+                # consistent with every row's prefill ranking
+                self._epoch = self.engine.pin_epoch()
             slot = self.pool.alloc()
             pspan = obs.start_span("prefill", sid=sess.sid, slot=slot,
                                    plen=int(sess.prompt.shape[0]))
@@ -378,8 +395,10 @@ class DecodeScheduler:
         plen = int(prompt_np.shape[0])
         bucket = _prefill_bucket(plen)
         key = (prompt_np.tobytes(), bucket)
+        idx = (self.engine.index if self._epoch is None
+               else self.engine.index_for(self._epoch))
         memo = self._tok0_cache.get(key)
-        if memo is not None and memo[0] is self.engine.index \
+        if memo is not None and memo[0] is idx \
                 and self.pool.join_from_cache(slot, prompt_np, plen,
                                               bucket):
             self._tok0_cache.move_to_end(key)
@@ -398,9 +417,10 @@ class DecodeScheduler:
         self.pool.join(slot, k_new, v_new, plen, prompt=prompt_np,
                        bucket=bucket)
         ho = self.engine.rank(hidden[:, plen - 1].astype(jnp.float32),
-                              head=self.head, record=False)
+                              head=self.head, record=False,
+                              epoch=self._epoch)
         tok0 = max(int(np.asarray(ho.ids)[0, 0]), 0)
-        self._tok0_cache[key] = (self.engine.index, tok0)
+        self._tok0_cache[key] = (idx, tok0)
         if len(self._tok0_cache) > self._tok0_cache_cap:
             self._tok0_cache.popitem(last=False)
         return tok0
@@ -433,7 +453,8 @@ class DecodeScheduler:
         active = [i for i, s in enumerate(self.sessions) if s is not None]
         if not active:
             return None
-        step = self.engine.decode_logits(self.head, self._tag, self._body)
+        step = self.engine.decode_logits(self.head, self._tag, self._body,
+                                         epoch=self._epoch)
         t0 = time.perf_counter()
         tok_next, ho, k_new, v_new = step(
             self.params, self.tok, *self.pool.step_operands())
@@ -552,6 +573,9 @@ class DecodeScheduler:
                     self.sessions[slot] = None
                     self.pool.free(slot)
                     failed.append(sess)
+            if self._epoch is not None and only is None:
+                e, self._epoch = self._epoch, None
+                self.engine.unpin_epoch(e)
         return failed
 
     # ----------------------------------------------------------------- stats --

@@ -80,6 +80,29 @@ class _Pending(NamedTuple):
     t_submit: float
 
 
+class _IndexEpoch:
+    """One fitted-index generation and everything derived from it.
+
+    The Engine keeps a versioned table of these (``Engine._epochs``) so
+    an online refresh can PREPARE a new generation — index, heads,
+    sharded stacks, jitted LSS steps — entirely off the serving path,
+    then flip ``Engine.index_epoch`` in O(1) under the lock.  Old
+    generations stay resident while decode sessions that prefilled
+    under them are still draining (``pins``) and are dropped at unpin
+    or at the next swap once unpinned — "old steps drain while new
+    ones warm"."""
+
+    __slots__ = ("epoch", "index", "heads", "sharded", "steps", "pins")
+
+    def __init__(self, epoch: int, index: LSSIndex):
+        self.epoch = epoch
+        self.index = index
+        self.heads: dict[str, Callable] = {}     # lss kinds only
+        self.sharded = None       # (index_stack, w_stack, m_local)
+        self.steps: dict[tuple[str, Any], Callable] = {}
+        self.pins = 0             # decode generations holding this epoch
+
+
 def _as_label_row(labels) -> np.ndarray | None:
     if labels is None:
         return None
@@ -169,14 +192,23 @@ class Engine:
         self.mesh = mesh
         self.model_axis = model_axis
         self.spmd = spmd
-        self.index: LSSIndex | None = None
         self._w_aug_cache: jax.Array | None = None
-        self._sharded = None          # (index_stack, w_stack, m_local)
-        self._heads: dict[str, Callable] = {}
+        # versioned double-buffered index slot: epoch id -> _IndexEpoch.
+        # index_epoch names the SERVING generation; prepared-but-unswapped
+        # and pinned-but-draining generations coexist in the table.
+        self._epochs: dict[int, _IndexEpoch] = {}
+        self.index_epoch: int = 0     # 0 = no fitted index yet
+        self._epoch_seq: int = 0
+        self._full_head: Callable | None = None
         # jitted steps: (head, bucket) score steps and (head, "decode[...]")
-        # fused decode steps share one cache + compile-count table
+        # fused decode steps.  This table holds the INDEX-FREE full-head
+        # programs only; LSS steps live in their _IndexEpoch so a refit
+        # is an O(1) pointer flip, not an invalidation sweep.  One
+        # compile-count table spans all epochs (a refit that retraces a
+        # shape increments the same key — the observable tests pin).
         self._steps: dict[tuple[str, Any], Callable] = {}
         self.compile_counts: dict[tuple[str, Any], int] = {}
+        self.calib: tuple | None = None   # (q, labels) refs from last fit
         self._queue: list[_Pending] = []
         self._results: list[RankResult] = []
         self._next_rid = 0
@@ -223,6 +255,9 @@ class Engine:
                          labels: jax.Array, verbose: bool = False) -> dict:
         index, hist = fit_lss(key, q, labels, self.w, self.b, self.lss_cfg,
                               verbose=verbose)
+        # keep references (not copies) to the calibration set: an
+        # IndexRefresher snapshots them once to re-learn the hash online
+        self.calib = (q, labels)
         self._set_index(index)
         return hist
 
@@ -234,14 +269,145 @@ class Engine:
                                          self.lss_cfg.n_tables)
         self._set_index(build_index(self._w_aug, theta, self.lss_cfg))
 
+    # --------------------------------------------------- index lifecycle --
+    @property
+    def index(self) -> LSSIndex | None:
+        """The SERVING epoch's index (None before any fit)."""
+        st = self._epochs.get(self.index_epoch)
+        return None if st is None else st.index
+
+    def index_for(self, epoch: int) -> LSSIndex:
+        """The index a specific (e.g. pinned) epoch serves."""
+        return self._epoch_state(epoch).index
+
+    def _epoch_state(self, epoch: int | None = None) -> _IndexEpoch:
+        e = self.index_epoch if epoch is None else epoch
+        st = self._epochs.get(e)
+        if st is None:
+            if e == 0:
+                raise AssertionError(
+                    "LSS head needs a fitted index: call fit()/"
+                    "fit_random()")
+            raise KeyError(f"index epoch {e} is gone (unpinned epochs "
+                           f"are dropped at swap)")
+        return st
+
     def _set_index(self, index: LSSIndex) -> None:
+        """Install ``index`` as the serving epoch immediately (the
+        offline fit path; mirrored identically on every multihost
+        process, so no broadcast).  Online refresh goes through
+        :meth:`swap_index` instead — prepare + warm + guarded flip."""
+        self._swap_prepared(self.prepare_epoch(index))
+
+    def prepare_epoch(self, index: LSSIndex) -> int:
+        """Register ``index`` as a new, NOT-yet-serving epoch.  Heavy
+        derived state (heads, sharded stacks, jitted steps) is built
+        against it lazily or via :meth:`warm_epoch` — none of it on the
+        serving path, none of it under a lock held across device work."""
         with self.lock:
-            self.index = index
-            self._sharded = None
-            self._heads.pop("lss", None)
-            self._heads.pop("lss-sharded", None)
-            for k in [k for k in self._steps if k[0] != "full"]:
-                del self._steps[k]
+            self._epoch_seq += 1
+            e = self._epoch_seq
+            self._epochs[e] = _IndexEpoch(e, index)
+            return e
+
+    def warm_epoch(self, epoch: int, shapes=None) -> None:
+        """Trace the prepared epoch's LSS score steps for the bucket
+        shapes the serving epoch already compiled (or explicit
+        ``shapes``), so post-swap traffic hits warm programs instead of
+        paying a trace on its first chunk.  Runs OFF the serving path:
+        traces never hold ``self.lock``.  Decode steps are not warmed
+        here — a scheduler generation traces its fused step when it
+        first dispatches under the new epoch, also lock-free.  No-op on
+        multihost engines (a leader-side dry run would broadcast; the
+        fleet warms in lockstep through its first post-swap chunks) and
+        on embed_fn engines (request shapes are not fabricable here)."""
+        if self.spmd is not None or self.embed_fn is not None:
+            return
+        if shapes is None:
+            cur = self._epochs.get(self.index_epoch)
+            shapes = [] if cur is None else \
+                [k for k in list(cur.steps) if isinstance(k[1], int)]
+        d = int(self.w.shape[1])
+        for kind, bucket in shapes:
+            step = self._step(kind, bucket, epoch=epoch)
+            out = step(np.zeros((bucket, d), np.float32))
+            jax.block_until_ready(out.logits)
+
+    def _swap_prepared(self, epoch: int) -> int:
+        """Flip the serving epoch to ``epoch`` — the ONLY mutation on
+        the swap path, O(1) under the channel->engine lock order (the
+        same order submit/flush use), so it lands between runtime
+        ticks: every chunk/step fetched before the flip runs the old
+        generation to completion, every fetch after runs the new."""
+        from repro.testing import faults
+        with self._channel_lock(), self.lock:
+            st = self._epoch_state(epoch)       # raises if dropped
+            faults.fire(faults.ENGINE_SWAP, epoch=epoch)
+            old = self.index_epoch
+            self.index_epoch = st.epoch
+            for k in [k for k, s in self._epochs.items()
+                      if k != st.epoch and s.pins <= 0]:
+                del self._epochs[k]
+        obs.event("index_swap", epoch=epoch, prev=old)
+        return epoch
+
+    def swap_index(self, index: LSSIndex, *, warm: bool = True) -> int:
+        """Online refresh entry: register ``index`` as a new epoch,
+        warm its score steps off the serving path, then flip.  On a
+        multihost leader the flip rides an ``OP_SWAP_INDEX`` broadcast
+        so followers rebuild and flip in lockstep; followers themselves
+        swap only via that channel (``follower_loop``), never directly.
+        Returns the new epoch id."""
+        if self.spmd is not None:
+            if not self.spmd.is_leader:
+                raise RuntimeError(
+                    "followers swap via the OP_SWAP_INDEX broadcast in "
+                    "follower_loop, not swap_index()")
+            from repro.serve.multihost import leader_swap_index
+            return leader_swap_index(self.spmd, self, index)
+        e = self.prepare_epoch(index)
+        if warm:
+            self.warm_epoch(e)
+        return self._swap_prepared(e)
+
+    def swap_from_theta(self, theta) -> int:
+        """Follower-side swap: rebuild the index deterministically from
+        broadcast hyperplanes against this process's own ``_w_aug`` and
+        flip.  ``build_index`` is value-deterministic, so every process
+        lands on a bit-identical index without shipping buckets."""
+        theta = jnp.asarray(theta, jnp.float32)
+        index = build_index(self._w_aug, theta, self.lss_cfg)
+        return self._swap_prepared(self.prepare_epoch(index))
+
+    def pin_epoch(self, epoch: int | None = None) -> int:
+        """Pin an epoch (default: the serving one) so a swap cannot drop
+        it — decode sessions rank through the generation they prefilled
+        under until they leave.  Returns the pinned epoch id."""
+        with self.lock:
+            st = self._epoch_state(epoch)
+            st.pins += 1
+            return st.epoch
+
+    def unpin_epoch(self, epoch: int) -> None:
+        """Release a pin; a non-serving epoch with no pins left is
+        dropped (its index, heads, and jitted steps become collectable
+        — the drained half of the double buffer)."""
+        with self.lock:
+            st = self._epochs.get(epoch)
+            if st is None:
+                return
+            st.pins -= 1
+            if st.pins <= 0 and epoch != self.index_epoch:
+                del self._epochs[epoch]
+
+    def drop_step(self, kind: str, tag) -> None:
+        """Remove one cached jitted step (every epoch's copy included) —
+        the scheduler-replacement path uses this so an outgrown fused
+        program cannot collide with its successor's tag."""
+        with self.lock:
+            self._steps.pop((kind, tag), None)
+            for st in self._epochs.values():
+                st.steps.pop((kind, tag), None)
 
     # ------------------------------------------------------ head lookup --
     def _get_mesh(self):
@@ -253,40 +419,41 @@ class Engine:
                 axis_types=compat.auto_axis_types(1))
         return self.mesh
 
-    def _head(self, kind: str) -> Callable:
+    def _head(self, kind: str, st: _IndexEpoch | None = None) -> Callable:
         if kind not in HEAD_KINDS:
             raise ValueError(f"unknown head {kind!r}")
-        if kind in self._heads:
-            return self._heads[kind]
         if kind == "full":
-            head = make_full_head(self.w, self.b, self.top_k)
+            # index-free: one head for every epoch
+            if self._full_head is None:
+                self._full_head = make_full_head(self.w, self.b,
+                                                 self.top_k)
+            return self._full_head
+        st = st if st is not None else self._epoch_state()
+        if kind in st.heads:
+            return st.heads[kind]
+        if kind == "lss":
+            w_aug = None if st.index.w_bucketed is not None \
+                else self._w_aug
+            head = make_lss_head(st.index, w_aug, self.top_k,
+                                 impl=self.impl, dedup=self.dedup)
+        elif self.spmd is not None:
+            head = self._multihost_head(st)
         else:
-            assert self.index is not None, \
-                f"head {kind!r} needs a fitted index: call fit()/fit_random()"
-            if kind == "lss":
-                w_aug = None if self.index.w_bucketed is not None \
-                    else self._w_aug
-                head = make_lss_head(self.index, w_aug, self.top_k,
-                                     impl=self.impl, dedup=self.dedup)
-            elif self.spmd is not None:
-                head = self._multihost_head()
-            else:
-                mesh = self._get_mesh()
-                tp = mesh.shape[self.model_axis]
-                if self._sharded is None:
-                    self._sharded = shard_index(self._w_aug,
-                                                self.index.theta,
-                                                self.lss_cfg, tp)
-                stack, w_stack, m_local = self._sharded
-                head = make_sharded_lss_head(stack, w_stack, mesh,
-                                             self.lss_cfg, m_local,
-                                             self.top_k, self.model_axis,
-                                             impl=self.impl,
-                                             dedup=self.dedup)
-        self._heads[kind] = head
+            mesh = self._get_mesh()
+            tp = mesh.shape[self.model_axis]
+            if st.sharded is None:
+                st.sharded = shard_index(self._w_aug, st.index.theta,
+                                         self.lss_cfg, tp)
+            stack, w_stack, m_local = st.sharded
+            head = make_sharded_lss_head(stack, w_stack, mesh,
+                                         self.lss_cfg, m_local,
+                                         self.top_k, self.model_axis,
+                                         impl=self.impl,
+                                         dedup=self.dedup)
+        st.heads[kind] = head
         return head
 
-    def _multihost_head(self) -> Callable:
+    def _multihost_head(self, st: _IndexEpoch) -> Callable:
         """lss-sharded over the multi-process mesh: build ONLY the
         shards this process addresses (its ``row_range`` slice of W —
         the only place the full weight is even indexed), stitch the
@@ -295,42 +462,50 @@ class Engine:
         from repro.serve.heads import make_multihost_lss_head
         from repro.serve.multihost import assemble_global_stack
         ctx = self.spmd
-        if self._sharded is None:
+        if st.sharded is None:
             m = self.w.shape[0]
             lo, hi = ctx.shard_range()
             r0, r1 = ctx.row_range(m)
             w_aug_local = simhash.augment_neurons(self.w[r0:r1],
                                                   self.b[r0:r1])
             local_stack, local_w, m_local = shard_index(
-                w_aug_local, self.index.theta, self.lss_cfg,
+                w_aug_local, st.index.theta, self.lss_cfg,
                 ctx.n_shards, shard_range=(lo, hi), m_total=m)
             stack = assemble_global_stack(ctx, local_stack, ctx.n_shards)
             w_stack = (None if local_w is None else
                        assemble_global_stack(ctx, local_w, ctx.n_shards))
-            self._sharded = (stack, w_stack, m_local)
-        stack, w_stack, m_local = self._sharded
+            st.sharded = (stack, w_stack, m_local)
+        stack, w_stack, m_local = st.sharded
         return make_multihost_lss_head(
             stack, w_stack, ctx.mesh, self.lss_cfg, m_local, self.top_k,
             ctx.host_axis, ctx.model_axis, impl=self.impl,
             dedup=self.dedup)
 
     # ------------------------------------------------------ jitted steps --
-    def _step(self, kind: str, bucket: int) -> Callable:
-        """One jitted step per (head, bucket): compile count is observable
-        because the Python body runs exactly once per trace."""
+    def _step(self, kind: str, bucket: int,
+              epoch: int | None = None) -> Callable:
+        """One jitted step per (head, bucket) per index epoch: compile
+        count is observable because the Python body runs exactly once
+        per trace.  ``epoch`` selects a pinned generation's table (the
+        decode path); None serves the current epoch."""
         key = (kind, bucket)
         # Lock-free hot path: a GIL-atomic dict read, so the runtime's
         # dispatcher never stalls behind a user thread's flush() (which
-        # holds the lock across device execution).  Refitting while
-        # serving can hand one in-flight chunk the pre-refit step, which
-        # is inherent to concurrent refit and no worse than the locked
-        # path (the fetch could equally precede the refit).
-        step = self._steps.get(key)
+        # holds the lock across device execution).  Swapping while
+        # serving can hand one in-flight chunk the pre-swap step, which
+        # is inherent to concurrent refresh and no worse than the locked
+        # path (the fetch could equally precede the flip) — the old
+        # epoch's program stays valid until its state is dropped.
+        table = (self._steps if kind == "full"
+                 else self._epoch_state(epoch).steps)
+        step = table.get(key)
         if step is not None:
             return step
         with self.lock:
-            if key not in self._steps:
-                head = self._head(kind)
+            if key not in table:
+                head = self._head(
+                    kind, None if kind == "full"
+                    else self._epoch_state(epoch))
                 embed = self.embed_fn
                 operands = getattr(head, "global_operands", None)
 
@@ -358,10 +533,11 @@ class Engine:
                     # to the follower_loop processes first
                     from repro.serve.multihost import make_leader_step
                     step = make_leader_step(self.spmd, step, kind, bucket)
-                self._steps[key] = step
-            return self._steps[key]
+                table[key] = step
+            return table[key]
 
-    def decode_logits(self, kind: str, tag: str, body: Callable) -> Callable:
+    def decode_logits(self, kind: str, tag: str, body: Callable,
+                      epoch: int | None = None) -> Callable:
         """The batched decode head entry: one fused jitted program per
         (head kind, ``tag``) running ``body`` (the model's pooled decode
         step) straight into this engine's head — registry-dispatched for
@@ -377,9 +553,11 @@ class Engine:
         without a host round trip.  ``tag`` names the compile shape (the
         scheduler uses "decode[SxW]", paged "decode[SxW,pagedP]") and
         keys the shared jitted-step cache — compile counts land in
-        ``compile_counts[(kind, tag)]`` next to the score buckets, and a
-        refit (``_set_index``) invalidates LSS decode steps exactly like
-        LSS score steps.
+        ``compile_counts[(kind, tag)]`` next to the score buckets.  LSS
+        decode steps live in their index epoch's table (``epoch`` pins a
+        draining generation, None serves the current one), so a swap
+        never invalidates a program a pinned decode generation is still
+        running — it just stops being the default.
 
         The k/v slabs sit at argument positions 2 and 3 in EVERY layout,
         and on TPU the step donates them for in-place cache update
@@ -388,12 +566,16 @@ class Engine:
         constraint) and the functional k-in/k-out flow stands alone.
         """
         key = (kind, tag)
-        step = self._steps.get(key)       # lock-free hot path, like _step
+        table = (self._steps if kind == "full"
+                 else self._epoch_state(epoch).steps)
+        step = table.get(key)             # lock-free hot path, like _step
         if step is not None:
             return step
         with self.lock:
-            if key not in self._steps:
-                head = self._head(kind)
+            if key not in table:
+                head = self._head(
+                    kind, None if kind == "full"
+                    else self._epoch_state(epoch))
                 operands = getattr(head, "global_operands", None)
                 n_ops = 0 if operands is None else len(operands)
 
@@ -414,7 +596,7 @@ class Engine:
                           and not n_ops else ())
                 jitted = jax.jit(raw_step, donate_argnums=donate)
                 if operands is None:
-                    self._steps[key] = jitted
+                    table[key] = jitted
                 else:
                     # same operand threading as _step: the global stacks
                     # ride as trailing jit arguments, and every local
@@ -448,8 +630,8 @@ class Engine:
                             (tok, state), mesh)
                         return _j(params_g, tok, *state, *_ops)
 
-                    self._steps[key] = step
-            return self._steps[key]
+                    table[key] = step
+            return table[key]
 
     def _pad_to_bucket(self, x, bucket: int):
         """Device-side row padding (no host round-trip for jax inputs)."""
@@ -465,13 +647,16 @@ class Engine:
 
     # ------------------------------------------------------- score path --
     def rank(self, x, head: str | None = None, labels=None,
-             record: bool = True) -> HeadOutput:
+             record: bool = True, epoch: int | None = None) -> HeadOutput:
         """Rank one already-batched request group (rows = requests).
 
         Pads to the bucket, runs the (head, bucket) jitted step, slices
         back to the true row count.  ``labels`` (int [B, NL], -1 padded)
         feed the recall metric.  The decode loop calls this with
-        ``record=False`` to keep the token loop free of host syncs.
+        ``record=False`` to keep the token loop free of host syncs, and
+        with ``epoch`` set to its pinned index generation so prefill
+        first-tokens stay consistent with its fused decode steps across
+        an online swap.
         """
         kind = head or self.default_head
         leaves = jax.tree.leaves(x)
@@ -482,7 +667,7 @@ class Engine:
             part = jax.tree.map(
                 lambda l: l[chunk.start:chunk.start + chunk.size], x)
             padded = self._pad_to_bucket(part, chunk.bucket)
-            o = self._step(kind, chunk.bucket)(padded)
+            o = self._step(kind, chunk.bucket, epoch)(padded)
             outs.append(jax.tree.map(lambda l: l[:chunk.size], o))
         out = outs[0] if len(outs) == 1 else HeadOutput(
             *(None if any(l is None for l in ls) else jnp.concatenate(ls)
@@ -772,10 +957,10 @@ class LMDecoder:
                     f"runtime-attached; construct the LMDecoder with "
                     f"max_len >= {need} instead of growing it mid-flight")
             # outgrown and safely replaceable: drop its fused step from
-            # the engine's cache so the old program (and its trace
-            # closure) cannot be pinned or collide with the new shape
-            with self.engine.lock:
-                self.engine._steps.pop((kind, sched._tag), None)
+            # the engine's cache (every index epoch's copy) so the old
+            # program (and its trace closure) cannot be pinned or
+            # collide with the new shape
+            self.engine.drop_step(kind, sched._tag)
         self._max_len = (max(need, 64) if self._max_len is None
                          else max(self._max_len, need))
         sched = DecodeScheduler(self.engine, self.params, self.cfg,

@@ -1,0 +1,13 @@
+"""Zero-downtime online index refresh (ROADMAP direction 3).
+
+The LSS hash is *trained* (paper §3.3) — a serving system that never
+re-learns it serves a stale index.  :class:`IndexRefresher` re-runs IUL
+epochs on a snapshot of the calibration set entirely off the hot path,
+then swaps the candidate index into the Engine through the versioned
+epoch table (``Engine.swap_index``) with a guarded probation window and
+automatic rollback.  See ``docs/ARCHITECTURE.md`` ("Index lifecycle").
+"""
+
+from repro.serve.refresh.refresher import IndexRefresher, RefreshConfig
+
+__all__ = ["IndexRefresher", "RefreshConfig"]

@@ -214,7 +214,8 @@ class AsyncRuntime:
                  max_queue: int = 1024, policy: str = "block",
                  default_deadline_s: float | None = None,
                  batch_window_s: float = 0.0, pipeline_depth: int = 2,
-                 scheduler=None, start: bool = True):
+                 scheduler=None, start: bool = True,
+                 close_timeout_s: float | None = None):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, "
                              f"got {policy!r}")
@@ -234,6 +235,11 @@ class AsyncRuntime:
             scheduler.on_session_done = self._on_decode_done
         self.default_deadline_s = default_deadline_s
         self.batch_window_s = batch_window_s
+        # bound for the ``with``-exit close(): an unbounded drain on a
+        # wedged dispatcher blocks __exit__ forever and leaks every
+        # sibling resource the caller meant to tear down after us (the
+        # /metrics exporter thread was the observed casualty)
+        self.close_timeout_s = close_timeout_s
         self._q = AdmissionQueue(max_queue, policy)
         self._done_q: _queue.Queue = _queue.Queue(maxsize=pipeline_depth)
         self._stop = threading.Event()
@@ -291,7 +297,7 @@ class AsyncRuntime:
         return self.start()
 
     def __exit__(self, *exc) -> None:
-        self.close()
+        self.close(self.close_timeout_s)
 
     # -------------------------------------------------------------- pending
     def _pending(self) -> int:

@@ -1,0 +1,11 @@
+"""Test-support utilities that production code may import.
+
+``repro.testing.faults`` is the deterministic fault-injection harness:
+serving code declares named hook points (``faults.fire``) that are
+no-ops in production and become failures / delays / value overrides
+when a test arms them.  Nothing in this package depends on jax.
+"""
+
+from repro.testing import faults
+
+__all__ = ["faults"]

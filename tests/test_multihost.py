@@ -45,6 +45,8 @@ Q = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (BATCH, D),
                                  jnp.float32))
 THETA = simhash.init_hyperplanes(jax.random.PRNGKey(3), D + 1,
                                  CFG.k_bits, CFG.n_tables)
+THETA2 = simhash.init_hyperplanes(jax.random.PRNGKey(11), D + 1,
+                                  CFG.k_bits, CFG.n_tables)
 
 from repro.models import transformer as T
 LM_CFG = T.TransformerConfig(name="t", n_layers=1, d_model=16, n_heads=2,
@@ -83,12 +85,19 @@ logits, ids, sample = jax.jit(fwd)(Q, stack, w_stack)
 
 eng = make_engine()                     # mesh=None -> all 4 local devices
 out = eng.rank(Q)
+
+# post-swap oracle: the refreshed index the fleet must agree on
+from repro.core.lss import build_index
+eng.swap_index(build_index(eng._w_aug, THETA2, CFG))
+out_s = eng.rank(Q)
+
 toks = make_decoder().generate(PROMPT, steps=4, head="lss-sharded")
 
 np.savez(sys.argv[1],
          logits=np.asarray(logits), ids=np.asarray(ids),
          sample=np.asarray(sample),
          e_logits=np.asarray(out.logits), e_ids=np.asarray(out.ids),
+         s_logits=np.asarray(out_s.logits), s_ids=np.asarray(out_s.ids),
          toks=np.asarray(toks))
 print("REF-OK", flush=True)
 """
@@ -162,6 +171,37 @@ else:
     n_ops = follower_loop(eng, ctx, max_ops=2)
     assert n_ops == 2, n_ops
 
+# ---- 2c. fleet index swap: abort leaves both on the old epoch, ---------
+# ---- commit flips both; leader crash window cannot split the fleet ----
+from repro.core.lss import build_index
+from repro.testing import faults
+if ctx.is_leader:
+    idx2 = build_index(eng._w_aug, THETA2, CFG)
+    # leader "crashes" after broadcasting the candidate but before the
+    # commit: the abort flag must keep BOTH processes on the old epoch
+    try:
+        with faults.injected(faults.MULTIHOST_SWAP_COMMIT,
+                             RuntimeError("crash before commit")):
+            eng.swap_index(idx2)
+        raise SystemExit("aborted swap should have raised")
+    except RuntimeError:
+        pass
+    assert eng.index_epoch == 1, eng.index_epoch
+    out4 = eng.rank(Q, record=False)
+    np.testing.assert_array_equal(np.asarray(out4.ids), ref["e_ids"])
+    e2 = eng.swap_index(idx2)           # now commit for real
+    assert eng.index_epoch == e2 == 2, (eng.index_epoch, e2)
+    out5 = eng.rank(Q, record=False)
+    np.testing.assert_array_equal(np.asarray(out5.ids), ref["s_ids"])
+    np.testing.assert_array_equal(np.asarray(out5.logits),
+                                  ref["s_logits"])
+    print("MH-SWAP-OK", flush=True)
+else:
+    # ops: aborted swap, rank, committed swap, rank
+    n_ops = follower_loop(eng, ctx, max_ops=4)
+    assert n_ops == 4, n_ops
+    assert eng.index_epoch == 2, eng.index_epoch
+
 # ---- 3. mirrored decode: leader_generate == single-process generate ---
 dec = make_decoder(spmd=ctx)
 if ctx.is_leader:
@@ -218,4 +258,5 @@ def test_multihost_fleet_matches_single_process(tmp_path):
         assert "MH-ALL-OK" in outs[i], outs[i][-3000:]
     assert "MH-ENGINE-OK" in outs[0] and "MH-DECODE-OK" in outs[0]
     assert "MH-CONCURRENT-OK" in outs[0]
+    assert "MH-SWAP-OK" in outs[0]
     assert "MH-FOLLOWER-OK" in outs[1]

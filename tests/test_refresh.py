@@ -1,0 +1,453 @@
+"""Zero-downtime online index refresh: the IndexRefresher's
+refit -> guarded swap -> probation cycle through the fault-injection
+harness (fail / slow / corrupt-recall), automatic rollback asserted on
+the ``lss_refresh_rollback_total`` counter and ``lss_audit_recall_at_k``
+gauge, bit-identical serving vs cold-built engines across a swap,
+index-epoch pinning for in-flight decode sessions (directed AND a
+hypothesis property over interleaved swap/join/leave/rank sequences),
+the refit-off-the-lock regression (satellite: a concurrent ``rank`` is
+never blocked by a slow refit), bounded AsyncRuntime close on a wedged
+dispatcher, and /metrics port release."""
+
+import socket
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import obs
+from repro.core.lss import LSSConfig
+from repro.data.synthetic import lm_dataset
+from repro.models import transformer as T
+from repro.obs.export import MetricsServer, prometheus_text
+from repro.serve import AsyncRuntime, Engine, LMDecoder
+from repro.serve.refresh import IndexRefresher, RefreshConfig
+from repro.testing import faults
+from tools.check_metrics import parse_exposition
+
+M, D = 512, 32
+LSS = LSSConfig(k_bits=4, n_tables=2)
+
+
+@pytest.fixture(autouse=True)
+def _fault_hygiene():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def _engine(audit_rate=None, key=0):
+    w = jax.random.normal(jax.random.PRNGKey(key), (M, D))
+    return Engine(None, w, None, LSS, top_k=5, head="lss", buckets=(8,),
+                  audit_rate=audit_rate)
+
+
+def _fitted(audit_rate=None):
+    eng = _engine(audit_rate=audit_rate)
+    q = jax.random.normal(jax.random.PRNGKey(2), (256, D))
+    labels = jnp.asarray(np.asarray(
+        jax.random.randint(jax.random.PRNGKey(3), (256, 3), 0, M),
+        np.int32))
+    eng.fit_from_queries(jax.random.PRNGKey(1), q, labels)
+    return eng, np.asarray(q, np.float32)
+
+
+def _sample(family, families):
+    fam = families.get(family)
+    assert fam is not None, f"{family} missing from exposition"
+    return fam["samples"][0][2]
+
+
+# ------------------------------------------------------------- lifecycle --
+
+def test_refresh_swaps_and_matches_cold_built_engine():
+    """A refresh cycle must swap in a genuinely retrained index, and
+    serving through the swapped engine must be bit-identical to a COLD
+    engine built directly on that index (acceptance criterion)."""
+    eng, q = _fitted()
+    idx_before = eng.index
+    r = IndexRefresher(eng, auditor=None, cfg=RefreshConfig())
+    assert r.refresh_once() == "swapped"
+    assert eng.index_epoch == 2
+    assert eng.index is not idx_before
+    cold = _engine()
+    cold._set_index(eng.index)
+    hot_out, cold_out = eng.rank(q[:8], record=False), cold.rank(q[:8])
+    np.testing.assert_array_equal(np.asarray(hot_out.logits),
+                                  np.asarray(cold_out.logits))
+    np.testing.assert_array_equal(np.asarray(hot_out.ids),
+                                  np.asarray(cold_out.ids))
+    # a second cycle continues the same training stream
+    assert r.refresh_once() == "swapped"
+    assert eng.index_epoch == 3 and r.n_refreshes == 2
+
+
+def test_swap_drops_unpinned_and_keeps_pinned_epochs():
+    eng, q = _fitted()
+    e1 = eng.pin_epoch()
+    idx1 = eng.index
+    eng.swap_index(eng.index_for(e1))       # new epoch from same index
+    assert eng.index_epoch == 2 and e1 in eng._epochs
+    assert eng.index_for(e1) is idx1        # pinned epoch still readable
+    eng.unpin_epoch(e1)
+    assert e1 not in eng._epochs            # dropped once released
+    with pytest.raises(KeyError):
+        eng.index_for(e1)
+
+
+def test_refit_failure_degrades_and_backs_off():
+    """Injected refit failures must leave the serving index untouched,
+    count consecutively, back off exponentially, and park the loop at
+    max_failures — never crash the serving path."""
+    eng, q = _fitted()
+    cfg = RefreshConfig(interval_s=0.01, max_failures=3,
+                        backoff_base_s=0.01, backoff_max_s=0.05)
+    r = IndexRefresher(eng, auditor=None, cfg=cfg)
+    before = eng.index
+    with faults.injected(faults.REFRESH_REFIT, RuntimeError("refit boom")):
+        assert r.refresh_once() == "failed"
+        assert r.n_failures == 1 and r._backoff() == 0.01
+        assert r.refresh_once() == "failed"
+        assert r.n_failures == 2 and r._backoff() == 0.02
+    assert eng.index is before and eng.index_epoch == 1
+    assert eng.rank(q[:8], record=False).ids.shape == (8, 5)
+    # recovery resets the consecutive counter
+    assert r.refresh_once() == "swapped" and r.n_failures == 0
+    # the background loop parks after max_failures consecutive failures
+    faults.arm(faults.REFRESH_REFIT, RuntimeError("still broken"))
+    r.start()
+    deadline = time.monotonic() + 30.0
+    while not r.parked and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert r.parked and r.n_failures == cfg.max_failures
+    r.close()
+    assert eng.rank(q[:8], record=False).ids.shape == (8, 5)
+
+
+def test_nan_theta_guard_keeps_serving_index():
+    eng, q = _fitted()
+    r = IndexRefresher(eng, auditor=None, cfg=RefreshConfig())
+    assert r.refresh_once() == "swapped"          # seeds the IUL state
+    epoch = eng.index_epoch
+
+    def poison(ctx):
+        r._state = r._state._replace(
+            theta=jnp.full_like(r._state.theta, jnp.nan))
+
+    with faults.injected(faults.REFRESH_REFIT, poison):
+        assert r.refresh_once() == "failed"
+    assert eng.index_epoch == epoch
+    assert np.isfinite(np.asarray(eng.rank(q[:8], record=False)
+                                  .logits)).all()
+
+
+# ------------------------------------- satellite: refit off the lock --
+
+def test_slow_refit_never_blocks_concurrent_rank():
+    """The regression the satellite demands: only the O(1) flip is under
+    the engine lock, so a rank racing a (slow) refit must complete in
+    per-chunk time, never wait out the refit."""
+    eng, q = _fitted()
+    eng.rank(q[:8], record=False)                   # warm the (lss, 8) step
+    r = IndexRefresher(eng, auditor=None, cfg=RefreshConfig(warm=True))
+    faults.arm(faults.REFRESH_REFIT, 1.5)           # refit sleeps 1.5 s
+    out = {}
+    th = threading.Thread(target=lambda: out.update(res=r.refresh_once()))
+    th.start()
+    worst, n = 0.0, 0
+    while th.is_alive():
+        t0 = time.perf_counter()
+        eng.rank(q[:8], record=False)
+        worst = max(worst, time.perf_counter() - t0)
+        n += 1
+    th.join()
+    assert out["res"] == "swapped"
+    assert n >= 3, f"only {n} ranks ran during a 1.5 s refit"
+    assert worst < 0.75, \
+        f"rank blocked {worst:.3f}s behind the refit — the refit is " \
+        f"holding Engine.lock"
+
+
+# --------------------------------------------------- guarded rollback --
+
+def test_corrupt_recall_triggers_rollback_within_probation():
+    """An injected recall regression during probation must roll the
+    engine back to the previous index (bit-identical serving restored)
+    and raise ``lss_refresh_rollback_total``, with the auditor's
+    ``lss_audit_recall_at_k`` gauge live — the acceptance criterion."""
+    eng, q = _fitted(audit_rate=1.0)
+    for i in range(12):                             # pre-swap baseline
+        eng.rank(q[8 * i:8 * i + 8])
+    eng.auditor.drain()
+    _, total0 = eng.auditor.snapshot()
+    assert total0 > 0
+    r = IndexRefresher(eng, cfg=RefreshConfig(
+        probation_s=30.0, min_audit_rows=40, probation_poll_s=0.02))
+    idx_before = eng.index
+    ref_out = eng.rank(q[:8], record=False)
+
+    stop = threading.Event()
+
+    def traffic():                                  # feeds the auditor
+        i = 0
+        while not stop.is_set():
+            eng.rank(q[8 * (i % 30):8 * (i % 30) + 8])
+            i += 1
+            time.sleep(0.005)
+
+    th = threading.Thread(target=traffic, daemon=True)
+    th.start()
+    try:
+        t0 = time.monotonic()
+        with faults.injected(faults.REFRESH_PROBATION,
+                             lambda ctx: ctx.__setitem__("recall", 0.0)):
+            outcome = r.refresh_once()
+        elapsed = time.monotonic() - t0
+    finally:
+        stop.set()
+        th.join()
+    assert outcome == "rolled_back" and r.n_rollbacks == 1
+    assert elapsed < 30.0, "rollback decided by probation, not timeout"
+    assert eng.index is idx_before                  # restored, new epoch
+    assert eng.index_epoch == 3
+    post = eng.rank(q[:8], record=False)
+    np.testing.assert_array_equal(np.asarray(post.logits),
+                                  np.asarray(ref_out.logits))
+    fams, errors = parse_exposition(prometheus_text())
+    assert not errors, errors
+    assert _sample("lss_refresh_rollback_total", fams) >= 1
+    assert np.isfinite(_sample("lss_audit_recall_at_k", fams))
+    eng.auditor.close()
+
+
+def test_probation_passes_without_evidence():
+    """No auditor rows inside the window is NOT evidence of regression:
+    the swap must stand (and a disabled auditor must behave the same)."""
+    eng, _ = _fitted(audit_rate=1.0)
+    r = IndexRefresher(eng, cfg=RefreshConfig(probation_s=0.05,
+                                              probation_poll_s=0.01,
+                                              min_audit_rows=10 ** 6))
+    assert r.refresh_once() == "swapped"
+    assert eng.index_epoch == 2
+    eng.auditor.close()
+
+
+# ----------------------------------------------------- decode pinning --
+
+VOCAB, PLEN = 256, 6
+_LM_CACHE = []
+
+
+def _lm_data():
+    """Small LM shared by the decode tests.  A plain cached helper (not
+    a fixture) because the hypothesis STUB's ``@given`` erases the test
+    signature, so fixtures cannot reach property tests."""
+    if not _LM_CACHE:
+        cfg = T.TransformerConfig(name="t", n_layers=1, d_model=32,
+                                  n_heads=2, n_kv_heads=2, head_dim=16,
+                                  d_ff=64, vocab=VOCAB, dtype=jnp.float32,
+                                  kv_chunk=32)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        toks = np.asarray(lm_dataset(0, 64 * 33, VOCAB, 33))
+        _LM_CACHE.append((params, cfg, toks))
+    return _LM_CACHE[0]
+
+
+@pytest.fixture(scope="module")
+def lm():
+    return _lm_data()
+
+
+def _decoder(lm, fit_key=1):
+    params, cfg, _ = lm
+    dec = LMDecoder(params, cfg, LSS, max_streams=2, max_len=16)
+    dec.engine.fit_random(jax.random.PRNGKey(fit_key))
+    return dec
+
+
+def _alt_index(lm):
+    """A second, different LSS index over the same decoder weights."""
+    dec = _decoder(lm, fit_key=9)
+    return dec.engine.index
+
+
+def test_swap_mid_decode_is_invisible_to_pinned_sessions(lm):
+    """Sessions decode through the epoch their generation pinned: a swap
+    mid-flight must not change a single token vs a no-swap run, and the
+    NEXT generation must serve the new index — bit-identical to a cold
+    engine fitted on it (acceptance criterion)."""
+    _, _, toks = lm
+    budgets = [4, 7, 3, 6]
+    idx2 = _alt_index(lm)
+
+    ref = _decoder(lm)                              # never swapped
+    sref = ref.scheduler(head="lss")
+    ref_streams = [sref.submit(toks[i, :PLEN], max_new_tokens=budgets[i])
+                   for i in range(4)]
+    sref.run(timeout=300.0)
+
+    dec = _decoder(lm)                              # swapped mid-decode
+    sched = dec.scheduler(head="lss")
+    streams = [sched.submit(toks[i, :PLEN], max_new_tokens=budgets[i])
+               for i in range(4)]
+    for _ in range(3):                              # sessions in flight
+        sched.tick()
+    assert sched.pool.n_active > 0
+    e_new = dec.engine.swap_index(idx2)             # mid-decode swap
+    assert dec.engine.index_epoch == e_new
+    sched.run(timeout=300.0)
+    for i, (st_new, st_ref) in enumerate(zip(streams, ref_streams)):
+        np.testing.assert_array_equal(
+            st_new.result(), st_ref.result(),
+            err_msg=f"session {i} perturbed by the swap")
+    # the drained generation released its pin: old epoch is gone
+    assert list(dec.engine._epochs) == [e_new]
+
+    cold = _decoder(lm)                             # cold on the new index
+    cold.engine._set_index(idx2)
+    scold = cold.scheduler(head="lss")
+    post = [sched.submit(toks[i, :PLEN], max_new_tokens=5)
+            for i in range(3)]
+    want = [scold.submit(toks[i, :PLEN], max_new_tokens=5)
+            for i in range(3)]
+    sched.run(timeout=300.0), scold.run(timeout=300.0)
+    for i, (a, b) in enumerate(zip(post, want)):
+        np.testing.assert_array_equal(a.result(), b.result(),
+                                      err_msg=f"post-swap session {i}")
+
+
+_PROP_ENV: dict = {}
+
+
+def _prop_env():
+    """One decoder + scheduler + two reference decoders shared by every
+    property example — fresh decoders per example would pay a fused-step
+    trace each, and the op sweep needs none of that isolation (each
+    example drains the pool before the next starts)."""
+    if not _PROP_ENV:
+        lm = _lm_data()
+        dec = _decoder(lm)
+        idx1, idx2 = dec.engine.index, _alt_index(lm)
+        ref1, ref2 = _decoder(lm), _decoder(lm)
+        ref1.engine._set_index(idx1)
+        ref2.engine._set_index(idx2)
+        _PROP_ENV.update(lm=lm, dec=dec, sched=dec.scheduler(head="lss"),
+                         idx1=idx1, idx2=idx2,
+                         refs={id(idx1): ref1, id(idx2): ref2})
+    return _PROP_ENV
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1))
+def test_epoch_pinning_property_interleaved_ops(seed):
+    """Seeded sweep over interleaved swap / join / leave / rank / tick
+    sequences (leaves happen inside ticks as budgets run out): every
+    decode session's tokens must be bit-identical to a no-swap run of
+    the same epoch (sequential blocking generate on a same-shaped
+    decoder serving that session's pinned index)."""
+    env = _prop_env()
+    _, cfg, toks = env["lm"]
+    dec, sched = env["dec"], env["sched"]
+    idx1, idx2 = env["idx1"], env["idx2"]
+    rng = np.random.default_rng(seed)
+    sessions = []                   # [stream, prompt_row, budget, index]
+
+    def record_pins():
+        # a session's generation pinned its epoch by the time its first
+        # token exists (tok0 is emitted at admit, under the pin)
+        if sched._epoch is not None:
+            pinned = dec.engine.index_for(sched._epoch)
+            for s in sessions:
+                if s[3] is None and s[0].ttft_s() is not None:
+                    s[3] = pinned
+
+    for _ in range(14):
+        op = rng.choice(["join", "tick", "swap", "rank"],
+                        p=[0.35, 0.4, 0.15, 0.1])
+        if op == "join" and len(sessions) < 6:
+            row = int(rng.integers(0, 32))
+            budget = int(rng.integers(2, 5))
+            stv = sched.submit(toks[row, :PLEN], max_new_tokens=budget)
+            sessions.append([stv, row, budget, None])
+        elif op == "swap":
+            dec.engine.swap_index(
+                idx2 if dec.engine.index is idx1 else idx1)
+        elif op == "rank":
+            x = rng.standard_normal((8, cfg.d_model)).astype(np.float32)
+            dec.engine.rank(x, record=False)
+        else:
+            sched.tick()
+        record_pins()
+    while not sched.idle:                            # drain, still recording
+        sched.tick()
+        record_pins()
+    sched.tick()                                     # collect the last step
+    for stv, row, budget, pinned in sessions:
+        assert stv.finish_reason == "max_tokens"
+        assert pinned is not None
+        ref = env["refs"][id(pinned)]
+        want = np.asarray(ref.generate(
+            jnp.asarray(toks[row:row + 1, :PLEN]), steps=budget,
+            head="lss"))[0]
+        np.testing.assert_array_equal(stv.result(), want)
+
+
+# ----------------------------------- satellite: bounded runtime close --
+
+def test_metrics_port_released_after_close():
+    """The /metrics listener must actually release its port on close():
+    a rebind on the SAME fixed port succeeds (a leaked HTTP thread would
+    still hold the listener and EADDRINUSE here)."""
+    srv = MetricsServer(port=0)
+    port = srv.port
+    import urllib.request
+    with urllib.request.urlopen(srv.url, timeout=5) as resp:
+        assert resp.status == 200
+    srv.close()
+    assert not srv._thread.is_alive()
+    srv2 = MetricsServer(port=port)                 # rebind proves release
+    try:
+        assert srv2.port == port
+    finally:
+        srv2.close()
+    with socket.socket() as s:                      # and truly free now
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        s.bind(("127.0.0.1", port))
+
+
+def test_runtime_exit_bounded_on_wedged_dispatcher():
+    """A wedged dispatcher must not hang ``with AsyncRuntime(...)`` exit
+    forever: ``close_timeout_s`` bounds the drain, the TimeoutError
+    escapes (so the launcher's nested ``finally`` still shuts the
+    exporter down), and the exporter can in fact be shut down after."""
+    eng, q = _fitted()
+    eng.rank(q[:8], record=False)                   # compile outside timing
+    real_step = eng._step
+
+    def wedged_step(kind, bucket, epoch=None):
+        inner = real_step(kind, bucket, epoch)
+
+        def slow(padded):
+            time.sleep(3.0)
+            return inner(padded)
+        return slow
+
+    eng._step = wedged_step
+    srv = MetricsServer(port=0)
+    t0 = time.monotonic()
+    try:
+        with pytest.raises(TimeoutError):
+            with AsyncRuntime(eng, head="lss", policy="shed",
+                              close_timeout_s=0.5) as rt:
+                rt.submit(q[0])
+                time.sleep(0.2)                     # let dispatch wedge
+        assert time.monotonic() - t0 < 20.0
+    finally:
+        eng._step = real_step
+        srv.close()
+    assert not srv._thread.is_alive()

@@ -19,7 +19,13 @@ rows, a capacity row, and a summary row recording the equal-total-m
 1->2 aggregate-QPS ratio — which must reach ``MULTIHOST_MIN_RATIO``
 whenever the machine had >= 2 CPUs (on one core two processes
 timeshare and the ratio is physically meaningless, so it is recorded
-but not gated).
+but not gated).  The refresh artifact (``BENCH_refresh.json``) must
+keep all three of its ``swap_latency`` / ``recall_staleness`` /
+``rollback`` rows; the swap row is gated on zero failed requests,
+bit-exactness vs a cold-built engine, and (with >= 2 CPUs and enough
+in-window samples) a during-swap p99 no worse than
+``REFRESH_MAX_P99_RATIO`` x steady; the rollback row must actually
+have rolled back, at least once, inside its probation window.
 
 Usage: ``python tools/check_bench_schema.py [path]`` (default
 ``BENCH_kernels.json``; the artifact's own ``bench`` field selects the
@@ -184,6 +190,95 @@ def check_multihost(rec: dict) -> list[str]:
     return errors
 
 
+# ----------------------------------------------------- refresh schema --
+REFRESH_SWAP_FIELDS = (
+    "head", "m", "qps", "n_requests", "n_swaps", "p99_steady_ms",
+    "p99_swap_ms", "p99_swap_ratio", "swap_window_n", "n_failed",
+    "n_shed", "exact_after_swaps", "n_cpus")
+REFRESH_STALENESS_FIELDS = (
+    "n_cycles", "n_calib", "recall_stale", "recall_refreshed",
+    "recall_offline_refit", "gap_to_offline")
+REFRESH_ROLLBACK_FIELDS = (
+    "outcome", "rollback_total", "time_to_rollback_s", "probation_s",
+    "min_audit_rows", "rollback_delta")
+# during-swap p99 may not exceed steady p99 by more than this factor
+# (gated only with >= 2 CPUs and a meaningful in-window sample — on one
+# core the warming trace timeshares with serving and the ratio measures
+# the box, not the swap)
+REFRESH_MAX_P99_RATIO = 3.0
+REFRESH_MIN_WINDOW_N = 20
+
+
+def check_refresh(rec: dict) -> list[str]:
+    errors = []
+    rows = rec.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return ["artifact has no rows"]
+    seen_kinds: set[str] = set()
+    for i, r in enumerate(rows):
+        kind = r.get("kind")
+        seen_kinds.add(kind)
+        if kind == "swap_latency":
+            required = REFRESH_SWAP_FIELDS
+        elif kind == "recall_staleness":
+            required = REFRESH_STALENESS_FIELDS
+        elif kind == "rollback":
+            required = REFRESH_ROLLBACK_FIELDS
+        else:
+            errors.append(f"row {i}: unknown refresh row kind {kind!r}")
+            continue
+        missing = [f for f in required if f not in r]
+        if missing:
+            errors.append(f"row {i} (kind={kind}): missing required "
+                          f"fields {missing}")
+    for kind in ("swap_latency", "recall_staleness", "rollback"):
+        if kind not in seen_kinds:
+            errors.append(f"refresh artifact has no {kind!r} row (the "
+                          f"{kind} story was silently dropped)")
+    for r in rows:
+        kind = r.get("kind")
+        if kind == "swap_latency":
+            if r.get("n_failed", 1) != 0:
+                errors.append(
+                    f"swap_latency row: {r.get('n_failed')} requests "
+                    f"failed under swap load — a swap may never fail a "
+                    f"request")
+            if r.get("exact_after_swaps") is not True:
+                errors.append(
+                    "swap_latency row: post-swap results diverged from a "
+                    "cold-built engine on the same index")
+            ratio = r.get("p99_swap_ratio")
+            if not isinstance(ratio, (int, float)):
+                errors.append("swap_latency row: p99_swap_ratio is not "
+                              "recorded as a number")
+            elif (r.get("n_cpus", 0) >= 2
+                  and r.get("swap_window_n", 0) >= REFRESH_MIN_WINDOW_N
+                  and ratio > REFRESH_MAX_P99_RATIO):
+                errors.append(
+                    f"swap_latency row: p99 during swap is {ratio:.2f}x "
+                    f"steady (> {REFRESH_MAX_P99_RATIO}) on "
+                    f"{r.get('n_cpus')} cpus — the swap is not "
+                    f"zero-downtime")
+        elif kind == "rollback":
+            if r.get("outcome") != "rolled_back":
+                errors.append(
+                    f"rollback row: outcome is {r.get('outcome')!r}, not "
+                    f"'rolled_back' — the injected recall regression "
+                    f"survived probation")
+            if r.get("rollback_total", 0) < 1:
+                errors.append("rollback row: rollback_total < 1 (the "
+                              "rollback drill silently stopped rolling "
+                              "back)")
+            ttr = r.get("time_to_rollback_s")
+            prob = r.get("probation_s")
+            if (isinstance(ttr, (int, float))
+                    and isinstance(prob, (int, float)) and ttr > prob):
+                errors.append(
+                    f"rollback row: rollback took {ttr:.2f}s, past the "
+                    f"{prob}s probation window")
+    return errors
+
+
 # --------------------------------------------------------- obs schema --
 OBS_OVERHEAD_FIELDS = (
     "rps_on", "rps_off", "overhead_pct", "p99_on_ms", "p99_off_ms",
@@ -239,6 +334,8 @@ def check(rec: dict) -> list[str]:
         return check_obs(rec)
     if rec.get("bench") == "multihost":
         return check_multihost(rec)
+    if rec.get("bench") == "refresh":
+        return check_refresh(rec)
     return check_kernels(rec)
 
 
@@ -264,6 +361,14 @@ def main() -> int:
             print(f"schema ok: {len(rec['rows'])} multihost rows "
                   f"(1->2 qps ratio {s['qps_ratio_1_to_2']:.2f} on "
                   f"{s['n_cpus']} cpus)")
+        elif rec.get("bench") == "refresh":
+            sw = next(r for r in rec["rows"]
+                      if r["kind"] == "swap_latency")
+            rb = next(r for r in rec["rows"] if r["kind"] == "rollback")
+            print(f"schema ok: {len(rec['rows'])} refresh rows (p99 "
+                  f"swap ratio {sw['p99_swap_ratio']:.2f} over "
+                  f"{sw['n_swaps']} swaps, 0 failed, rollback in "
+                  f"{rb['time_to_rollback_s']:.2f}s)")
         elif rec.get("bench") == "decode":
             kinds = [r.get("kind", "sweep") for r in rec["rows"]]
             print(f"schema ok: {len(rec['rows'])} decode rows "
